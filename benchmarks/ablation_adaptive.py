@@ -1,0 +1,116 @@
+"""Beyond-paper ablation: dynamic (adaptive) mu vs fixed mu under a
+time-varying CSR schedule — the paper's stated future work
+(core/orchestrator.py).
+
+Scenario: the network degrades mid-training (CSR 0.9 -> 0.1 -> 0.5).
+A fixed mu2 must be chosen for the worst phase (slowing the good phases)
+or for the good phase (unstable in the bad one).  The adaptive controller
+observes per-round connectivity and interpolates.
+
+Run: PYTHONPATH=src python -m benchmarks.ablation_adaptive
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import metrics
+from benchmarks.common import (N_AGENTS, N_RSUS, RESULTS_DIR, build_pipeline,
+                               csv_row, federated_partition)
+from repro.core.h2fed import H2FedParams
+from repro.core.heterogeneity import HeterogeneityModel
+from repro.core import orchestrator as orch
+from repro.fedsim.simulator import SimConfig, init_state, make_global_round
+from repro.models import mlp
+
+# (rounds, csr) phases: good -> collapse -> partial recovery
+SCHEDULE: Tuple[Tuple[int, float], ...] = ((8, 0.9), (12, 0.2), (8, 0.5))
+# drift regime (cf. fig2): local training drifts enough per round that the
+# proximal terms matter; stable regimes make every policy equivalent
+LAR, E, LR = 5, 3, 0.15
+
+# quantized mu levels so each (mu1, mu2, csr) compiles once and is cached
+MU1_LEVELS = (0.0, 0.001, 0.002, 0.004)
+MU2_LEVELS = (0.0, 0.005, 0.01, 0.02)
+
+
+def _quantize(x: float, levels) -> float:
+    return min(levels, key=lambda l: abs(l - x))
+
+
+def _run(policy: str, seed: int = 0) -> Dict:
+    """policy: 'fixed0' | 'fixed_paper' | 'fixed_worstcase' | 'adaptive'."""
+    pipe = build_pipeline(seed)
+    fed = federated_partition(2, seed)
+    cfg = SimConfig(n_agents=N_AGENTS, n_rsus=N_RSUS, batch=32, seed=seed)
+    x_test, y_test = jnp.asarray(pipe.test.x), jnp.asarray(pipe.test.y)
+    eval_fn = jax.jit(lambda p: mlp.accuracy(p, x_test, y_test))
+
+    round_cache: Dict[Tuple[float, float, float], object] = {}
+
+    def round_fn(mu1, mu2, csr):
+        key = (mu1, mu2, csr)
+        if key not in round_cache:
+            hp = H2FedParams(mu1=mu1, mu2=mu2, lar=LAR, local_epochs=E,
+                             lr=LR)
+            het = HeterogeneityModel(csr=csr, scd=1, lar=LAR)
+            round_cache[key] = make_global_round(cfg, hp, het, fed)
+        return round_cache[key]
+
+    actrl = orch.AdaptiveMuConfig()
+    astate = orch.init_state()
+    base = H2FedParams(mu1=0.001, mu2=0.005, lar=LAR, local_epochs=E, lr=LR)
+
+    state = init_state(cfg, pipe.pre_params, jax.random.key(cfg.seed))
+    accs, mus = [], []
+    for phase_rounds, csr in SCHEDULE:
+        for _ in range(phase_rounds):
+            if policy == "fixed0":
+                mu1, mu2 = 0.0, 0.0
+            elif policy == "fixed_paper":
+                mu1, mu2 = 0.001, 0.005
+            elif policy == "fixed_worstcase":
+                mu1, mu2 = 0.004, 0.02
+            else:  # adaptive
+                hp, _ = orch.schedule(astate, actrl, base)
+                mu1 = _quantize(hp.mu1, MU1_LEVELS)
+                mu2 = _quantize(hp.mu2, MU2_LEVELS)
+            state = round_fn(mu1, mu2, csr)(state)
+            # observe realized connectivity (what the cloud actually saw)
+            connected = float(jnp.mean((state.conn.remaining > 0)
+                                       .astype(jnp.float32)))
+            astate = orch.observe_csr(astate, actrl, connected, 1.0)
+            accs.append(float(eval_fn(state.cloud_params)))
+            mus.append((mu1, mu2))
+    return {"acc": accs, "mus": mus}
+
+
+def run(seed: int = 0) -> List[str]:
+    rows = []
+    out = {}
+    for policy in ("fixed0", "fixed_paper", "fixed_worstcase", "adaptive"):
+        r = _run(policy, seed)
+        acc = np.asarray(r["acc"])
+        # phase-2 (collapse) window
+        lo, hi = SCHEDULE[0][0], SCHEDULE[0][0] + SCHEDULE[1][0]
+        bad_phase = acc[lo:hi]
+        out[policy] = r
+        rows.append(csv_row(
+            f"adaptive_mu/{policy}", 0.0,
+            f"final={np.mean(acc[-4:]):.4f} "
+            f"bad_phase_min={bad_phase.min():.4f} "
+            f"bad_phase_jitter={metrics.jitter(bad_phase):.4f}"))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "ablation_adaptive.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

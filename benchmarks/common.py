@@ -1,0 +1,127 @@
+"""Shared experiment pipeline for the paper-figure benchmarks.
+
+Builds (once, cached on disk) the paper's Sec.-VI setup:
+  dataset -> OEM pretrain pool (labels 6-9 excluded) -> pre-trained model
+  at ~68% test accuracy -> federated fleet partitions (Scenario I / II).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs.mnist_mlp import CONFIG as MLP_CFG
+from repro.core.h2fed import H2FedParams
+from repro.core.heterogeneity import HeterogeneityModel
+from repro.data.partition import (FederatedData, pretrain_split, scenario_one,
+                                  scenario_two)
+from repro.data.synthetic import Dataset, mnist_class_task
+from repro.fedsim.pretrain import pretrain_to_target
+from repro.fedsim.simulator import SimConfig, run_simulation
+from repro.models import mlp
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+# "the first 10 agents exclude a few labels" (Sec. VI).  Excluding 3 of 10
+# classes ceilings the biased model at ~70%, making the paper's 68%
+# pre-trained accuracy reachable; 4 exclusions would cap it at 60%.
+EXCLUDED_LABELS = (7, 8, 9)
+
+# Fast mode (CI-scale) vs full mode (paper-scale).  REPRO_BENCH_FULL=1
+# switches to the paper's 100 agents x 10 RSUs.
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+N_AGENTS = 100 if FULL else 40
+N_RSUS = 10 if FULL else 8
+N_TRAIN = 22_000 if FULL else 9_000
+N_TEST = 4_000 if FULL else 1_500
+N_ROUNDS = 60 if FULL else 24
+
+
+@dataclasses.dataclass(frozen=True)
+class Pipeline:
+    train: Dataset
+    test: Dataset
+    fed_pool: Dataset           # public-fleet pool (pre-partition)
+    pre_params: dict            # the biased pre-trained model (the "68%")
+    pre_acc: float
+
+
+_CACHE: Dict[str, object] = {}
+
+
+def build_pipeline(seed: int = 0) -> Pipeline:
+    if "pipe" in _CACHE:
+        return _CACHE["pipe"]  # type: ignore[return-value]
+    ck_dir = os.path.join(RESULTS_DIR, "bench_cache",
+                          f"pretrain_{N_TRAIN}_{seed}")
+    # noise=0.8 puts the task in the paper's regime: the biased pre-trained
+    # model sits at ~0.67, heterogeneous federated training is unstable
+    # enough that the proximal terms visibly matter, ceiling ~0.95.
+    train, test = mnist_class_task(n_train=N_TRAIN, n_test=N_TEST,
+                                   noise=0.8, seed=seed)
+    pre_ds, fed_pool = pretrain_split(train, EXCLUDED_LABELS, frac=0.12,
+                                      seed=seed)
+    if ckpt.latest_step(ck_dir) is not None:
+        blob = ckpt.restore(ck_dir)
+        pre_params, pre_acc = blob["params"], float(blob["acc"])
+    else:
+        params = mlp.init_params(MLP_CFG, jax.random.key(seed))
+        pre_params, pre_acc = pretrain_to_target(
+            params, pre_ds, test.x, test.y, target_acc=0.68, max_epochs=40,
+            seed=seed)
+        ckpt.save(ck_dir, 0, {"params": pre_params, "acc": np.float32(pre_acc)})
+    pipe = Pipeline(train=train, test=test, fed_pool=fed_pool,
+                    pre_params=pre_params, pre_acc=pre_acc)
+    _CACHE["pipe"] = pipe
+    return pipe
+
+
+def federated_partition(scenario: int, seed: int = 0) -> FederatedData:
+    key = f"fed_{scenario}_{seed}"
+    if key not in _CACHE:
+        pipe = build_pipeline(seed)
+        fn = scenario_one if scenario == 1 else scenario_two
+        _CACHE[key] = fn(pipe.fed_pool, n_agents=N_AGENTS, n_rsus=N_RSUS,
+                         seed=seed)
+    return _CACHE[key]  # type: ignore[return-value]
+
+
+def run_fed(hp: H2FedParams, het: HeterogeneityModel, *, scenario: int = 2,
+            n_rounds: int = None, seed: int = 0, sim_seed: int = 0
+            ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Run one federated experiment; returns (rounds, accs, wall_s).
+
+    ``seed`` fixes the data/partition/pretrain; ``sim_seed`` varies only the
+    connectivity/FSR draws so seed-averaged comparisons share the dataset.
+    """
+    pipe = build_pipeline(seed)
+    fed = federated_partition(scenario, seed)
+    cfg = SimConfig(n_agents=N_AGENTS, n_rsus=N_RSUS, batch=32,
+                    seed=seed * 1000 + sim_seed)
+    t0 = time.perf_counter()
+    _, hist = run_simulation(cfg, hp, het, fed, pipe.pre_params,
+                             n_rounds or N_ROUNDS,
+                             x_test=pipe.test.x, y_test=pipe.test.y)
+    wall = time.perf_counter() - t0
+    return hist["round"], hist["acc"], wall
+
+
+def run_fed_avg_seeds(hp: H2FedParams, het: HeterogeneityModel, *,
+                      scenario: int = 2, n_rounds: int = None, seed: int = 0,
+                      n_seeds: int = 2):
+    """Seed-averaged accuracy curve over connectivity realizations."""
+    curves, wall = [], 0.0
+    for s in range(n_seeds):
+        r, acc, w = run_fed(hp, het, scenario=scenario, n_rounds=n_rounds,
+                            seed=seed, sim_seed=s)
+        curves.append(acc)
+        wall += w
+    return r, np.mean(np.stack(curves), axis=0), wall
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,114 @@
+"""Fig. 3 — mu2 stabilizes federated learning under bad communication.
+
+Row 1: accuracy-curve jitter vs mu2 at low CSR (paper: mu2 = 0.005
+suppresses the concussion of the curve).
+Row 2: MSE of the testing-accuracy curve to the centralized-learning
+reference (paper: with mu2 = 0.005 at CSR = 10% the curve is almost the
+same as learning with CSR = 90%).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks import metrics
+from benchmarks.common import (RESULTS_DIR, build_pipeline, csv_row,
+                               federated_partition, run_fed_avg_seeds)
+from repro.core.h2fed import H2FedParams
+from repro.core.heterogeneity import HeterogeneityModel
+from repro.fedsim.pretrain import train_centralized
+
+MU2S = (0.0, 0.001, 0.005, 0.02)
+CSR_BAD = 0.2
+CSR_GOOD = 0.9
+MU1 = 0.001
+LAR = 5
+# same drift regime as fig2 — where low CSR makes the curve "concuss"
+E, LR = 3, 0.15
+N_SEEDS = 2
+
+
+def _centralized_reference(pipe, n_points: int):
+    """Centralized SGD on the pooled fleet data — Fig. 3's reference curve."""
+    _, hist = train_centralized(
+        pipe.pre_params, pipe.fed_pool, lr=0.1, epochs=2,
+        x_test=pipe.test.x, y_test=pipe.test.y, eval_every=25)
+    acc = hist["acc"]
+    # resample to n_points so curves are comparable round-for-round
+    idx = np.linspace(0, len(acc) - 1, n_points).round().astype(int)
+    return acc[idx]
+
+
+def run(n_rounds: int | None = None, seed: int = 0) -> List[str]:
+    pipe = build_pipeline(seed)
+    federated_partition(2, seed)
+    rows: List[str] = []
+    results = {}
+
+    curves = {}
+    for mu2 in MU2S:
+        hp = H2FedParams(mu1=MU1, mu2=mu2, lar=LAR, local_epochs=E, lr=LR)
+        het = HeterogeneityModel(csr=CSR_BAD, scd=1, lar=LAR)
+        t0 = time.perf_counter()
+        _, acc, wall = run_fed_avg_seeds(hp, het, scenario=2,
+                                         n_rounds=n_rounds, seed=seed,
+                                         n_seeds=N_SEEDS)
+        curves[f"mu2_{mu2}"] = acc
+        rows.append(csv_row(f"fig3/csr{CSR_BAD}/mu2_{mu2}",
+                            wall / len(acc) * 1e6,
+                            f"jitter={metrics.jitter(acc, tail=12):.4f}"))
+
+    # the good-communication reference the paper compares against
+    hp = H2FedParams(mu1=MU1, mu2=0.0, lar=LAR, local_epochs=E, lr=LR)
+    het = HeterogeneityModel(csr=CSR_GOOD, scd=1, lar=LAR)
+    _, acc_good, wall = run_fed_avg_seeds(hp, het, scenario=2,
+                                          n_rounds=n_rounds, seed=seed,
+                                          n_seeds=N_SEEDS)
+    rows.append(csv_row(f"fig3/csr{CSR_GOOD}/mu2_0.0",
+                        wall / len(acc_good) * 1e6,
+                        f"jitter={metrics.jitter(acc_good, tail=12):.4f}"))
+
+    for mu2 in MU2S:
+        acc = curves[f"mu2_{mu2}"]
+        results[f"mu2_{mu2}"] = {"acc": acc.tolist(),
+                                 "jitter": metrics.jitter(acc, tail=12)}
+
+    # --- Fig. 3 row 2: MSE to the centralized reference, in the paper's
+    # converging regime (CSR = 10%, long horizon): with mu2 = 0.005 the
+    # low-CSR curve should come close to the CSR = 90% one.
+    MSE_ROUNDS = 40
+    for tag, csr, mu2 in (("bad_mu2_0", 0.1, 0.0),
+                          ("bad_mu2_0.005", 0.1, 0.005),
+                          ("good", 0.9, 0.0)):
+        hp = H2FedParams(mu1=MU1, mu2=mu2, lar=LAR, local_epochs=2, lr=0.1)
+        het = HeterogeneityModel(csr=csr, scd=1, lar=LAR)
+        _, acc, _ = run_fed_avg_seeds(hp, het, scenario=2,
+                                      n_rounds=n_rounds or MSE_ROUNDS,
+                                      seed=seed, n_seeds=N_SEEDS)
+        curves[f"mse_{tag}"] = acc
+    ref = _centralized_reference(pipe, len(curves["mse_good"]))
+    mse_good = metrics.mse_to_reference(curves["mse_good"], ref)
+    results["csr_good"] = {"acc": curves["mse_good"].tolist(),
+                           "mse": mse_good}
+    for tag in ("bad_mu2_0", "bad_mu2_0.005"):
+        mse = metrics.mse_to_reference(curves[f"mse_{tag}"], ref)
+        results[f"mse_{tag}"] = {"acc": curves[f"mse_{tag}"].tolist(),
+                                 "mse": mse}
+        rows.append(csv_row(f"fig3/mse/{tag}", 0.0,
+                            f"mse={mse:.5f} (good-csr ref mse={mse_good:.5f})"))
+
+    out = os.path.join(RESULTS_DIR, "fig3_mu2_stability.json")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"pre_acc": pipe.pre_acc, "results": results,
+                   "centralized_ref": ref.tolist()}, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

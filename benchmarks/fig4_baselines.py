@@ -1,0 +1,70 @@
+"""Fig. 4 — H²-Fed vs FedProx vs HierFAVG (+ FedAvg) at CSR = 10%, SCD = 1.
+
+Scenario I:  Non-IID across RSUs (agents within an RSU share a distribution).
+Scenario II: Non-IID across agents (each RSU cohort covers all labels).
+
+Paper claims reproduced here:
+  * H²-Fed enhances the pre-trained model stably from start to convergence,
+    while HierFAVG's curve jitters visibly (Scenario I);
+  * H²-Fed outperforms FedProx remarkably in Scenario II (pre-aggregation
+    accelerates convergence).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+import numpy as np
+
+from benchmarks import metrics
+from benchmarks.common import (RESULTS_DIR, build_pipeline, csv_row,
+                               run_fed_avg_seeds)
+from repro.core.baselines import BASELINES
+from repro.core.heterogeneity import HeterogeneityModel
+
+CSR = 0.1
+SCD = 1
+LAR = 5
+TAIL = 8
+N_ROUNDS_FIG4 = 40   # the paper's CSR=10% runs need the longer horizon
+N_SEEDS = 2
+
+METHODS = {
+    "h2fed": dict(mu1=0.001, mu2=0.005, lar=LAR, lr=0.1, local_epochs=2),
+    "hierfavg": dict(lar=LAR, lr=0.1, local_epochs=2),
+    "fedprox": dict(mu=0.001, lr=0.1, local_epochs=2),
+    "fedavg": dict(lr=0.1, local_epochs=2),
+}
+
+
+def run(n_rounds: int | None = None, seed: int = 0) -> List[str]:
+    pipe = build_pipeline(seed)
+    rows: List[str] = []
+    results = {}
+    for scenario in (1, 2):
+        for name, kw in METHODS.items():
+            hp = BASELINES[name](**kw)
+            het = HeterogeneityModel(csr=CSR, scd=SCD, lar=hp.lar)
+            _, acc, wall = run_fed_avg_seeds(
+                hp, het, scenario=scenario,
+                n_rounds=n_rounds or N_ROUNDS_FIG4, seed=seed,
+                n_seeds=N_SEEDS)
+            tail_acc = float(np.mean(acc[-TAIL:]))
+            jit = metrics.jitter(acc, tail=len(acc) // 2)
+            results[f"s{scenario}/{name}"] = {
+                "acc": np.asarray(acc).tolist(), "final": tail_acc,
+                "jitter": jit}
+            rows.append(csv_row(
+                f"fig4/scenario{scenario}/{name}", wall / len(acc) * 1e6,
+                f"final={tail_acc:.4f} jitter={jit:.4f}"))
+    out = os.path.join(RESULTS_DIR, "fig4_baselines.json")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"pre_acc": pipe.pre_acc, "results": results}, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,46 @@
+"""Metrics used by the paper's figures.
+
+AED (Eq. 7): accuracy-enhancement degree of switching mu1 on,
+relative to the mu1=0 enhancement over the pre-trained model.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def aed(acc_mu1: float, acc_mu1_zero: float, *, acc_pre: float) -> float:
+    """AED = (dACC^{mu1>0} - dACC^{mu1=0}) / dACC^{mu1=0}  (paper Eq. 7)."""
+    d_on = acc_mu1 - acc_pre
+    d_off = acc_mu1_zero - acc_pre
+    if d_off == 0.0:
+        return 0.0 if d_on == d_off else float("inf") * np.sign(d_on - d_off)
+    return (d_on - d_off) / d_off
+
+
+def aed_curve(acc_on: np.ndarray, acc_off: np.ndarray,
+              acc_pre: float) -> np.ndarray:
+    """Vectorized AED over a per-round accuracy history."""
+    d_on = np.asarray(acc_on) - acc_pre
+    d_off = np.asarray(acc_off) - acc_pre
+    with np.errstate(divide="ignore", invalid="ignore"):
+        out = (d_on - d_off) / d_off
+    return np.where(d_off == 0.0, 0.0, out)
+
+
+def jitter(acc: np.ndarray, tail: int = 0) -> float:
+    """Stability metric (Fig. 3): std of the round-to-round accuracy
+    differences over the (optionally tail-windowed) history."""
+    a = np.asarray(acc, np.float64)
+    if tail:
+        a = a[-tail:]
+    if len(a) < 2:
+        return 0.0
+    return float(np.std(np.diff(a)))
+
+
+def mse_to_reference(acc: np.ndarray, ref: np.ndarray) -> float:
+    """MSE of the testing-accuracy curve to the centralized-learning
+    reference curve (Fig. 3, second row)."""
+    a, r = np.asarray(acc, np.float64), np.asarray(ref, np.float64)
+    n = min(len(a), len(r))
+    return float(np.mean((a[:n] - r[:n]) ** 2))

@@ -1,0 +1,115 @@
+"""Roofline report (deliverable g): per (arch × shape × mesh) the three
+roofline terms, the dominant bottleneck, MODEL_FLOPS = 6·N·D (6·N_active·D
+for MoE), and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+
+Reads the dry-run artifacts under results/dryrun/ (produced by
+``python -m repro.launch.dryrun --all``) — no device allocation here.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from benchmarks.common import RESULTS_DIR, csv_row
+from repro.configs.registry import ARCH_IDS, get_config
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def model_flops(arch: str, shape: str, n_chips: int) -> float:
+    """MODEL_FLOPS per device: 6·N·D train (fwd+bwd), 2·N·D inference,
+    with N = active params for MoE.  D = tokens processed by the step."""
+    cfg = get_config(arch)
+    n = cfg.n_active_params() if cfg.moe is not None else cfg.n_params()
+    info = SHAPES[shape]
+    if info["kind"] == "train":
+        toks, mult = info["batch"] * info["seq"], 6
+    elif info["kind"] == "prefill":
+        toks, mult = info["batch"] * info["seq"], 2
+    else:  # decode: one new token per sequence
+        toks, mult = info["batch"], 2
+    return mult * n * toks / n_chips
+
+
+def load_records(dryrun_dir: str = None) -> List[Dict]:
+    d = Path(dryrun_dir or os.path.join(RESULTS_DIR, "dryrun"))
+    recs = []
+    for p in sorted(d.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def summarize(recs: Optional[List[Dict]] = None) -> List[Dict]:
+    recs = recs if recs is not None else load_records()
+    out = []
+    for r in recs:
+        if r.get("skipped"):
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "mesh": r["mesh"], "skipped": r["skipped"]})
+            continue
+        mf = model_flops(r["arch"], r["shape"], r["n_chips"])
+        hlo_f = r["cost"]["flops_per_device"]
+        rl = r["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "step": r.get("step", "default"),
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "model_flops_per_dev": mf, "hlo_flops_per_dev": hlo_f,
+            "useful_ratio": (mf / hlo_f) if hlo_f else 0.0,
+            "peak_bytes": r["memory"]["peak_bytes"],
+        })
+    return out
+
+
+def markdown_table(rows: List[Dict], mesh: str = "16x16") -> str:
+    """EXPERIMENTS.md §Roofline table for one mesh (single-pod baseline)."""
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| useful FLOP ratio | peak GiB |\n"
+           "|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r.get("mesh") != mesh or r.get("step", "default") != "default":
+            continue
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} "
+            f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+            f"| {r['dominant'].replace('_s', '')} "
+            f"| {min(r['useful_ratio'], 9.99):.3f} "
+            f"| {(r['peak_bytes'] or 0) / 2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def run() -> List[str]:
+    rows = summarize()
+    csv = []
+    for r in rows:
+        if r.get("skipped"):
+            csv.append(csv_row(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                               0.0, "skipped"))
+            continue
+        dom_s = r[r["dominant"]]
+        csv.append(csv_row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", dom_s * 1e6,
+            f"dom={r['dominant'].replace('_s','')} "
+            f"useful={r['useful_ratio']:.3f}"))
+    out = os.path.join(RESULTS_DIR, "roofline_summary.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    return csv
+
+
+if __name__ == "__main__":
+    rows = summarize()
+    print(markdown_table(rows))

@@ -1,0 +1,85 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows for:
+  fig2  — AED vs mu1 × CSR grid               (paper Fig. 2)
+  fig3  — mu2 stabilization + MSE-to-central  (paper Fig. 3)
+  fig4  — H²-Fed vs FedProx/HierFAVG/FedAvg   (paper Fig. 4)
+  kernels — Pallas-kernel microbenchmarks (interpret mode vs jnp oracle)
+  roofline — dry-run roofline terms           (deliverable g)
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline]
+Env:    REPRO_BENCH_FULL=1 for the paper-scale (100 agents) runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def bench_fig2():
+    from benchmarks import fig2_mu1_csr
+    return fig2_mu1_csr.run()
+
+
+def bench_fig3():
+    from benchmarks import fig3_mu2_stability
+    return fig3_mu2_stability.run()
+
+
+def bench_fig4():
+    from benchmarks import fig4_baselines
+    return fig4_baselines.run()
+
+
+def bench_kernels():
+    from benchmarks import kernels_micro
+    return kernels_micro.run()
+
+
+def bench_roofline():
+    from benchmarks import roofline
+    return roofline.run()
+
+
+def bench_adaptive():
+    from benchmarks import ablation_adaptive
+    return ablation_adaptive.run()
+
+
+SUITES = {
+    "fig2": bench_fig2,
+    "fig3": bench_fig3,
+    "fig4": bench_fig4,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+    "adaptive": bench_adaptive,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        t0 = time.perf_counter()
+        try:
+            for row in SUITES[name]():
+                print(row)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            failures += 1
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}",
+                  file=sys.stderr)
+        print(f"{name}/total,{(time.perf_counter() - t0) * 1e6:.0f},wall",
+              flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end reproduction of the paper's headline claim (Abstract / Sec. VI):
+
+  "Even when 90% of the agents are timely disconnected, the pre-trained
+   deep learning model can still be forced to converge stably, and its
+   accuracy can be enhanced from 68% to over 90% after convergence."
+
+    PYTHONPATH=src python examples/paper_reproduction.py [--full] [--rounds N]
+
+Default runs a reduced fleet (40 agents / 8 RSUs) in a few minutes on CPU;
+--full is the paper's 100 agents / 10 RSUs.
+"""
+import argparse
+import os
+import sys
+
+import numpy as np
+
+# allow `python examples/paper_reproduction.py` from anywhere
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import metrics  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale: 100 agents, 10 RSUs, 22k samples")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--csr", type=float, default=0.1)
+    args = ap.parse_args()
+
+    if args.full:
+        import os
+        os.environ["REPRO_BENCH_FULL"] = "1"
+    # import AFTER the env decision — common reads it at import time
+    from benchmarks.common import N_ROUNDS, build_pipeline, run_fed
+    from repro.core.baselines import h2fed
+    from repro.core.heterogeneity import HeterogeneityModel
+
+    pipe = build_pipeline()
+    print(f"[pretrain] biased OEM model: test acc {pipe.pre_acc:.3f} "
+          f"(paper: ~0.68; labels {{7,8,9}} excluded)")
+
+    hp = h2fed(mu1=0.001, mu2=0.005, lar=5, lr=0.1, local_epochs=2)
+    het = HeterogeneityModel(csr=args.csr, scd=1, lar=hp.lar)
+    n_rounds = args.rounds or max(N_ROUNDS, 40)
+
+    print(f"[federate] CSR={args.csr:.0%} connected agents, LAR={hp.lar}, "
+          f"mu1={hp.mu1}, mu2={hp.mu2}, {n_rounds} global rounds")
+    rounds, acc, wall = run_fed(hp, het, scenario=2, n_rounds=n_rounds)
+    for r, a in zip(rounds, acc):
+        bar = "#" * int(a * 40)
+        print(f"  round {r:3d}  acc {a:.3f}  {bar}")
+
+    tail = float(np.mean(acc[-8:]))
+    jit = metrics.jitter(acc, tail=max(len(acc) // 2, 2))
+    print(f"\n[result] {pipe.pre_acc:.3f} -> {tail:.3f} after convergence "
+          f"({wall:.0f}s wall, jitter {jit:.4f})")
+    ok = tail > 0.90
+    print("[claim]  enhanced to >90% with 90% of agents disconnected:",
+          "REPRODUCED" if ok else "NOT MET")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,83 @@
+"""Serve the federated global model: batched KV-cache decoding.
+
+    PYTHONPATH=src python examples/serve_demo.py [--arch qwen3-0.6b] \
+        [--batch 4] [--prompt-len 16] [--gen 24]
+
+After H²-Fed training the cloud model is an ordinary dense checkpoint —
+serving needs no federation logic.  This demo runs the serve path used by
+the decode_32k / long_500k dry-run shapes: batched prefill to build the KV
+cache (per-arch: GQA cache, MLA compressed cache, SSM/xLSTM constant
+state), then token-by-token greedy decode via ``M.decode_step``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_reduced_config
+from repro.models import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch)
+    if cfg.encoder.kind == "vision":
+        raise SystemExit("serve_demo drives text decode; pick a non-VLM arch")
+    params = M.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    B, Sp = args.batch, args.prompt_len
+    max_len = Sp + args.gen
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, Sp)), jnp.int32)
+    memory = None
+    if cfg.encoder.kind == "audio":
+        memory = jnp.asarray(rng.standard_normal(
+            (B, cfg.encoder.n_positions, cfg.encoder.d_embed)), jnp.float32)
+
+    # --- prefill: run the prompt through decode_step token-by-token into the
+    # cache (same numerics as bulk prefill; see test_decode_matches_prefill)
+    cache = M.init_cache(cfg, B, max_len)
+    decode = jax.jit(lambda p, c, t, pos: M.decode_step(
+        cfg, p, c, t, pos, memory=memory))
+
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(Sp):
+        logits, cache = decode(params, cache, prompts[:, t:t + 1],
+                               jnp.full((B,), t, jnp.int32))
+    t_prefill = time.perf_counter() - t0
+
+    # --- greedy decode of `gen` new tokens, batched
+    out_tokens = []
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    t0 = time.perf_counter()
+    for t in range(Sp, max_len):
+        out_tokens.append(np.asarray(tok[:, 0]))
+        logits, cache = decode(params, cache, tok,
+                               jnp.full((B,), t, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    t_decode = time.perf_counter() - t0
+
+    gen = np.stack(out_tokens, axis=1)
+    print(f"[arch] {args.arch} (reduced) | batch {B} | cache len {max_len}")
+    print(f"[prefill] {Sp} tokens in {t_prefill:.2f}s")
+    print(f"[decode]  {args.gen} tokens in {t_decode:.2f}s "
+          f"({B * args.gen / max(t_decode, 1e-9):.1f} tok/s batched)")
+    for b in range(min(B, 2)):
+        print(f"  request {b}: prompt={np.asarray(prompts[b])[:8]}... "
+              f"-> generated={gen[b][:12]}...")
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    print("[ok] all logits finite; cache round-trip consistent")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Dependency-free pytree checkpoint store (npz payload + json manifest).
+
+Layout per step:  <dir>/step_<n>/manifest.json + arrays.npz
+The manifest records the treedef (as a nested structure of Nones) and leaf
+dtypes so restore round-trips exactly.  Atomic via tmp-dir rename.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+
+
+def _to_storable(a: np.ndarray) -> np.ndarray:
+    """npz cannot store ml_dtypes (bfloat16/fp8) natively — widen to f32.
+    Widening bf16->f32 is exact, so restore's astype() round-trips."""
+    if a.dtype.kind == "V" or a.dtype.name not in np.sctypeDict:
+        return a.astype(np.float32)
+    return a
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten(tree: PyTree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(directory: str | Path, step: int, tree: PyTree) -> Path:
+    directory = Path(directory)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": _to_storable(np.asarray(l))
+              for i, l in enumerate(leaves)}
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "structure": jax.tree_util.tree_structure(tree).serialize_using_proto().hex(),
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in directory.glob("step_*")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str | Path, step: Optional[int] = None,
+            like: Optional[PyTree] = None) -> PyTree:
+    """Restore a checkpoint. ``like`` provides the treedef; without it the
+    serialized treedef proto is used."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = directory / f"step_{step:08d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    with np.load(path / "arrays.npz") as z:
+        leaves = [z[f"leaf_{i}"].astype(_resolve_dtype(dt))
+                  for i, dt in enumerate(manifest["dtypes"])]
+    if like is not None:
+        treedef = jax.tree_util.tree_structure(like)
+    else:
+        treedef = jax.tree_util.PyTreeDef.deserialize_using_proto(
+            jax.tree_util.default_registry, bytes.fromhex(manifest["structure"]))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

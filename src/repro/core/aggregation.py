@@ -1,0 +1,92 @@
+"""Hierarchical CSR-masked weighted aggregation (paper Alg. 2 line 8,
+Alg. 3 line 6).
+
+All functions operate on *stacked* parameter pytrees: every leaf carries a
+leading agent (or RSU) axis.  Weights are data-volume weights n_i/n masked by
+connectivity; aggregation renormalizes over the surviving mass so that a
+partial cohort still produces a convex combination (FedAvg semantics under
+partial participation).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def masked_weighted_mean(stacked: PyTree, weights: jax.Array,
+                         mask: Optional[jax.Array] = None) -> PyTree:
+    """Σ_a m_a·w_a·x_a / Σ_a m_a·w_a over the leading axis.
+
+    stacked: pytree with leaves (A, ...); weights/mask: (A,).
+    If the surviving mass is zero the unweighted mean is returned instead
+    (an RSU with no connected agents keeps its old model upstream — callers
+    guard on the mass; this keeps the function total).
+    """
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    mass = jnp.sum(w)
+    safe = jnp.where(mass > 0, mass, 1.0)
+    wn = jnp.where(mass > 0, w / safe, jnp.ones_like(w) / w.shape[0])
+
+    def agg(leaf):
+        wb = wn.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf.astype(jnp.float32) * wb, axis=0).astype(leaf.dtype)
+
+    return jax.tree.map(agg, stacked)
+
+
+def rsu_aggregate(agent_params: PyTree, weights: jax.Array,
+                  mask: jax.Array, rsu_assign: jax.Array,
+                  n_rsus: int) -> Tuple[PyTree, jax.Array]:
+    """Per-RSU masked aggregation via segment-sum (Alg. 2 line 8).
+
+    agent_params: leaves (A, ...); rsu_assign: (A,) int RSU id per agent.
+    Returns (rsu_params with leaves (R, ...), rsu_mass (R,)).
+    RSUs whose cohort mass is zero get zeros — the caller must blend with the
+    previous RSU model using the returned mass (see ``blend_on_mass``).
+    """
+    w = weights.astype(jnp.float32) * mask.astype(jnp.float32)
+    mass = jax.ops.segment_sum(w, rsu_assign, num_segments=n_rsus)
+    denom = jnp.where(mass > 0, mass, 1.0)
+
+    def agg(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        s = jax.ops.segment_sum(leaf.astype(jnp.float32) * wb, rsu_assign,
+                                num_segments=n_rsus)
+        db = denom.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return (s / db).astype(leaf.dtype)
+
+    return jax.tree.map(agg, agent_params), mass
+
+
+def blend_on_mass(new: PyTree, old: PyTree, mass: jax.Array) -> PyTree:
+    """Keep `old` rows where `mass` is zero (RSU with no connected agents)."""
+    keep = (mass > 0)
+
+    def blend(n, o):
+        kb = keep.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(kb, n, o)
+
+    return jax.tree.map(blend, new, old)
+
+
+def cloud_aggregate(rsu_params: PyTree, rsu_weights: jax.Array) -> PyTree:
+    """Global aggregation over the RSU axis (Alg. 3 line 6)."""
+    return masked_weighted_mean(rsu_params, rsu_weights)
+
+
+def broadcast_to_agents(params: PyTree, n_agents: int) -> PyTree:
+    """Duplicate a single model to a stacked per-agent pytree (model
+    dissemination, Alg. 2 line 5)."""
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (n_agents,) + l.shape), params)
+
+
+def gather_rsu_for_agents(rsu_params: PyTree, rsu_assign: jax.Array) -> PyTree:
+    """Give each agent its own RSU's model: leaves (R, ...) -> (A, ...)."""
+    return jax.tree.map(lambda l: jnp.take(l, rsu_assign, axis=0), rsu_params)

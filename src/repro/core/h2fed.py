@@ -1,0 +1,93 @@
+"""H²-Fed objective (paper Eq. 4/6): dual proximal terms, one per
+aggregation layer.
+
+    min_w  F(w) + (mu1/2)·||w − w_rsu||² + (mu2/2)·||w − w_cloud||²
+
+The proximal penalty is generic over parameter pytrees.  ``H2FedParams``
+carries the full tunable surface of the framework; ``baselines.py`` shows
+that FedAvg / FedProx / HierFAVG are parameterizations of it (paper Sec. V).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class H2FedParams:
+    """Framework parameter set  M_k = {mu_{k,l}} plus cadence knobs."""
+    mu1: float = 0.01      # agent->RSU proximal weight (layer l=1)
+    mu2: float = 0.005     # agent->cloud proximal weight (layer l=2)
+    lar: int = 5           # Local Aggregation Rounds per global round
+    local_epochs: int = 1  # E: local training epochs per agent per LAR
+    lr: float = 0.05       # agent SGD learning rate
+    n_layers: int = 2      # L: aggregation layers (2 = RSU + cloud)
+
+    def validate(self):
+        assert self.mu1 >= 0 and self.mu2 >= 0
+        assert self.lar >= 1 and self.local_epochs >= 1
+        assert self.n_layers in (1, 2)
+        return self
+
+
+def sq_norm(tree: PyTree) -> jax.Array:
+    """Sum of squared L2 norms over all leaves (float32 accumulation)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: x.astype(jnp.float32)
+                        - y.astype(jnp.float32), a, b)
+
+
+def dual_proximal_penalty(w: PyTree, w_rsu: PyTree, w_cloud: PyTree,
+                          mu1: float, mu2: float) -> jax.Array:
+    """(mu1/2)||w − w_rsu||² + (mu2/2)||w − w_cloud||²  (Eq. 6)."""
+    pen = jnp.zeros((), jnp.float32)
+    if mu1:
+        pen = pen + 0.5 * mu1 * sq_norm(tree_sub(w, w_rsu))
+    if mu2:
+        pen = pen + 0.5 * mu2 * sq_norm(tree_sub(w, w_cloud))
+    return pen
+
+
+def h2fed_objective(task_loss_fn: Callable[[PyTree], jax.Array],
+                    hp: H2FedParams) -> Callable:
+    """Wrap a task loss F(w) into the H²-Fed objective h_k(·)."""
+
+    def objective(w: PyTree, w_rsu: PyTree, w_cloud: PyTree) -> jax.Array:
+        return task_loss_fn(w) + dual_proximal_penalty(
+            w, w_rsu, w_cloud, hp.mu1, hp.mu2)
+
+    return objective
+
+
+def proximal_grad_terms(w: PyTree, w_rsu: PyTree, w_cloud: PyTree,
+                        mu1: float, mu2: float) -> PyTree:
+    """Closed-form gradient of the penalty: mu1(w−w_rsu) + mu2(w−w_cloud).
+
+    Used by the fused update path (kernels/dual_proximal_sgd) so the penalty
+    never needs autodiff — the anchors enter the optimizer step directly.
+    """
+    return jax.tree.map(
+        lambda x, a1, a2: (mu1 * (x.astype(jnp.float32) - a1.astype(jnp.float32))
+                           + mu2 * (x.astype(jnp.float32) - a2.astype(jnp.float32))),
+        w, w_rsu, w_cloud)
+
+
+def proximal_sgd_step(w: PyTree, grads: PyTree, w_rsu: PyTree, w_cloud: PyTree,
+                      hp: H2FedParams) -> PyTree:
+    """w ← w − lr·(∇F(w) + mu1(w−w_rsu) + mu2(w−w_cloud))  (Alg. 1 line 4)."""
+    def upd(x, g, a1, a2):
+        xf = x.astype(jnp.float32)
+        step = g.astype(jnp.float32) \
+            + hp.mu1 * (xf - a1.astype(jnp.float32)) \
+            + hp.mu2 * (xf - a2.astype(jnp.float32))
+        return (xf - hp.lr * step).astype(x.dtype)
+    return jax.tree.map(upd, w, grads, w_rsu, w_cloud)

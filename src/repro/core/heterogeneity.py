@@ -1,0 +1,79 @@
+"""Heterogeneity model (paper Sec. III, Tab. I): CSR, SCD, FSR, LAR.
+
+Connectivity is a per-round process: an agent that (re)connects stays
+connected for SCD rounds (Stable Connection Duration), then re-draws with
+probability CSR.  FSR draws how many of the requested E local epochs each
+agent completes (< 1 epoch == disconnected, per the paper).  All draws are
+functional (keyed) so experiments are reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class HeterogeneityModel:
+    csr: float = 1.0       # Connection Success Ratio  in [0, 1]
+    scd: int = 1           # Stable Connection Duration (rounds)
+    fsr: float = 1.0       # Full-task Success Ratio   in [0, 1]
+    lar: int = 1           # Local Aggregation Rounds (per RSU, paper <= 50)
+
+    def validate(self):
+        assert 0.0 <= self.csr <= 1.0 and 0.0 <= self.fsr <= 1.0
+        assert self.scd >= 1 and self.lar >= 1
+        return self
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ConnState:
+    """Per-agent connection countdown: >0 connected, 0 disconnected."""
+    remaining: jax.Array    # (A,) int32
+
+    def tree_flatten(self):
+        return (self.remaining,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_conn_state(n_agents: int) -> ConnState:
+    return ConnState(remaining=jnp.zeros((n_agents,), jnp.int32))
+
+
+def step_connectivity(key, state: ConnState,
+                      het: HeterogeneityModel) -> Tuple[ConnState, jax.Array]:
+    """Advance one round. Returns (new state, connected mask (A,) bool)."""
+    rem = jnp.maximum(state.remaining - 1, 0)
+    need_draw = rem == 0
+    draw = jax.random.bernoulli(key, het.csr, rem.shape)
+    rem = jnp.where(need_draw & draw, het.scd, rem)
+    connected = rem > 0
+    return ConnState(remaining=rem), connected
+
+
+def sample_epochs(key, n_agents: int, het: HeterogeneityModel,
+                  requested_e: int) -> jax.Array:
+    """FSR draw: epochs completed per agent (0 == counts as disconnected)."""
+    full = jax.random.bernoulli(key, het.fsr, (n_agents,))
+    partial = jax.random.randint(jax.random.fold_in(key, 1), (n_agents,),
+                                 0, max(requested_e, 1))
+    return jnp.where(full, requested_e, partial).astype(jnp.int32)
+
+
+def connectivity_trace(key, n_agents: int, n_rounds: int,
+                       het: HeterogeneityModel) -> jax.Array:
+    """Pre-sample the full (n_rounds, A) connectivity mask via scan."""
+    keys = jax.random.split(key, n_rounds)
+
+    def body(state, k):
+        state, mask = step_connectivity(k, state, het)
+        return state, mask
+
+    _, masks = jax.lax.scan(body, init_conn_state(n_agents), keys)
+    return masks

@@ -1,0 +1,55 @@
+"""Minimal deterministic input pipelines.
+
+``classification_batches``: epoch iterator over a Dataset (host-side numpy,
+device-put per batch) — used for centralized pre-training and evaluation.
+
+``agent_minibatch_fn``: a *functional* minibatch selector for the vmapped
+federated simulator: given a (A, N, D) data block and a step index, returns
+the (A, b, D) minibatch — pure gather, jit/vmap/scan friendly.
+
+``lm_sequences``: chops a token stream into (B, S+1) next-token windows for
+the federated LLM finetune example.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import Dataset
+
+
+def classification_batches(ds: Dataset, batch: int, *, seed: int = 0,
+                           epochs: int = 1) -> Iterator[Tuple[np.ndarray,
+                                                              np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    n = len(ds.y)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            take = order[i:i + batch]
+            yield ds.x[take], ds.y[take]
+
+
+def agent_minibatch(x: jnp.ndarray, y: jnp.ndarray, step: jnp.ndarray,
+                    batch: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cyclic minibatch from per-agent blocks.  x: (N, D), y: (N,).
+
+    Deterministic cyclic slicing (start = step*b mod N) — inside vmap/scan
+    this compiles to a dynamic-slice, no host RNG needed.
+    """
+    n = x.shape[0]
+    start = (step * batch) % n
+    idx = (start + jnp.arange(batch)) % n
+    return jnp.take(x, idx, axis=0), jnp.take(y, idx, axis=0)
+
+
+def lm_sequences(tokens: np.ndarray, batch: int, seq: int,
+                 *, seed: int = 0) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        window = np.stack([tokens[s:s + seq + 1] for s in starts])
+        yield window[:, :-1].astype(np.int32), window[:, 1:].astype(np.int32)

@@ -1,0 +1,2 @@
+from repro.fedsim.simulator import SimConfig, SimState, run_simulation, make_global_round  # noqa: F401
+from repro.fedsim.pretrain import pretrain_to_target, train_centralized  # noqa: F401

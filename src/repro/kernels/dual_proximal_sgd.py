@@ -1,0 +1,78 @@
+"""Fused dual-proximal SGD update Pallas kernel (paper Alg. 1 line 4, Eq. 6).
+
+    w ← w − lr·(g + μ1·(w − w_rsu) + μ2·(w − w_cloud))
+
+This is the inner-loop hot-spot of H²-Fed local training: five streams
+(w, g, a1, a2 → w') of identical shape, pure elementwise — so it is
+HBM-bandwidth-bound.  The fusion matters: the naive jnp expression
+materializes the two difference tensors and the penalty-gradient sum
+(3 extra HBM round-trips at ~#params·4 bytes each); the fused kernel reads
+4 streams and writes 1, the roofline minimum.
+
+Tiling: parameters are flattened and reshaped to (rows, 8·128) — the fp32
+TPU native tile — and the grid walks row blocks; each program touches
+``block_rows × 1024`` elements (~2 MB × 5 streams in VMEM at the default,
+comfortably inside the ~16 MB v5e budget).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+TILE = LANE * SUBLANE          # 1024 elements: one fp32 (8, 128) native tile
+
+
+def _update_kernel(w_ref, g_ref, a1_ref, a2_ref, o_ref, *,
+                   lr: float, mu1: float, mu2: float):
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    step = g
+    if mu1:
+        step = step + mu1 * (w - a1_ref[...].astype(jnp.float32))
+    if mu2:
+        step = step + mu2 * (w - a2_ref[...].astype(jnp.float32))
+    o_ref[...] = (w - lr * step).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "mu1", "mu2",
+                                             "block_rows", "interpret"))
+def dual_proximal_sgd(w: jax.Array, g: jax.Array, a1: jax.Array,
+                      a2: jax.Array, *, lr: float, mu1: float, mu2: float,
+                      block_rows: int = 512,
+                      interpret: bool = False) -> jax.Array:
+    """Fused update for one flat array (any shape; flattened internally)."""
+    shape, dtype = w.shape, w.dtype
+    n = w.size
+    pad = (-n) % TILE
+    flat = [jnp.pad(x.reshape(-1), (0, pad)) for x in (w, g, a1, a2)]
+    rows = flat[0].size // LANE
+    tiles = [x.reshape(rows, LANE) for x in flat]
+    block_rows = min(block_rows, rows)
+    # grid must divide evenly: rows is a multiple of SUBLANE by construction
+    while rows % block_rows:
+        block_rows //= 2
+    grid = (rows // block_rows,)
+
+    kernel = functools.partial(_update_kernel, lr=lr, mu1=mu1, mu2=mu2)
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    out = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[spec] * 4, out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), dtype),
+        interpret=interpret,
+    )(*tiles)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def dual_proximal_sgd_tree(w, g, a1, a2, *, lr: float, mu1: float,
+                           mu2: float, interpret: bool = False):
+    """Apply the fused update leaf-wise over parameter pytrees."""
+    return jax.tree.map(
+        lambda wl, gl, x1, x2: dual_proximal_sgd(
+            wl, gl, x1, x2, lr=lr, mu1=mu1, mu2=mu2, interpret=interpret),
+        w, g, a1, a2)

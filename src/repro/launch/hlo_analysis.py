@@ -1,0 +1,444 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE — but our
+layer stacks are ``lax.scan``-ed, so a 96-layer model would be undercounted
+96x (verified empirically; see tests/test_hlo_analysis.py).  This module
+re-derives FLOPs / HBM bytes / collective bytes from the post-optimization
+HLO text with while-loop trip counts multiplied through the call graph:
+
+  cost(computation) = Σ own-op costs
+                    + Σ_while  trip · (cost(body) + cost(cond))
+                    + Σ_fusion cost(called fused computation)   [flops only]
+                    + Σ_call   cost(callee)
+
+Shapes in SPMD HLO are per-partition, so all results are per-device.
+FLOPs: dot ops (2·prod(out)·K from lhs contracting dims).  Bytes: operand +
+output bytes of every materializing op (the CPU/TPU HLO is already fused, so
+elementwise chains are inside fusions and counted once at the fusion
+boundary).  Collectives: output bytes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, split per kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
+_OP_RE = re.compile(r"^((?:\([^)]*\))|(?:[a-z][a-z0-9]*\[[0-9,]*\]\S*))\s+"
+                    r"([\w\-]+)\(")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# ops that don't materialize traffic (pure bookkeeping / aliasing)
+_FREE_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter", "constant",
+             "after-all", "partition-id", "replica-id", "iota", "bitcast-convert"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    out_type: str
+    op: str
+    rest: str          # full rhs after the op name's open paren
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpLine]
+    shapes: Dict[str, str]        # value name -> type string
+    root: Optional[str] = None    # ROOT value name
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), [], {})
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                # record parameter shapes from the signature
+                for pm in re.finditer(r"%?([\w\.\-]+):\s*([a-z][a-z0-9]*\["
+                                      r"[0-9,]*\][^,)]*|\([^)]*\))",
+                                      m.group(2)):
+                    cur.shapes[pm.group(1)] = pm.group(2)
+            continue
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        dm = _DEF_RE.match(s)
+        if not dm:
+            continue
+        name, rhs = dm.groups()
+        if s.startswith("ROOT"):
+            cur.root = name
+        om = _OP_RE.match(rhs)
+        if om:
+            out_type, op = om.groups()
+            paren = rhs[om.end():]
+            operands = re.findall(r"%([\w\.\-]+)", paren.split(")")[0])
+            cur.shapes[name] = out_type
+            cur.ops.append(OpLine(name, out_type, op, rhs, operands))
+        else:
+            # e.g. `%x = s32[] parameter(0)` handled above; constants w/o parens
+            parts = rhs.split(" ", 2)
+            if len(parts) >= 2:
+                cur.shapes[name] = parts[0]
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """lax.scan conditions compare the counter to the trip bound; take the
+    largest integer constant in the (tiny) condition computation."""
+    best = 1
+    for op in cond.ops:
+        for c in _CONST_RE.findall(op.rest):
+            best = max(best, int(c))
+    # also catch constants recorded in shapes-only lines
+    return best
+
+
+def _dot_flops(op: OpLine, shapes: Dict[str, str]) -> float:
+    out = _shape_dims(op.out_type)
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    k = 1
+    cm = _CONTRACT_RE.search(op.rest)
+    if cm and op.operands:
+        lhs_type = shapes.get(op.operands[0], "")
+        lhs = _shape_dims(lhs_type)
+        if lhs:
+            _, lhs_dims = lhs
+            for d in cm.group(1).split(","):
+                if d and int(d) < len(lhs_dims):
+                    k *= lhs_dims[int(d)]
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    return 2.0 * n_out * k
+
+
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _root_write_bytes(callee: Computation) -> float:
+    """Bytes WRITTEN by a fusion: normally the root output, but a
+    dynamic-update-slice root is in-place on TPU — only the update slice is
+    written (the rest of the buffer is aliased, not copied).  Tuple roots
+    resolve element-wise."""
+    by_name = {ol.name: ol for ol in callee.ops}
+
+    def resolve(name: str, depth: int = 0) -> float:
+        ol = by_name.get(name)
+        if ol is None or depth > 8:
+            return float(_shape_bytes(callee.shapes.get(name, "")))
+        if ol.op == "dynamic-update-slice" and len(ol.operands) > 1:
+            upd = callee.shapes.get(ol.operands[1], "")
+            return float(_shape_bytes(upd))
+        if ol.op == "tuple":
+            return sum(resolve(o, depth + 1) for o in ol.operands)
+        if ol.op in ("bitcast", "get-tuple-element", "copy"):
+            if ol.operands:
+                return resolve(ol.operands[0], depth + 1)
+        return float(_shape_bytes(ol.out_type))
+
+    if callee.root is not None:
+        return resolve(callee.root)
+    return float(_shape_bytes(callee.ops[-1].out_type)) if callee.ops else 0.0
+
+
+def _fusion_bytes(callee: Optional[Computation], caller: Computation,
+                  op: OpLine) -> float:
+    """HBM traffic of one fusion: write the root output (in-place DUS roots
+    write only the update slice); read each parameter in full UNLESS it is
+    only consumed by slice/gather ops inside (then read just the slices —
+    exactly how a scan body reads its stacked weights) or is the aliased
+    buffer of a root dynamic-update-slice (no read at all)."""
+    if callee is None:
+        total = float(_shape_bytes(op.out_type))
+        for o in op.operands:
+            total += _shape_bytes(caller.shapes.get(o, ""))
+        return total
+    total = _root_write_bytes(callee)
+    # map parameter index -> consumers
+    param_names = {}
+    for ol in callee.ops:
+        if ol.op == "parameter":
+            m = re.match(r"\s*(\d+)", ol.rest.split("parameter(")[-1])
+            if m:
+                param_names[ol.name] = int(m.group(1))
+    consumers: Dict[str, List[OpLine]] = {n: [] for n in param_names}
+    for ol in callee.ops:
+        for o in ol.operands:
+            if o in consumers:
+                consumers[o].append(ol)
+    for pname, idx in param_names.items():
+        cons = consumers.get(pname, [])
+        if cons and all(c.op in _SLICE_OPS for c in cons):
+            total += sum(_shape_bytes(c.out_type) for c in cons)
+        elif cons and all(c.op == "dynamic-update-slice"
+                          and c.operands and c.operands[0] == pname
+                          for c in cons):
+            # aliased in-place buffer: not read, only (slice-)written
+            continue
+        else:
+            if idx < len(op.operands):
+                total += _shape_bytes(caller.shapes.get(op.operands[idx], ""))
+            else:
+                total += _shape_bytes(callee.shapes.get(pname, ""))
+    return total
+
+
+def analyze(text: str) -> Dict[str, float]:
+    """Per-device totals with while-loop trip counts applied."""
+    comps, entry = parse_module(text)
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else None
+        if entry is None:
+            return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
+                    "collectives": {}}
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def cost(cname: str) -> Dict[str, float]:
+        if cname in memo:
+            return memo[cname]
+        comp = comps.get(cname)
+        res = {"flops": 0.0, "bytes": 0.0}
+        res.update({f"coll_{k}": 0.0 for k in COLLECTIVE_KINDS})
+        if comp is None:
+            memo[cname] = res
+            return res
+        memo[cname] = res  # guard cycles
+        for op in comp.ops:
+            base = op.op.removesuffix("-start").removesuffix("-done")
+            if base in COLLECTIVE_KINDS:
+                if op.op.endswith("-done"):
+                    continue  # counted at -start
+                res[f"coll_{base}"] += _shape_bytes(op.out_type)
+                res["bytes"] += _shape_bytes(op.out_type)
+                continue
+            if op.op == "while":
+                body = _BODY_RE.search(op.rest)
+                cond = _COND_RE.search(op.rest)
+                trips = 1
+                if cond and cond.group(1) in comps:
+                    trips = _trip_count(comps[cond.group(1)])
+                if body:
+                    sub = cost(body.group(1))
+                    for k, v in sub.items():
+                        res[k] += trips * v
+                continue
+            if op.op in ("call", "conditional", "async-start"):
+                for cm in _CALLS_RE.finditer(op.rest):
+                    sub = cost(cm.group(1))
+                    for k, v in sub.items():
+                        res[k] += v
+                # conditional: true/false computations
+                for cm in re.finditer(r"(?:true|false|branch\w*)_computation="
+                                      r"%?([\w\.\-]+)", op.rest):
+                    sub = cost(cm.group(1))
+                    for k, v in sub.items():
+                        res[k] += v
+            if op.op == "fusion":
+                fm = _CALLS_RE.search(op.rest)
+                if fm:
+                    sub = cost(fm.group(1))
+                    res["flops"] += sub["flops"]
+                    res["bytes"] += _fusion_bytes(comps.get(fm.group(1)),
+                                                  comp, op)
+                else:
+                    res["bytes"] += _shape_bytes(op.out_type)
+                continue
+            if op.op == "dot":
+                res["flops"] += _dot_flops(op, comp.shapes)
+            if op.op == "convolution":
+                # rough: 2 * out elements * (filter elements / out channels)
+                res["flops"] += 2.0 * _shape_bytes(op.out_type)
+            if op.op in ("while", "call", "conditional"):
+                continue  # traffic counted inside the callee
+            if op.op in ("dynamic-slice", "gather", "slice"):
+                # HBM read is the slice, not the full operand
+                res["bytes"] += 2 * _shape_bytes(op.out_type)
+                continue
+            if op.op == "dynamic-update-slice":
+                upd = (comp.shapes.get(op.operands[1], "")
+                       if len(op.operands) > 1 else "")
+                res["bytes"] += 2 * _shape_bytes(upd)
+                continue
+            if op.op not in _FREE_OPS:
+                nbytes = _shape_bytes(op.out_type)
+                for o in op.operands:
+                    t = comp.shapes.get(o)
+                    if t:
+                        nbytes += _shape_bytes(t)
+                res["bytes"] += nbytes
+        memo[cname] = res
+        return res
+
+    total = cost(entry)
+    colls = {k: total[f"coll_{k}"] for k in COLLECTIVE_KINDS
+             if total[f"coll_{k}"] > 0}
+    return {"flops": total["flops"], "bytes": total["bytes"],
+            "collective_bytes": sum(colls.values()), "collectives": colls}
+
+
+def breakdown(text: str, top: int = 20) -> List[Tuple[str, float, float]]:
+    """Per-top-level-op attribution of (bytes, flops) in the entry
+    computation, trip counts applied — the §Perf 'profile'.  Returns
+    [(label, bytes, flops)] sorted by bytes."""
+    comps, entry = parse_module(text)
+    if entry is None:
+        return []
+    an_memo: Dict[str, Dict[str, float]] = {}
+
+    def comp_cost(cname: str) -> Dict[str, float]:
+        if cname not in an_memo:
+            sub_text_rows = []
+            an_memo[cname] = _cost_of(comps, cname, an_memo)
+        return an_memo[cname]
+
+    rows = []
+    ent = comps[entry]
+    for op in ent.ops:
+        b = f = 0.0
+        label = f"{op.op} {op.name} {op.out_type[:40]}"
+        if op.op == "while":
+            bm = _BODY_RE.search(op.rest)
+            cm = _COND_RE.search(op.rest)
+            trips = (_trip_count(comps[cm.group(1)])
+                     if cm and cm.group(1) in comps else 1)
+            if bm:
+                sub = comp_cost(bm.group(1))
+                b, f = trips * sub["bytes"], trips * sub["flops"]
+            label = f"while×{trips} {op.name} body={bm.group(1) if bm else '?'}"
+        elif op.op == "fusion":
+            fm = _CALLS_RE.search(op.rest)
+            callee = comps.get(fm.group(1)) if fm else None
+            b = _fusion_bytes(callee, ent, op)
+            f = comp_cost(fm.group(1))["flops"] if fm else 0.0
+        elif op.op == "dot":
+            f = _dot_flops(op, ent.shapes)
+            b = _shape_bytes(op.out_type)
+        elif op.op.removesuffix("-start") in COLLECTIVE_KINDS:
+            b = _shape_bytes(op.out_type)
+            label = f"COLL {label}"
+        elif op.op not in _FREE_OPS and op.op not in (
+                "call", "conditional"):
+            b = _shape_bytes(op.out_type)
+            for o in op.operands:
+                t = ent.shapes.get(o)
+                if t:
+                    b += _shape_bytes(t)
+        rows.append((label, b, f))
+    rows.sort(key=lambda r: -r[1])
+    return rows[:top]
+
+
+def _cost_of(comps, cname, memo):
+    """Recursive (bytes, flops) of one computation — shared with analyze()'s
+    inner cost(); kept separate to avoid closure plumbing."""
+    if cname in memo:
+        return memo[cname]
+    comp = comps.get(cname)
+    res = {"flops": 0.0, "bytes": 0.0}
+    if comp is None:
+        memo[cname] = res
+        return res
+    memo[cname] = res
+    for op in comp.ops:
+        base = op.op.removesuffix("-start").removesuffix("-done")
+        if base in COLLECTIVE_KINDS:
+            if not op.op.endswith("-done"):
+                res["bytes"] += _shape_bytes(op.out_type)
+            continue
+        if op.op == "while":
+            bm = _BODY_RE.search(op.rest)
+            cm = _COND_RE.search(op.rest)
+            trips = (_trip_count(comps[cm.group(1)])
+                     if cm and cm.group(1) in comps else 1)
+            if bm:
+                sub = _cost_of(comps, bm.group(1), memo)
+                res["bytes"] += trips * sub["bytes"]
+                res["flops"] += trips * sub["flops"]
+            continue
+        if op.op in ("call", "conditional", "async-start"):
+            for cm2 in _CALLS_RE.finditer(op.rest):
+                sub = _cost_of(comps, cm2.group(1), memo)
+                res["bytes"] += sub["bytes"]
+                res["flops"] += sub["flops"]
+            continue
+        if op.op == "fusion":
+            fm = _CALLS_RE.search(op.rest)
+            if fm:
+                sub = _cost_of(comps, fm.group(1), memo)
+                res["flops"] += sub["flops"]
+                res["bytes"] += _fusion_bytes(comps.get(fm.group(1)),
+                                              comp, op)
+            else:
+                res["bytes"] += _shape_bytes(op.out_type)
+            continue
+        if op.op == "dot":
+            res["flops"] += _dot_flops(op, comp.shapes)
+        if op.op in ("dynamic-slice", "gather", "slice"):
+            res["bytes"] += 2 * _shape_bytes(op.out_type)
+            continue
+        if op.op == "dynamic-update-slice":
+            upd = (comp.shapes.get(op.operands[1], "")
+                   if len(op.operands) > 1 else "")
+            res["bytes"] += 2 * _shape_bytes(upd)
+            continue
+        if op.op not in _FREE_OPS:
+            nbytes = _shape_bytes(op.out_type)
+            for o in op.operands:
+                t = comp.shapes.get(o)
+                if t:
+                    nbytes += _shape_bytes(t)
+            res["bytes"] += nbytes
+    return res

@@ -1,0 +1,187 @@
+"""Sharding rules: param / batch / cache PartitionSpecs for the production
+mesh.
+
+Params use a generic 2D (FSDP x TP) rule over the trailing matrix dims, with
+an explicit expert-parallel rule for MoE expert tensors (E -> `model`).
+Params are NOT sharded over `pod`: each pod (RSU in the DESIGN.md mapping)
+holds a full sharded replica, and cross-pod reduction is the cloud layer.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+_EXPERT_NAMES = ("w_gate", "w_up", "w_down")
+
+
+def _divisible_dims(shape, size, taken):
+    return [i for i, d in enumerate(shape)
+            if i not in taken and d % size == 0 and d >= size]
+
+
+def param_spec(path: str, shape, mesh) -> P:
+    """Generic FSDP('data') x TP('model') spec for one parameter leaf."""
+    ndim = len(shape)
+    data, model = mesh.shape.get("data", 1), mesh.shape.get("model", 1)
+    spec = [None] * ndim
+
+    # MoE routed-expert tensors: (..., E, a, b) -> E over `model` (expert
+    # parallelism), larger of (a, b) over `data`.
+    if (any(n in path for n in _EXPERT_NAMES) and "shared" not in path
+            and ndim >= 3 and "router" not in path):
+        e_dim = ndim - 3
+        if shape[e_dim] % model == 0:
+            spec[e_dim] = "model"
+            a, b = ndim - 2, ndim - 1
+            pick = a if shape[a] >= shape[b] else b
+            other = b if pick == a else a
+            if shape[pick] % data == 0:
+                spec[pick] = "data"
+            elif shape[other] % data == 0:
+                spec[other] = "data"
+            return P(*spec)
+        # fall through to generic rule if E not divisible (reduced configs)
+
+    if ndim == 0:
+        return P()
+    # generic: consider only the trailing two dims (the matrix); leading dims
+    # are layer stacks / expert axes handled above.
+    cand = [ndim - 1] if ndim == 1 else [ndim - 2, ndim - 1]
+    cand = sorted(cand, key=lambda i: -shape[i])
+    taken: set = set()
+    # largest divisible dim -> model
+    for i in cand:
+        if shape[i] % model == 0 and shape[i] >= model:
+            spec[i] = "model"
+            taken.add(i)
+            break
+    for i in cand:
+        if i not in taken and shape[i] % data == 0 and shape[i] >= data:
+            spec[i] = "data"
+            taken.add(i)
+            break
+    return P(*spec)
+
+
+def param_shardings(params_shapes: PyTree, mesh,
+                    strategy: str = "fsdp_tp") -> PyTree:
+    """NamedSharding pytree matching a params (shape) pytree."""
+    if strategy == "dp":
+        return jax.tree.map(lambda _: NamedSharding(mesh, P()), params_shapes)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(p) for p in path)
+        out.append(NamedSharding(mesh, param_spec(pstr, leaf.shape, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def act_spec_dp(shape, mesh) -> P:
+    """Pure-DP activation spec: leading agent dim over (pod, data), second
+    (per-agent batch) dim over `model` — every chip holds distinct data."""
+    ba = batch_axes(mesh)
+    from math import prod
+    bsz = prod(mesh.shape[a] for a in ba)
+    model = mesh.shape.get("model", 1)
+    spec = [None] * len(shape)
+    if shape and shape[0] % bsz == 0 and shape[0] >= bsz:
+        spec[0] = ba if len(ba) > 1 else ba[0]
+    if len(shape) > 1 and shape[1] % model == 0 and shape[1] >= model:
+        spec[1] = "model"
+    return P(*spec)
+
+
+def param_spec_model_only(path: str, shape, mesh) -> P:
+    """TP('model')-only spec — used by the h2fed_round shard_map program
+    where (pod, data) are manual agent axes and each agent materializes its
+    own replica as a loop temporary."""
+    ndim = len(shape)
+    model = mesh.shape.get("model", 1)
+    spec = [None] * ndim
+    if ndim == 0:
+        return P()
+    if (any(n in path for n in _EXPERT_NAMES) and "shared" not in path
+            and ndim >= 3 and "router" not in path
+            and shape[ndim - 3] % model == 0):
+        spec[ndim - 3] = "model"                    # expert-parallel
+        return P(*spec)
+    cand = [ndim - 1] if ndim == 1 else [ndim - 2, ndim - 1]
+    for i in sorted(cand, key=lambda i: -shape[i]):
+        if shape[i] % model == 0 and shape[i] >= model:
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def param_shardings_model_only(params_shapes: PyTree, mesh) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(p) for p in path)
+        out.append(NamedSharding(mesh,
+                                 param_spec_model_only(pstr, leaf.shape, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(ndim: int, mesh) -> P:
+    """Leading dim = agents/batch over (pod, data); rest replicated."""
+    return P(batch_axes(mesh), *([None] * (ndim - 1)))
+
+
+def act_spec(shape, mesh) -> P:
+    """Batch-sharded activation spec; replicates when dim0 isn't divisible
+    (e.g. the batch=1 long-context decode)."""
+    from math import prod
+    ba = batch_axes(mesh)
+    bsz = prod(mesh.shape[a] for a in ba)
+    if shape and shape[0] % bsz == 0 and shape[0] >= bsz:
+        return P(ba if len(ba) > 1 else ba[0], *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def cache_spec(shape, mesh) -> P:
+    """Decode-cache leaf: batch dim over (pod,data) when divisible; then the
+    largest remaining dim over `model`; for batch=1 (long-context) also place
+    `data` on the longest remaining dim."""
+    ndim = len(shape)
+    spec = [None] * ndim
+    if ndim == 0:
+        return P()
+    ba = batch_axes(mesh)
+    from math import prod
+    bsz = prod(mesh.shape[a] for a in ba)
+    used_data = False
+    if shape[0] % bsz == 0 and shape[0] >= bsz:
+        spec[0] = ba if len(ba) > 1 else ba[0]
+        used_data = True
+    model = mesh.shape.get("model", 1)
+    rest = sorted(range(1, ndim), key=lambda i: -shape[i])
+    for i in rest:
+        if shape[i] % model == 0 and shape[i] >= model:
+            spec[i] = "model"
+            rest = [j for j in rest if j != i]
+            break
+    if not used_data:
+        data = mesh.shape.get("data", 1)
+        for i in rest:
+            if spec[i] is None and shape[i] % data == 0 and shape[i] >= data:
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def cache_shardings(cache_shapes: PyTree, mesh) -> PyTree:
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, cache_spec(l.shape, mesh)), cache_shapes)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,228 @@
+"""Distributed step builders + input specs for every (arch × input shape).
+
+`fsdp_fed` train step (pjit / GSPMD): params, momentum and both H²-Fed
+proximal anchors sharded (FSDP×TP); the batch carries a leading agent axis
+laid out over the (pod, data) mesh axes; the loss is the CSR-masked,
+weighted per-agent objective with the dual proximal pull applied in the
+fused optimizer update (closed form — no autodiff through the penalty).
+
+`serve_step`: single-token decode against a KV/state cache.
+
+All inputs are produced as ShapeDtypeStructs by ``input_specs`` — the
+dry-run lowers and compiles without allocating anything.
+"""
+from __future__ import annotations
+
+import functools
+from math import prod
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.h2fed import H2FedParams
+from repro.launch import sharding as shard
+from repro.launch.mesh import agent_axes, n_agents
+from repro.models import model as M
+from repro.models.config import ArchConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# sliding window applied to full-attention archs for the long-context shape
+LONG_CONTEXT_WINDOW = 8192
+
+# whisper-tiny long_500k: documented skip (DESIGN.md §Shape-coverage)
+SKIPS = {("whisper-tiny", "long_500k"): "enc-dec ASR with 448-token decoder "
+         "context; 524k-token decode is not a meaningful configuration"}
+
+
+def shape_adapted_config(cfg: ArchConfig, shape_name: str) -> ArchConfig:
+    """Adapt the arch to the input shape: long_500k forces sub-quadratic
+    attention (sliding window) on archs with full attention."""
+    if shape_name == "long_500k" and cfg.attn_impl != "none" \
+            and cfg.attn_window == 0:
+        cfg = cfg.replace(attn_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+# --------------------------------------------------------------------------
+# train step (fsdp_fed)
+# --------------------------------------------------------------------------
+
+class TrainState(NamedTuple):
+    params: Any
+    momentum: Any
+    anchor_rsu: Any      # w_k  (layer-1 proximal anchor)
+    anchor_cloud: Any    # w    (layer-2 proximal anchor)
+
+
+def init_train_state(cfg: ArchConfig, key) -> TrainState:
+    params = M.init_params(cfg, key)
+    zeros = jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), params)
+    return TrainState(params=params, momentum=zeros,
+                      anchor_rsu=params, anchor_cloud=params)
+
+
+def make_train_step(cfg: ArchConfig, hp: H2FedParams, beta: float = 0.9):
+    aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+
+    def train_step(state: TrainState, batch: Dict[str, Any], mask):
+        """batch leaves: (A, b, ...); mask: (A,) float connectivity."""
+        A, b = batch["tokens"].shape[:2]
+
+        def task_loss(p):
+            flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in batch.items()}
+            nll, aux = M.per_example_loss(cfg, p, flat)      # (A*b,)
+            per_agent = nll.reshape(A, b).mean(axis=1)       # (A,)
+            mf = mask.astype(jnp.float32)
+            loss = jnp.sum(per_agent * mf) / jnp.maximum(jnp.sum(mf), 1.0)
+            return loss + aux_w * aux, (loss, aux)
+
+        grads, (loss, aux) = jax.grad(task_loss, has_aux=True)(state.params)
+
+        def upd(w, m, g, a1, a2):
+            wf = w.astype(jnp.float32)
+            gf = (g.astype(jnp.float32)
+                  + hp.mu1 * (wf - a1.astype(jnp.float32))
+                  + hp.mu2 * (wf - a2.astype(jnp.float32)))
+            m_new = beta * m + gf
+            w_new = (wf - hp.lr * m_new).astype(w.dtype)
+            return w_new, m_new
+
+        flat_p, treedef = jax.tree_util.tree_flatten(state.params)
+        flat_m = treedef.flatten_up_to(state.momentum)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_a1 = treedef.flatten_up_to(state.anchor_rsu)
+        flat_a2 = treedef.flatten_up_to(state.anchor_cloud)
+        new_p, new_m = zip(*[upd(*t) for t in
+                             zip(flat_p, flat_m, flat_g, flat_a1, flat_a2)])
+        new_state = TrainState(
+            params=jax.tree_util.tree_unflatten(treedef, new_p),
+            momentum=jax.tree_util.tree_unflatten(treedef, new_m),
+            anchor_rsu=state.anchor_rsu, anchor_cloud=state.anchor_cloud)
+        return new_state, {"loss": loss, "aux": aux}
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# prefill / serve steps
+# --------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        logits, _ = M.forward(cfg, params, batch)
+        # inference-prefill emits the last-position logits (next-token)
+        return logits[:, -1, :]
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, tokens, cur_pos, memory=None):
+        logits, new_cache = M.decode_step(cfg, params, cache, tokens, cur_pos,
+                                          memory=memory)
+        return logits[:, -1, :], new_cache
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs + shardings)
+# --------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _extra_model_inputs(cfg: ArchConfig, lead: Tuple[int, ...]):
+    """VLM patch embeddings / audio encoder memory, with leading dims."""
+    extras, f32 = {}, jnp.float32
+    if cfg.encoder.kind == "vision":
+        extras["patch_embeds"] = _sds(
+            lead + (cfg.encoder.n_positions, cfg.encoder.d_embed), f32)
+    if cfg.encoder.kind == "audio":
+        extras["memory"] = _sds(
+            lead + (cfg.encoder.n_positions, cfg.encoder.d_embed), f32)
+    return extras
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, mesh,
+                hp: Optional[H2FedParams] = None):
+    """Build (fn, args, in_shardings) for one (arch × shape × mesh) cell.
+
+    Returns a dict: {fn, args (tuple of SDS pytrees), in_shardings,
+    static description}.  ``fn`` is un-jitted; the dry-run driver wraps it
+    with jax.jit(fn, in_shardings=...) and lowers with the SDS args.
+    """
+    cfg = shape_adapted_config(cfg, shape_name)
+    info = SHAPES[shape_name]
+    seq, batch = info["seq"], info["batch"]
+    hp = hp or H2FedParams()
+    i32 = jnp.int32
+
+    params_shapes = jax.eval_shape(lambda: M.init_params(cfg, jax.random.key(0)))
+    p_shard = shard.param_shardings(params_shapes, mesh,
+                                    strategy=cfg.shard_strategy)
+    repl = shard.replicated(mesh)
+    _act_spec = (shard.act_spec_dp if cfg.shard_strategy == "dp"
+                 else shard.act_spec)
+
+    if info["kind"] == "train":
+        A = n_agents(mesh)
+        b = batch // A
+        assert b >= 1, f"{shape_name}: global batch {batch} < {A} agents"
+        state = TrainState(
+            params=params_shapes,
+            momentum=jax.tree.map(lambda l: _sds(l.shape, jnp.float32),
+                                  params_shapes),
+            anchor_rsu=params_shapes, anchor_cloud=params_shapes)
+        state_shard = TrainState(
+            params=p_shard,
+            momentum=p_shard, anchor_rsu=p_shard, anchor_cloud=p_shard)
+        batch_tree = {"tokens": _sds((A, b, seq), i32),
+                      "labels": _sds((A, b, seq), i32)}
+        batch_tree.update(_extra_model_inputs(cfg, (A, b)))
+        bspec = {k: NamedSharding(mesh, _act_spec(v.shape, mesh))
+                 for k, v in batch_tree.items()}
+        mask = _sds((A,), jnp.float32)
+        return dict(fn=make_train_step(cfg, hp),
+                    args=(state, batch_tree, mask),
+                    in_shardings=(state_shard, bspec, repl),
+                    cfg=cfg, desc=f"train A={A} b={b} S={seq}")
+
+    if info["kind"] == "prefill":
+        batch_tree = {"tokens": _sds((batch, seq), i32)}
+        batch_tree.update(_extra_model_inputs(cfg, (batch,)))
+        bspec = {k: NamedSharding(mesh, shard.act_spec(v.shape, mesh))
+                 for k, v in batch_tree.items()}
+        return dict(fn=make_prefill_step(cfg),
+                    args=(params_shapes, batch_tree),
+                    in_shardings=(p_shard, bspec),
+                    cfg=cfg, desc=f"prefill B={batch} S={seq}")
+
+    # decode
+    cache_len = seq
+    cache_shapes = jax.eval_shape(lambda: M.init_cache(cfg, batch, cache_len))
+    c_shard = shard.cache_shardings(cache_shapes, mesh)
+    tokens = _sds((batch, 1), i32)
+    cur_pos = _sds((batch,), i32)
+    extras = _extra_model_inputs(cfg, (batch,))
+    memory = extras.get("memory")
+    mem_shard = (NamedSharding(mesh, shard.act_spec(memory.shape, mesh))
+                 if memory is not None else None)
+    tok_shard = NamedSharding(mesh, shard.act_spec(tokens.shape, mesh))
+    pos_shard = NamedSharding(mesh, shard.act_spec(cur_pos.shape, mesh))
+    # VLM decode: image context lives in the prefilled KV cache; no patch
+    # embeddings are consumed at decode time.
+    return dict(fn=make_serve_step(cfg),
+                args=(params_shapes, cache_shapes, tokens, cur_pos, memory),
+                in_shardings=(p_shard, c_shard, tok_shard, pos_shard,
+                              mem_shard),
+                cfg=cfg, desc=f"decode B={batch} T={cache_len}"
+                              + (f" win={cfg.attn_window}" if cfg.attn_window
+                                 else ""))

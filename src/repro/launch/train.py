@@ -1,0 +1,151 @@
+"""Production training launcher: H²-Fed hierarchical rounds on a device mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        [--devices 8 --mesh 2,4,1] [--reduced] [--rounds 8] \
+        [--lar 4] [--epochs 1] [--csr 0.8] [--quantize-cloud] \
+        [--adaptive-mu] [--ckpt-dir results/ckpt] [--seq 128 --batch 4]
+
+Runs the paper's Algorithms 1–3 as one compiled SPMD program per global
+round (launch/h2fed_round.py) over synthetic Non-IID LM shards, with
+checkpointing and optional adaptive-mu orchestration (core/orchestrator).
+On CPU pass --devices to materialize host devices; on a real TPU slice the
+flag is unnecessary and --mesh should match the topology.
+"""
+import argparse
+import os
+
+
+def _parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="reduced config (full configs need a real pod)")
+    ap.add_argument("--full-config", dest="reduced", action="store_false")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="host device count (CPU dry runs)")
+    ap.add_argument("--mesh", default="2,4,1",
+                    help="pod,data,model mesh shape")
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--lar", type=int, default=4)
+    ap.add_argument("--epochs", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--mu1", type=float, default=0.001)
+    ap.add_argument("--mu2", type=float, default=0.005)
+    ap.add_argument("--csr", type=float, default=0.8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--quantize-cloud", action="store_true")
+    ap.add_argument("--adaptive-mu", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args()
+
+
+def main():
+    args = _parse_args()
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.checkpoint import ckpt
+    from repro.configs.registry import get_config, get_reduced_config
+    from repro.core import orchestrator as orch
+    from repro.core.h2fed import H2FedParams
+    from repro.data.synthetic import lm_token_task
+    from repro.launch import sharding as shard
+    from repro.launch.h2fed_round import comm_model, make_h2fed_round
+    from repro.models import model as M
+
+    mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+    mesh = jax.make_mesh(mesh_shape, ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    A = mesh_shape[0] * mesh_shape[1]
+    cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
+    if cfg.encoder.kind != "none":
+        raise SystemExit("text-only archs for the LM training launcher")
+
+    base_hp = H2FedParams(mu1=args.mu1, mu2=args.mu2, lar=args.lar,
+                          local_epochs=args.epochs, lr=args.lr)
+    params = M.init_params(cfg, jax.random.key(args.seed))
+    n_par = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    cm = comm_model(cfg, base_hp, mesh, quantize_cloud=args.quantize_cloud)
+    print(f"[mesh] {dict(mesh.shape)}  agents={A}")
+    print(f"[model] {args.arch}{' (reduced)' if args.reduced else ''}: "
+          f"{n_par/1e6:.1f}M params")
+    print(f"[comm] ici={cm['ici_s']*1e3:.1f}ms dci={cm['dci_s']*1e3:.1f}ms "
+          f"per-round (analytical)")
+
+    # Non-IID agent shards: per-agent Markov streams
+    streams = [lm_token_task(vocab=min(cfg.vocab_size, 512),
+                             n_tokens=args.lar * args.batch * (args.seq + 1)
+                             * 4, seed=100 + a) for a in range(A)]
+    rng = np.random.default_rng(args.seed)
+
+    mu_state, mu_cfg = orch.init_state(), orch.AdaptiveMuConfig()
+    hp = base_hp
+    round_fns = {}
+
+    with mesh:
+        cloud = jax.device_put(
+            params, jax.tree.map(lambda _: shard.replicated(mesh), params))
+        ev = {"tokens": jnp.asarray(streams[0][:args.batch * args.seq]
+                                    .reshape(args.batch, args.seq)),
+              "labels": jnp.asarray(streams[0][1:args.batch * args.seq + 1]
+                                    .reshape(args.batch, args.seq))}
+        print(f"[init] eval loss {float(M.loss_fn(cfg, cloud, ev)[0]):.4f}")
+
+        for r in range(args.rounds):
+            if args.adaptive_mu:
+                hp, badness = orch.schedule(mu_state, mu_cfg, base_hp)
+            key = (hp.mu1, hp.mu2)
+            if key not in round_fns:
+                fn = make_h2fed_round(cfg, hp, mesh,
+                                      quantize_cloud=args.quantize_cloud)
+                round_fns[key] = jax.jit(fn, in_shardings=(
+                    shard.param_shardings_model_only(
+                        jax.eval_shape(lambda: params), mesh),
+                    {"tokens": NamedSharding(mesh, P(None, ("pod", "data"))),
+                     "labels": NamedSharding(mesh, P(None, ("pod", "data")))},
+                    NamedSharding(mesh, P(None, ("pod", "data"))),
+                    NamedSharding(mesh, P(("pod", "data")))))
+
+            n = args.batch * (args.seq + 1)
+            toks = np.zeros((args.lar, A, args.batch, args.seq), np.int32)
+            labs = np.zeros_like(toks)
+            for a in range(A):
+                off = (r * args.lar * n) % max(len(streams[a])
+                                               - n * args.lar, 1)
+                for l in range(args.lar):
+                    seg = np.resize(streams[a][off + l * n:
+                                               off + (l + 1) * n], n)
+                    seg = seg.reshape(args.batch, args.seq + 1)
+                    toks[l, a], labs[l, a] = seg[:, :-1], seg[:, 1:]
+            mask = (rng.random((args.lar, A)) < args.csr).astype(np.float32)
+            n_data = np.full((A,), float(args.batch * args.seq), np.float32)
+
+            cloud, metrics = round_fns[key](
+                cloud, {"tokens": jnp.asarray(toks),
+                        "labels": jnp.asarray(labs)},
+                jnp.asarray(mask), jnp.asarray(n_data))
+            observed = float(mask.mean())
+            mu_state = orch.observe_csr(mu_state, mu_cfg, observed, 1.0)
+            loss = float(M.loss_fn(cfg, cloud, ev)[0])
+            print(f"[round {r+1:3d}] loss {loss:.4f} csr_obs {observed:.2f} "
+                  f"mu=({hp.mu1:.4f},{hp.mu2:.4f}) "
+                  f"mass {float(metrics['surviving_mass']):.0f}")
+            if args.ckpt_dir and (r + 1) % args.ckpt_every == 0:
+                path = ckpt.save(args.ckpt_dir, r + 1, cloud)
+                print(f"[ckpt] {path}")
+
+    print("[done]")
+
+
+if __name__ == "__main__":
+    main()

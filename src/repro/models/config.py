@@ -1,0 +1,189 @@
+"""Architecture configuration for the repro model zoo.
+
+One dataclass drives every architecture family (dense / MoE / SSM / hybrid /
+VLM / audio).  Block composition is expressed by ``block_pattern`` entries,
+each of which names a residual block type:
+
+  "attn"    — self-attention (GQA / MLA / qk-norm / sliding-window variants)
+  "mlp"     — feed-forward (swiglu / squared_relu / gelu)
+  "moe"     — mixture-of-experts feed-forward
+  "mamba2"  — Mamba-2 chunked-SSD block
+  "mlstm"   — xLSTM matrix-memory block (chunkwise parallel)
+  "slstm"   — xLSTM scalar-memory block (recurrent scan)
+  "xattn"   — cross-attention to an encoder memory (whisper decoder)
+
+A transformer "layer" is a list of such entries; ``layer_patterns`` maps a
+pattern name to the list, and ``layout`` is the per-layer sequence of pattern
+names.  Homogeneous runs of the same pattern are stacked and ``lax.scan``-ed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0              # routed experts
+    top_k: int = 0
+    n_shared: int = 0               # shared (always-on) experts
+    expert_d_ff: int = 0            # per-expert hidden dim
+    capacity_factor: float = 1.25   # GShard capacity factor
+    group_size: int = 2048          # dispatch group size (tokens)
+    router_aux_weight: float = 0.01  # load-balance aux loss weight
+    dispatch_impl: str = "einsum"   # "einsum" (GShard) | "ragged" (sort+ragged_dot)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64             # N: per-head state size
+    head_dim: int = 64              # P: channels per head
+    expand: int = 2                 # d_inner = expand * d_model
+    conv_dim: int = 4               # depthwise causal conv width
+    chunk_size: int = 64            # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512         # compressed KV dim (cached)
+    rope_head_dim: int = 64         # decoupled-RoPE dims (cached)
+    q_head_dim: int = 128           # non-rope q/k head dims
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderStub:
+    """Modality frontend stub: input_specs() provides these embeddings."""
+    kind: str = "none"              # "vision" | "audio" | "none"
+    n_positions: int = 0            # patches (vision) / frames (audio)
+    d_embed: int = 0                # embedding dim fed to the backbone
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str                  # dense | moe | ssm | hybrid | vlm | audio
+    source: str                     # citation for the config numbers
+
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    d_ff: int = 0
+    vocab_size: int = 0
+
+    # attention details
+    attn_impl: str = "gqa"          # gqa | mla | none
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    attn_window: int = 0            # 0 = full causal; >0 = sliding window
+    attn_bias: bool = False
+    attn_chunk: int = 1024          # online-softmax KV chunk for prefill
+    pos_embed: str = "rope"         # rope | learned | none
+
+    mlp_type: str = "swiglu"        # swiglu | squared_relu | gelu
+    mlp_bias: bool = False
+    norm_type: str = "rmsnorm"      # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    mla: Optional[MLAConfig] = None
+    encoder: EncoderStub = EncoderStub()
+
+    # layer layout: list of (pattern_name, repeat) tuples; pattern defs below.
+    # default dense layout is [("decoder", n_layers)].
+    layout: Tuple[Tuple[str, int], ...] = ()
+    # hybrid: shared attention block applied every `shared_every` core blocks
+    shared_every: int = 0
+
+    # xLSTM mLSTM execution: 0 = exact per-step scan (oracle); T > 0 =
+    # chunkwise-parallel form with chunk length T (§Perf hillclimb A — the
+    # state is materialized once per chunk instead of once per step).
+    mlstm_chunk: int = 0
+
+    # distribution strategy for the launch path (§Perf lever):
+    #   fsdp_tp — params sharded FSDP('data') x TP('model')  [default]
+    #   dp      — params replicated, batch over ('data','model'): pure
+    #             256-way data parallelism (wins for small models where TP
+    #             collectives dominate the tiny per-shard matmuls)
+    shard_strategy: str = "fsdp_tp"
+
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    max_seq_len: int = 1 << 20
+
+    # ---- derived ----------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // max(self.n_heads, 1)
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def weight_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def layout_(self) -> Tuple[Tuple[str, int], ...]:
+        if self.layout:
+            return self.layout
+        return (("decoder", self.n_layers),)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embeddings + blocks); for roofline."""
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self)
+
+    def n_active_params(self) -> int:
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self, active_only=True)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def reduced(cfg: ArchConfig, *, n_layers: int = 2, d_model: int = 256,
+            n_heads: int = 4, n_kv_heads: int = 2, d_ff: int = 512,
+            vocab_size: int = 512, n_experts: int = 4, top_k: int = 2,
+            seq_len_cap: int = 128) -> ArchConfig:
+    """Smoke-test variant of the same family: 2 layers, d_model<=512, <=4 experts."""
+    kw = dict(
+        n_layers=n_layers, d_model=d_model, n_heads=n_heads,
+        n_kv_heads=min(n_kv_heads, cfg.n_kv_heads or n_kv_heads) or n_kv_heads,
+        d_ff=d_ff if cfg.d_ff else 0, vocab_size=vocab_size, head_dim=0,
+        max_seq_len=seq_len_cap,
+        mlstm_chunk=0,   # smoke tests run the per-step oracle form
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=min(n_experts, cfg.moe.n_experts),
+            top_k=min(top_k, cfg.moe.top_k), expert_d_ff=d_ff // 2,
+            group_size=32, n_shared=min(cfg.moe.n_shared, 1))
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, state_dim=16, head_dim=32,
+                                        chunk_size=16)
+    if cfg.mla is not None:
+        kw["mla"] = dataclasses.replace(cfg.mla, kv_lora_rank=64, rope_head_dim=16,
+                                        q_head_dim=32, v_head_dim=32)
+    if cfg.encoder.kind != "none":
+        kw["encoder"] = dataclasses.replace(cfg.encoder, n_positions=16,
+                                            d_embed=d_model)
+    if cfg.layout:
+        # shrink layout preserving structure: keep pattern kinds, cap repeats
+        seen, new_layout = set(), []
+        for pat, rep in cfg.layout:
+            r = 1 if pat in seen else min(rep, 2)
+            seen.add(pat)
+            new_layout.append((pat, r))
+        kw["layout"] = tuple(new_layout)
+    if cfg.attn_window:
+        kw["attn_window"] = 32
+    kw["attn_chunk"] = 32
+    return cfg.replace(**kw)

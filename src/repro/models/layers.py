@@ -1,0 +1,155 @@
+"""Core layers: norms, MLPs, embeddings, RoPE. Pure-functional (init/apply)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (maps to Lecun-normal for 2D)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def norm_init(cfg: ArchConfig, d: int):
+    p = {"scale": jnp.ones((d,), cfg.weight_dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.weight_dtype)
+    return p
+
+
+def norm_apply(cfg: ArchConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def soft_cap(x, cap: float):
+    """Bounded pre-activation (xLSTM-7B / Gemma-2 style): cap * tanh(x/cap).
+
+    Keeps recurrent gate pre-activations in [-cap, cap] so the exp-based
+    stabilized recurrences cannot overflow, and damps the gradient of
+    already-saturated gates (sech^2 factor) — the standard robustness fix
+    for exp-gated recurrent cells under aggressive learning rates.
+    """
+    return cap * jnp.tanh(x / cap)
+
+
+def rms_normalize(x, eps: float = 1e-6):
+    """Parameter-free RMS normalization (qk-norm building block)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP variants
+# --------------------------------------------------------------------------
+
+def mlp_init(cfg: ArchConfig, key, d_model: int | None = None,
+             d_ff: int | None = None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    wd = cfg.weight_dtype
+    if cfg.mlp_type == "swiglu":
+        p = {"w_gate": dense_init(k1, (d, f), wd),
+             "w_up": dense_init(k2, (d, f), wd),
+             "w_down": dense_init(k3, (f, d), wd)}
+    else:  # squared_relu | gelu: single up projection
+        p = {"w_up": dense_init(k1, (d, f), wd),
+             "w_down": dense_init(k2, (f, d), wd)}
+        if cfg.mlp_bias:
+            p["b_up"] = jnp.zeros((f,), wd)
+            p["b_down"] = jnp.zeros((d,), wd)
+    return p
+
+
+def mlp_apply(cfg: ArchConfig, p, x):
+    if cfg.mlp_type == "swiglu":
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = x @ p["w_up"]
+        if "b_up" in p:
+            h = h + p["b_up"]
+        if cfg.mlp_type == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        else:  # gelu
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    y = h @ p["w_down"]
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return y
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    angles = angles[..., None, :]                       # (..., s, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# embeddings / head
+# --------------------------------------------------------------------------
+
+def embedding_init(cfg: ArchConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"tok": embed_init(k1, (cfg.vocab_size, cfg.d_model), cfg.weight_dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), cfg.weight_dtype)
+    if cfg.pos_embed == "learned":
+        p["pos"] = embed_init(k3, (cfg.max_seq_len, cfg.d_model), cfg.weight_dtype)
+    return p
+
+
+def embed_tokens(cfg: ArchConfig, p, tokens, positions=None):
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.activation_dtype)
+    if cfg.pos_embed == "learned":
+        pos = positions if positions is not None else jnp.arange(tokens.shape[-1])
+        x = x + jnp.take(p["pos"], pos, axis=0).astype(x.dtype)
+    return x
+
+
+def lm_logits(cfg: ArchConfig, p, x):
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)

@@ -1,0 +1,57 @@
+"""The paper's ~130 kB classification MLP (784-40-10) as pure functions.
+
+Kept deliberately tiny and flat (a dict of arrays) so the federated
+simulator can vmap over a stacked per-agent copy of it cheaply.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.mnist_mlp import MLPTaskConfig
+
+Params = Dict[str, Any]
+
+
+def init_params(cfg: MLPTaskConfig, key) -> Params:
+    dims = (cfg.input_dim,) + tuple(cfg.hidden_dims) + (cfg.n_classes,)
+    params = {}
+    for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k = jax.random.split(key)
+        params[f"w{i}"] = jax.random.normal(k, (d_in, d_out), jnp.float32) \
+            * jnp.sqrt(2.0 / d_in)
+        params[f"b{i}"] = jnp.zeros((d_out,), jnp.float32)
+    return params
+
+
+def n_layers(params: Params) -> int:
+    return sum(1 for k in params if k.startswith("w"))
+
+
+def forward(params: Params, x: jax.Array) -> jax.Array:
+    """x: (..., input_dim) -> logits (..., n_classes)."""
+    L = n_layers(params)
+    h = x
+    for i in range(L):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < L - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss_fn(params: Params, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Mean cross-entropy."""
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+
+def accuracy(params: Params, x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.argmax(forward(params, x), axis=-1) == y)
+
+
+def param_bytes(params: Params) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(params))

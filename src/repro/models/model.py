@@ -1,0 +1,135 @@
+"""Top-level model: embeddings + block stack + LM head; train loss & decode.
+
+Handles the modality stubs per spec: VLM patch embeddings are projected and
+prepended to the token stream; audio (whisper) encoder frames are the
+cross-attention memory.  Everything else is the real backbone.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+from repro.models.config import ArchConfig
+from repro.models.layers import (dense_init, embed_tokens, embedding_init,
+                                 lm_logits, norm_apply, norm_init)
+
+
+def init_params(cfg: ArchConfig, key):
+    k_emb, k_stack, k_out, k_proj = jax.random.split(key, 4)
+    params = {
+        "embed": embedding_init(cfg, k_emb),
+        "stack": tf.stack_init(cfg, k_stack),
+        "final_norm": norm_init(cfg, cfg.d_model),
+    }
+    if cfg.encoder.kind == "vision":
+        params["patch_proj"] = dense_init(
+            k_proj, (cfg.encoder.d_embed, cfg.d_model), cfg.weight_dtype)
+    return params
+
+
+def _merge_inputs(cfg: ArchConfig, params, batch: Dict[str, Any]):
+    """Embed tokens; prepend projected patch embeddings for VLM."""
+    tokens = batch["tokens"]
+    S = tokens.shape[-1]
+    if cfg.encoder.kind == "vision":
+        patches = batch["patch_embeds"].astype(cfg.activation_dtype)
+        pe = patches @ params["patch_proj"]
+        n_p = pe.shape[1]
+        positions = jnp.arange(n_p + S)
+        x_tok = embed_tokens(cfg, params["embed"], tokens,
+                             positions[n_p:][None, :].repeat(tokens.shape[0], 0)
+                             if cfg.pos_embed == "learned" else None)
+        x = jnp.concatenate([pe, x_tok], axis=1)
+        return x, positions, n_p
+    x = embed_tokens(cfg, params["embed"], tokens)
+    return x, jnp.arange(S), 0
+
+
+def forward(cfg: ArchConfig, params, batch: Dict[str, Any]):
+    """Full-sequence forward (training / prefill). Returns (logits, aux)."""
+    x, positions, n_prefix = _merge_inputs(cfg, params, batch)
+    memory = batch.get("memory")
+    if memory is not None:
+        memory = memory.astype(cfg.activation_dtype)
+    x, aux = tf.stack_prefill(cfg, params["stack"], x, positions, memory)
+    x = norm_apply(cfg, params["final_norm"], x)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = lm_logits(cfg, params["embed"], x)
+    return logits, aux
+
+
+def loss_fn(cfg: ArchConfig, params, batch: Dict[str, Any]):
+    """Mean next-token cross-entropy over valid labels (+ MoE aux)."""
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    valid = (labels >= 0)
+    labels = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    task = jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+    aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+    return task + aux_w * aux, {"task_loss": task, "aux_loss": aux}
+
+
+def per_example_loss(cfg: ArchConfig, params, batch: Dict[str, Any]):
+    """Per-example mean NLL (B,) + MoE aux — the CSR-masked aggregation in
+    the federated train step weights these per agent."""
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    valid = (labels >= 0)
+    labels = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    per_ex = jnp.sum(nll * valid, axis=-1) / jnp.maximum(
+        jnp.sum(valid, axis=-1), 1)
+    return per_ex, aux
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    return tf.stack_init_cache(cfg, batch, cache_len)
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, cur_pos,
+                memory=None, patch_embeds=None):
+    """One decode step. tokens: (B, 1); cur_pos: (B,). Returns (logits, cache)."""
+    x = embed_tokens(cfg, params["embed"], tokens,
+                     cur_pos[:, None] if cfg.pos_embed == "learned" else None)
+    if memory is not None:
+        memory = memory.astype(cfg.activation_dtype)
+    x, new_cache = tf.stack_decode(cfg, params["stack"], cache, x, cur_pos,
+                                   memory)
+    x = norm_apply(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params["embed"], x)
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------
+# analytic parameter counts (from eval_shape — exact, no allocation)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+def count_params_analytic(cfg: ArchConfig, active_only: bool = False) -> int:
+    shapes = _param_shapes(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = int(np.prod(leaf.shape))
+        if active_only and cfg.moe is not None:
+            keys = "/".join(str(p) for p in path)
+            if any(w in keys for w in ("w_gate", "w_up", "w_down")) \
+                    and "shared" not in keys \
+                    and cfg.moe.n_experts in leaf.shape:
+                # routed expert tensor (..., E, ., .) — possibly layer-stacked
+                # (L, E, d, d_ff): scale to active experts
+                n = n * cfg.moe.top_k // cfg.moe.n_experts
+        total += n
+    return total

@@ -1,0 +1,186 @@
+"""Mamba-2 block via the chunked SSD (state-space duality) formulation.
+
+TPU adaptation: the recurrence is evaluated chunk-parallel — intra-chunk
+terms are dense (MXU-friendly) masked matmuls, inter-chunk state carry is a
+`lax.scan` over n_chunks.  State update per head: h_t = exp(dt·A)·h_{t-1}
++ dt·B_t ⊗ x_t ;  y_t = C_t·h_t + D·x_t   (scalar A per head, n_groups=1).
+
+Decode keeps an O(1) cache: (conv window, SSM state) — this is what makes
+`long_500k` trivial for SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import dense_init
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array       # (B, conv_dim-1, conv_channels) rolling input window
+    state: jax.Array      # (B, H, N, P) SSM state
+    pos: jax.Array        # (B,) step count
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.state_dim            # x, B, C all convolved
+    return d_inner, n_heads, conv_ch
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_inner, H, conv_ch = _dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, s.conv_dim - 1, conv_ch), dtype),
+        state=jnp.zeros((batch, H, s.state_dim, s.head_dim), jnp.float32),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def mamba_init(cfg: ArchConfig, key):
+    s, d = cfg.ssm, cfg.d_model
+    d_inner, H, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    wd = cfg.weight_dtype
+    return {
+        # projections: [z (gate), x, B, C, dt]
+        "w_in": dense_init(ks[0], (d, 2 * d_inner + 2 * s.state_dim + H), wd),
+        "conv_w": dense_init(ks[1], (s.conv_dim, conv_ch), wd, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), wd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm_scale": jnp.ones((d_inner,), wd),
+        "w_out": dense_init(ks[3], (d_inner, d), wd),
+    }
+
+
+def _split_proj(cfg: ArchConfig, p, x):
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    zxbcdt = x @ p["w_in"]
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * s.state_dim]
+    dt_raw = zxbcdt[..., -H:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(p, xbc, conv_dim: int):
+    """Depthwise causal conv over (B, S, C) with window `conv_dim`."""
+    pad = jnp.pad(xbc, ((0, 0), (conv_dim - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * p["conv_w"][i]
+              for i in range(conv_dim))
+    return jax.nn.silu((out + p["conv_b"]).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _gated_out(cfg, p, y, z, B, S):
+    d_inner, _, _ = _dims(cfg)
+    y = y.reshape(B, S, d_inner)
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(ms + 1e-6)).astype(y.dtype) * p["norm_scale"]
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return y @ p["w_out"]
+
+
+def mamba_prefill(cfg: ArchConfig, p, x):
+    """x: (B, S, d_model) -> (B, S, d_model). Chunked SSD scan."""
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    B, S, _ = x.shape
+    N, P, L = s.state_dim, s.head_dim, s.chunk_size
+
+    z, xbc, dt_raw = _split_proj(cfg, p, x)
+    xbc = _causal_conv(p, xbc, s.conv_dim)
+    xs = xbc[..., :d_inner].reshape(B, S, H, P)
+    Bm = xbc[..., d_inner:d_inner + N]                    # (B,S,N) shared heads
+    Cm = xbc[..., d_inner + N:]                           # (B,S,N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                              # (H,) negative
+    dA = dt * A                                           # (B,S,H) log-decay
+
+    # pad to chunk multiple
+    nc = -(-S // L)
+    pad = nc * L - S
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+    rs = lambda t, *tail: t.reshape(B, nc, L, *tail)
+    xs, Bm, Cm = rs(xs, H, P), rs(Bm, N), rs(Cm, N)
+    dt, dA = rs(dt, H), rs(dA, H)
+
+    cum = jnp.cumsum(dA, axis=2)                          # (B,nc,L,H)
+    # intra-chunk: decay matrix M[i,j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    M = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)        # (B,nc,L,L)
+    y_diag = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp",
+                        scores.astype(jnp.float32), M, dt, xs.astype(jnp.float32))
+
+    # chunk-final states: sum_j exp(cum_L - cum_j) * dt_j * B_j ⊗ x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,L,H)
+    chunk_states = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                              (decay_to_end * dt), Bm.astype(jnp.float32),
+                              xs.astype(jnp.float32))     # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,H) total decay
+
+    def carry_fn(h, inp):
+        st, dec = inp                                     # (B,H,N,P), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                   # emit state *before* chunk
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        carry_fn, h0,
+        (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)              # (B,nc,H,N,P)
+
+    # inter-chunk contribution: C_i · (decay from chunk start) · h_prev
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cm.astype(jnp.float32), jnp.exp(cum), h_prev)
+    y = (y_diag + y_inter) + p["D"][None, None, None, :, None] \
+        * xs.astype(jnp.float32)
+    y = y.reshape(B, nc * L, H, P)[:, :S]
+    return _gated_out(cfg, p, y.astype(x.dtype), z, B, S)
+
+
+def mamba_decode(cfg: ArchConfig, p, x, cache: MambaCache):
+    """x: (B, 1, d_model); O(1) state update."""
+    s = cfg.ssm
+    d_inner, H, conv_ch = _dims(cfg)
+    B = x.shape[0]
+    N, P = s.state_dim, s.head_dim
+
+    z, xbc_new, dt_raw = _split_proj(cfg, p, x)           # (B,1,·)
+    # rolling conv window
+    win = jnp.concatenate([cache.conv, xbc_new], axis=1)  # (B, conv_dim, C)
+    conv_out = jnp.einsum("bwc,wc->bc", win, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)  # (B,C)
+
+    xs = xbc[:, :d_inner].reshape(B, H, P)
+    Bm = xbc[:, d_inner:d_inner + N]
+    Cm = xbc[:, d_inner + N:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt * A)                                 # (B,H)
+
+    state = cache.state * dec[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, Bm.astype(jnp.float32), xs.astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), state) \
+        + p["D"][None, :, None] * xs.astype(jnp.float32)
+    out = _gated_out(cfg, p, y.astype(x.dtype)[:, None], z, B, 1)
+    new_cache = MambaCache(conv=win[:, 1:], state=state, pos=cache.pos + 1)
+    return out, new_cache

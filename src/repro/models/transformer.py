@@ -1,0 +1,289 @@
+"""Block assembly: composable residual blocks -> scanned layer stacks.
+
+A layer *pattern* is a tuple of sub-block kinds; ``cfg.layout_`` is a list of
+(pattern_name, repeat) segments.  Each segment stacks its per-layer params
+with vmap and applies them with ``lax.scan`` (one compiled body per segment —
+small HLO, fast compile, TPU-friendly).
+
+Supported kinds: attn (GQA/MLA), ffn (mlp/moe), xattn, mamba, mlstm, slstm.
+The ``zamba_super`` pattern implements Zamba2's weight-shared attention block
+applied before every run of `shared_every` Mamba blocks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import mlp_apply, mlp_init, norm_apply, norm_init
+
+PATTERNS = {
+    "decoder": ("attn", "ffn"),
+    "encdec": ("attn", "xattn", "ffn"),
+    "mamba": ("mamba",),
+    "mlstm": ("mlstm",),
+    "slstm": ("slstm",),
+}
+
+
+# --------------------------------------------------------------------------
+# sub-block init / apply
+# --------------------------------------------------------------------------
+
+def sub_init(cfg: ArchConfig, kind: str, key):
+    kn, kb = jax.random.split(key)
+    if kind == "attn":
+        inner = (attn_mod.mla_init if cfg.attn_impl == "mla"
+                 else attn_mod.gqa_init)(cfg, kb)
+        return {"norm": norm_init(cfg, cfg.d_model), "inner": inner}
+    if kind == "ffn":
+        if cfg.moe is not None:
+            return {"norm": norm_init(cfg, cfg.d_model),
+                    "inner": moe_mod.moe_init(cfg, kb)}
+        return {"norm": norm_init(cfg, cfg.d_model),
+                "inner": mlp_init(cfg, kb)}
+    if kind == "xattn":
+        return {"norm": norm_init(cfg, cfg.d_model),
+                "inner": attn_mod.xattn_init(cfg, kb)}
+    if kind == "mamba":
+        return {"norm": norm_init(cfg, cfg.d_model),
+                "inner": ssm_mod.mamba_init(cfg, kb)}
+    if kind == "mlstm":
+        return {"norm": norm_init(cfg, cfg.d_model),
+                "inner": xlstm_mod.mlstm_init(cfg, kb)}
+    if kind == "slstm":
+        return {"norm": norm_init(cfg, cfg.d_model),
+                "inner": xlstm_mod.slstm_init(cfg, kb)}
+    raise ValueError(kind)
+
+
+def sub_prefill(cfg: ArchConfig, kind: str, p, x, positions, memory):
+    """Returns (residual delta, aux_loss)."""
+    xn = norm_apply(cfg, p["norm"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        if cfg.attn_impl == "mla":
+            return attn_mod.mla_prefill(cfg, p["inner"], xn, positions), aux
+        return attn_mod.gqa_prefill(cfg, p["inner"], xn, positions), aux
+    if kind == "ffn":
+        if cfg.moe is not None:
+            out, aux = moe_mod.moe_apply(cfg, p["inner"], xn)
+            return out, aux
+        return mlp_apply(cfg, p["inner"], xn), aux
+    if kind == "xattn":
+        return attn_mod.xattn_apply(cfg, p["inner"], xn, memory), aux
+    if kind == "mamba":
+        return ssm_mod.mamba_prefill(cfg, p["inner"], xn), aux
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_prefill(cfg, p["inner"], xn), aux
+    if kind == "slstm":
+        return xlstm_mod.slstm_prefill(cfg, p["inner"], xn), aux
+    raise ValueError(kind)
+
+
+def sub_init_cache(cfg: ArchConfig, kind: str, batch: int, cache_len: int):
+    dt = cfg.activation_dtype
+    if kind == "attn":
+        length = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+        if cfg.attn_impl == "mla":
+            return attn_mod.init_mla_cache(batch, length, cfg, dt)
+        return attn_mod.init_kv_cache(batch, length, cfg.n_kv_heads,
+                                      cfg.head_dim_, dt)
+    if kind == "mamba":
+        return ssm_mod.init_mamba_cache(cfg, batch, dt)
+    if kind == "mlstm":
+        return xlstm_mod.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm_mod.init_slstm_state(cfg, batch)
+    return None
+
+
+def sub_decode(cfg: ArchConfig, kind: str, p, x, cache, cur_pos, memory):
+    """Returns (residual delta, new cache)."""
+    xn = norm_apply(cfg, p["norm"], x)
+    if kind == "attn":
+        if cfg.attn_impl == "mla":
+            return attn_mod.mla_decode(cfg, p["inner"], xn, cache, cur_pos)
+        return attn_mod.gqa_decode(cfg, p["inner"], xn, cache, cur_pos)
+    if kind == "ffn":
+        if cfg.moe is not None:
+            out, _ = moe_mod.moe_apply(cfg, p["inner"], xn)
+            return out, None
+        return mlp_apply(cfg, p["inner"], xn), None
+    if kind == "xattn":
+        return attn_mod.xattn_apply(cfg, p["inner"], xn, memory), None
+    if kind == "mamba":
+        return ssm_mod.mamba_decode(cfg, p["inner"], xn, cache)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_decode(cfg, p["inner"], xn, cache)
+    if kind == "slstm":
+        return xlstm_mod.slstm_decode(cfg, p["inner"], xn, cache)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# layer (pattern) level
+# --------------------------------------------------------------------------
+
+def layer_init(cfg: ArchConfig, pattern: str, key):
+    kinds = PATTERNS[pattern]
+    keys = jax.random.split(key, len(kinds))
+    return {k: sub_init(cfg, k, kk) for k, kk in zip(kinds, keys)}
+
+
+def layer_prefill(cfg, pattern, p, x, positions, memory):
+    aux = jnp.zeros((), jnp.float32)
+    for kind in PATTERNS[pattern]:
+        delta, a = sub_prefill(cfg, kind, p[kind], x, positions, memory)
+        x = x + delta
+        aux = aux + a
+    return x, aux
+
+
+def layer_init_cache(cfg, pattern, batch, cache_len):
+    return {k: sub_init_cache(cfg, k, batch, cache_len)
+            for k in PATTERNS[pattern]
+            if sub_init_cache(cfg, k, batch, cache_len) is not None}
+
+
+def layer_decode(cfg, pattern, p, x, cache, cur_pos, memory):
+    new_cache = {}
+    for kind in PATTERNS[pattern]:
+        delta, nc = sub_decode(cfg, kind, p[kind], x,
+                               cache.get(kind) if cache else None,
+                               cur_pos, memory)
+        x = x + delta
+        if nc is not None:
+            new_cache[kind] = nc
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# stack level: segments of scanned layers (+ zamba hybrid special case)
+# --------------------------------------------------------------------------
+
+def stack_init(cfg: ArchConfig, key):
+    params: Dict[str, Any] = {"segments": []}
+    segs = list(cfg.layout_)
+    keys = jax.random.split(key, len(segs) + 1)
+    for (pattern, repeat), k in zip(segs, keys[:-1]):
+        if pattern == "zamba_super":
+            n_super = repeat
+            km, ks = jax.random.split(k)
+            mamba_keys = jax.random.split(km, n_super * cfg.shared_every) \
+                .reshape(n_super, cfg.shared_every)
+            stacked = jax.vmap(jax.vmap(
+                lambda kk: layer_init(cfg, "mamba", kk)))(mamba_keys)
+            params["segments"].append(stacked)
+            params["shared_attn"] = layer_init(cfg, "decoder", ks)
+        else:
+            lkeys = jax.random.split(k, repeat)
+            params["segments"].append(
+                jax.vmap(lambda kk: layer_init(cfg, pattern, kk))(lkeys))
+    return params
+
+
+def stack_prefill(cfg: ArchConfig, params, x, positions, memory=None,
+                  remat: bool = True):
+    """Forward through all segments.  Each layer application is wrapped in
+    jax.checkpoint (recompute-on-backward) so scanned 32k-sequence training
+    keeps O(layers · B · S · d) residual memory instead of saving every
+    attention/SSM intermediate."""
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def lp(pattern):
+        f = lambda p, h, pos, mem: layer_prefill(cfg, pattern, p, h, pos, mem)
+        return jax.checkpoint(f) if remat else f
+
+    for seg_params, (pattern, repeat) in zip(params["segments"], cfg.layout_):
+        if pattern == "zamba_super":
+            shared = params["shared_attn"]
+            attn_f, mamba_f = lp("decoder"), lp("mamba")
+
+            def super_body(carry, layer_p):
+                h, aux = carry
+                h, a0 = attn_f(shared, h, positions, memory)
+
+                def inner(c, lpm):
+                    hh, au = c
+                    hh, a = mamba_f(lpm, hh, positions, memory)
+                    return (hh, au + a), None
+
+                (h, aux), _ = jax.lax.scan(inner, (h, aux + a0), layer_p)
+                return (h, aux), None
+
+            (x, aux_total), _ = jax.lax.scan(
+                super_body, (x, aux_total), seg_params)
+        else:
+            layer_f = lp(pattern)
+
+            def body(carry, layer_p, _f=layer_f):
+                h, aux = carry
+                h, a = _f(layer_p, h, positions, memory)
+                return (h, aux + a), None
+
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), seg_params)
+    return x, aux_total
+
+
+def stack_init_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    caches = []
+    for pattern, repeat in cfg.layout_:
+        if pattern == "zamba_super":
+            attn_c = layer_init_cache(cfg, "decoder", batch, cache_len)
+            mamba_c = layer_init_cache(cfg, "mamba", batch, cache_len)
+            stack = lambda c, n: jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (n,) + t.shape).copy(), c)
+            caches.append({"shared": stack(attn_c, repeat),
+                           "mamba": jax.tree.map(
+                               lambda t: jnp.broadcast_to(
+                                   t, (repeat, cfg.shared_every) + t.shape
+                               ).copy(), mamba_c)})
+        else:
+            c = layer_init_cache(cfg, pattern, batch, cache_len)
+            caches.append(jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (repeat,) + t.shape).copy(), c))
+    return caches
+
+
+def stack_decode(cfg: ArchConfig, params, caches, x, cur_pos, memory=None):
+    new_caches = []
+    for seg_params, seg_cache, (pattern, repeat) in zip(
+            params["segments"], caches, cfg.layout_):
+        if pattern == "zamba_super":
+            shared = params["shared_attn"]
+
+            def super_body(h, scan_in):
+                layer_p, c_attn, c_mamba = scan_in
+                h, nc_attn = layer_decode(cfg, "decoder", shared, h, c_attn,
+                                          cur_pos, memory)
+
+                def inner(hh, lp_c):
+                    lp, cc = lp_c
+                    hh, nc = layer_decode(cfg, "mamba", lp, hh, cc, cur_pos,
+                                          memory)
+                    return hh, nc
+
+                h, nc_mamba = jax.lax.scan(inner, h, (layer_p, c_mamba))
+                return h, (nc_attn, nc_mamba)
+
+            x, (nc_a, nc_m) = jax.lax.scan(
+                super_body, x, (seg_params, seg_cache["shared"],
+                                seg_cache["mamba"]))
+            new_caches.append({"shared": nc_a, "mamba": nc_m})
+        else:
+            def body(h, scan_in, _pattern=pattern):
+                layer_p, cc = scan_in
+                h, nc = layer_decode(cfg, _pattern, layer_p, h, cc, cur_pos,
+                                     memory)
+                return h, nc
+
+            x, nc = jax.lax.scan(body, x, (seg_params, seg_cache))
+            new_caches.append(nc)
+    return x, new_caches

@@ -1,0 +1,65 @@
+"""Proximal-aware Adam (AdamW) — used by the federated LLM-finetune example
+and available as the agent optimizer in the production train step.
+
+The dual proximal pull enters the *gradient* (before the moment updates), so
+Adam sees the full H²-Fed objective gradient — equivalent to autodiff through
+Eq. 6 but with no extra graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jax.Array
+
+
+def init(cfg: AdamConfig, params: PyTree) -> AdamState:
+    z = lambda: jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), params)
+    return AdamState(mu=z(), nu=z(), count=jnp.zeros((), jnp.int32))
+
+
+def step(cfg: AdamConfig, params: PyTree, grads: PyTree, state: AdamState,
+         *, anchors: Tuple[Tuple[float, PyTree], ...] = ()
+         ) -> Tuple[PyTree, AdamState]:
+    count = state.count + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    anchor_trees = [a for _, a in anchors]
+    mus = [m for m, _ in anchors]
+
+    def upd(w, g, m, v, *anc):
+        wf = w.astype(jnp.float32)
+        gf = g.astype(jnp.float32)
+        for mu_c, a in zip(mus, anc):
+            gf = gf + mu_c * (wf - a.astype(jnp.float32))
+        m_new = cfg.b1 * m + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        upd_ = (m_new / c1) / (jnp.sqrt(v_new / c2) + cfg.eps)
+        if cfg.weight_decay:
+            upd_ = upd_ + cfg.weight_decay * wf
+        return (wf - cfg.lr * upd_).astype(w.dtype), m_new, v_new
+
+    trips = jax.tree.map(upd, params, grads, state.mu, state.nu, *anchor_trees)
+    is3 = lambda t: isinstance(t, tuple) and len(t) == 3
+    new_p = jax.tree.map(lambda t: t[0], trips, is_leaf=is3)
+    new_m = jax.tree.map(lambda t: t[1], trips, is_leaf=is3)
+    new_v = jax.tree.map(lambda t: t[2], trips, is_leaf=is3)
+    return new_p, AdamState(mu=new_m, nu=new_v, count=count)

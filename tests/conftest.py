@@ -1,0 +1,38 @@
+"""Shared fixtures.  NOTE: device count is NOT forced here — smoke tests and
+benches see the single real CPU device; only the dry-run (a subprocess)
+creates 512 placeholder devices (system spec §Multi-pod dry-run)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def tiny_task():
+    """Small synthetic classification task shared across federated tests."""
+    from repro.data.synthetic import mnist_class_task
+    train, test = mnist_class_task(n_train=3000, n_test=600, seed=0)
+    return train, test
+
+
+@pytest.fixture(scope="session")
+def mlp_params():
+    from repro.configs.mnist_mlp import CONFIG
+    from repro.models import mlp
+    return mlp.init_params(CONFIG, jax.random.key(42))
+
+
+@pytest.fixture(scope="session")
+def fed_small(tiny_task):
+    """Small federated split: 20 agents, 4 RSUs (scenario II)."""
+    from repro.data.partition import scenario_two
+    train, _ = tiny_task
+    return scenario_two(train, n_agents=20, n_rsus=4, seed=0)
+
+
+def rand(shape, dtype=np.float32, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(dtype)

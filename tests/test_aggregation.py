@@ -1,0 +1,119 @@
+"""Property tests for hierarchical CSR-masked aggregation (Alg. 2/3)."""
+from __future__ import annotations
+
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.aggregation import (blend_on_mass, broadcast_to_agents,
+                                    cloud_aggregate, gather_rsu_for_agents,
+                                    masked_weighted_mean, rsu_aggregate)
+
+F32 = np.float32
+
+
+def _stacked(seed, a=8, shape=(4, 3)):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(a,) + shape), F32)}
+
+
+class TestMaskedWeightedMean:
+    def test_uniform_weights_is_mean(self):
+        s = _stacked(0)
+        got = masked_weighted_mean(s, jnp.ones(8))
+        np.testing.assert_allclose(got["w"], np.mean(s["w"], axis=0),
+                                   atol=1e-6)
+
+    def test_mask_zero_entries_excluded(self):
+        s = _stacked(1)
+        mask = jnp.asarray([1, 1, 0, 0, 0, 0, 0, 0], F32)
+        got = masked_weighted_mean(s, jnp.ones(8), mask)
+        np.testing.assert_allclose(got["w"], np.mean(s["w"][:2], axis=0),
+                                   atol=1e-6)
+
+    def test_all_masked_falls_back_to_mean(self):
+        s = _stacked(2)
+        got = masked_weighted_mean(s, jnp.ones(8), jnp.zeros(8))
+        np.testing.assert_allclose(got["w"], np.mean(s["w"], axis=0),
+                                   atol=1e-6)
+
+    @settings(max_examples=40, deadline=None)
+    @given(w=hnp.arrays(F32, (6,), elements=st.floats(0.0, 10.0, width=32)),
+           seed=st.integers(0, 100))
+    def test_convex_combination_bounds(self, w, seed):
+        """Aggregate lies inside the per-coordinate min/max envelope."""
+        s = _stacked(seed, a=6)
+        got = np.asarray(masked_weighted_mean(s, jnp.asarray(w))["w"])
+        lo = s["w"].min(axis=0) - 1e-5
+        hi = s["w"].max(axis=0) + 1e-5
+        assert (got >= lo).all() and (got <= hi).all()
+
+    def test_weight_scale_invariance(self):
+        s = _stacked(3)
+        w = jnp.asarray(np.random.default_rng(0).uniform(0.1, 2, 8), F32)
+        a = masked_weighted_mean(s, w)
+        b = masked_weighted_mean(s, w * 7.3)
+        np.testing.assert_allclose(a["w"], b["w"], atol=1e-5)
+
+
+class TestRSUAggregate:
+    def test_matches_manual_segments(self):
+        rng = np.random.default_rng(0)
+        A, R = 10, 3
+        s = {"w": jnp.asarray(rng.normal(size=(A, 4)), F32)}
+        weights = jnp.asarray(rng.uniform(1, 5, A), F32)
+        mask = jnp.asarray(rng.integers(0, 2, A), F32)
+        assign = jnp.asarray(rng.integers(0, R, A), jnp.int32)
+        got, mass = rsu_aggregate(s, weights, mask, assign, R)
+        for r in range(R):
+            sel = (np.asarray(assign) == r)
+            wm = np.asarray(weights) * np.asarray(mask)
+            m = (wm * sel).sum()
+            np.testing.assert_allclose(float(mass[r]), m, rtol=1e-6)
+            if m > 0:
+                exp = (np.asarray(s["w"]) * (wm * sel)[:, None]).sum(0) / m
+                np.testing.assert_allclose(np.asarray(got["w"])[r], exp,
+                                           atol=1e-5)
+
+    def test_blend_keeps_old_on_empty_cohort(self):
+        new = {"w": jnp.ones((3, 2))}
+        old = {"w": jnp.full((3, 2), 7.0)}
+        mass = jnp.asarray([1.0, 0.0, 2.0])
+        out = blend_on_mass(new, old, mass)
+        np.testing.assert_allclose(out["w"],
+                                   [[1, 1], [7, 7], [1, 1]])
+
+    def test_identity_when_single_rsu_full_mask(self):
+        """One RSU, all connected, equal weights == plain FedAvg mean."""
+        s = _stacked(5, a=4)
+        got, _ = rsu_aggregate(s, jnp.ones(4), jnp.ones(4),
+                               jnp.zeros(4, jnp.int32), 1)
+        np.testing.assert_allclose(np.asarray(got["w"])[0],
+                                   np.mean(s["w"], axis=0), atol=1e-6)
+
+
+class TestHierarchyComposition:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 100))
+    def test_two_level_equals_flat_when_balanced(self, seed):
+        """Balanced cohorts + equal weights: RSU-then-cloud == global mean
+        (the hierarchy is lossless in the homogeneous limit)."""
+        rng = np.random.default_rng(seed)
+        A, R = 12, 3
+        s = {"w": jnp.asarray(rng.normal(size=(A, 5)), F32)}
+        assign = jnp.asarray(np.arange(A) % R, jnp.int32)
+        rsu, mass = rsu_aggregate(s, jnp.ones(A), jnp.ones(A), assign, R)
+        cloud = cloud_aggregate(rsu, mass)
+        np.testing.assert_allclose(np.asarray(cloud["w"]),
+                                   np.mean(s["w"], axis=0), atol=1e-5)
+
+    def test_broadcast_gather_roundtrip(self):
+        p = {"w": jnp.arange(6.0).reshape(3, 2)}
+        stacked = broadcast_to_agents(p, 5)
+        assert stacked["w"].shape == (5, 3, 2)
+        picked = gather_rsu_for_agents(
+            {"w": jnp.stack([p["w"], p["w"] * 2])},
+            jnp.asarray([0, 1, 1], jnp.int32))
+        np.testing.assert_allclose(picked["w"][2], p["w"] * 2)

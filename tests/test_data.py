@@ -1,0 +1,150 @@
+"""Tests for synthetic datasets, Non-IID partitioners, and pipelines."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.data.partition import (dirichlet, pretrain_split, scenario_one,
+                                  scenario_two)
+from repro.data.pipeline import agent_minibatch, classification_batches, \
+    lm_sequences
+from repro.data.synthetic import (Dataset, lm_token_task, mnist_class_task,
+                                  N_CLASSES)
+from repro.fedsim.topology import (balanced_assignment, cohort_sizes,
+                                   unbalanced_assignment)
+
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="module")
+def ds():
+    train, _ = mnist_class_task(n_train=4000, n_test=100, seed=0)
+    return train
+
+
+class TestSynthetic:
+    def test_shapes_and_ranges(self, ds):
+        assert ds.x.shape == (4000, 784) and ds.y.shape == (4000,)
+        assert ds.x.min() >= 0.0 and ds.x.max() <= 1.5
+        assert set(np.unique(ds.y)) <= set(range(N_CLASSES))
+
+    def test_deterministic(self):
+        a, _ = mnist_class_task(n_train=100, n_test=10, seed=3)
+        b, _ = mnist_class_task(n_train=100, n_test=10, seed=3)
+        np.testing.assert_array_equal(a.x, b.x)
+
+    def test_learnable_structure(self, ds):
+        """Class-conditional means must be separable (else the FL experiment
+        could not reach the paper's >90%)."""
+        means = np.stack([ds.x[ds.y == c].mean(0) for c in range(N_CLASSES)])
+        # nearest-mean classifier beats chance by a wide margin
+        d = ((ds.x[:, None, :] - means[None]) ** 2).sum(-1)
+        acc = (d.argmin(1) == ds.y).mean()
+        assert acc > 0.5, acc
+
+    def test_lm_tokens_markov_structure(self):
+        toks = lm_token_task(vocab=64, n_tokens=4096, seed=0)
+        assert toks.shape == (4096,) and toks.min() >= 0 and toks.max() < 64
+        # order-2 structure: conditional entropy < unconditional entropy
+        uni = np.bincount(toks, minlength=64) / len(toks)
+        h_uni = -(uni[uni > 0] * np.log(uni[uni > 0])).sum()
+        pair_counts = {}
+        for t in range(2, len(toks)):
+            pair_counts.setdefault((toks[t - 2], toks[t - 1]),
+                                   []).append(toks[t])
+        h_cond, n = 0.0, 0
+        for nxt in pair_counts.values():
+            if len(nxt) < 5:
+                continue
+            p = np.bincount(nxt, minlength=64) / len(nxt)
+            h_cond += -(p[p > 0] * np.log(p[p > 0])).sum() * len(nxt)
+            n += len(nxt)
+        assert h_cond / max(n, 1) < 0.8 * h_uni
+
+
+class TestPretrainSplit:
+    def test_excluded_labels_absent(self, ds):
+        pre, fed = pretrain_split(ds, excluded_labels=[7, 8, 9], frac=0.2)
+        assert not np.isin(pre.y, [7, 8, 9]).any()
+        assert np.isin(fed.y, [7, 8, 9]).any()       # still in public pool
+
+    def test_no_overlap_and_coverage(self, ds):
+        pre, fed = pretrain_split(ds, excluded_labels=[9], frac=0.1)
+        assert len(pre.y) + len(fed.y) <= len(ds.y)
+        assert len(fed.y) >= 0.85 * len(ds.y)
+
+
+class TestScenarios:
+    def test_scenario_one_rsu_label_windows(self, ds):
+        fed = scenario_one(ds, n_agents=20, n_rsus=4, labels_per_rsu=2)
+        assert fed.n_agents == 20
+        for a in range(20):
+            labs = set(np.unique(fed.y[a][:fed.n_per_agent[a]]).tolist())
+            r = fed.rsu_assign[a]
+            allowed = set(((r + i) % N_CLASSES) for i in range(2))
+            assert labs <= allowed, (a, labs, allowed)
+
+    def test_scenario_one_agents_within_rsu_iid(self, ds):
+        """Scenario I: all agents at one RSU share the same label set."""
+        fed = scenario_one(ds, n_agents=20, n_rsus=4)
+        for r in range(4):
+            sets = [frozenset(np.unique(fed.y[a][:fed.n_per_agent[a]]))
+                    for a in range(20) if fed.rsu_assign[a] == r]
+            assert len(set(sets)) == 1
+
+    def test_scenario_two_rsu_covers_labels(self, ds):
+        """Scenario II: agents are shards but each RSU cohort is diverse."""
+        fed = scenario_two(ds, n_agents=40, n_rsus=4, labels_per_agent=2)
+        for r in range(4):
+            labs = set()
+            for a in range(40):
+                if fed.rsu_assign[a] == r:
+                    labs |= set(np.unique(
+                        fed.y[a][:fed.n_per_agent[a]]).tolist())
+            assert len(labs) >= 6, (r, labs)   # near-full label coverage
+
+    def test_dirichlet_all_agents_nonempty(self, ds):
+        fed = dirichlet(ds, n_agents=30, n_rsus=5, alpha=0.3)
+        assert (fed.n_per_agent >= 8).all()
+
+    def test_padding_preserves_weights(self, ds):
+        fed = scenario_two(ds, n_agents=10, n_rsus=2)
+        # padded rows repeat real data; weights use the true n
+        assert fed.x.shape[1] >= fed.n_per_agent.max()
+        assert (fed.n_per_agent > 0).all()
+
+
+class TestPipelines:
+    def test_classification_batches_cover_epoch(self, ds):
+        seen = 0
+        for xb, yb in classification_batches(ds, 256):
+            assert xb.shape == (256, 784)
+            seen += len(yb)
+        assert seen >= len(ds.y) - 256
+
+    def test_agent_minibatch_cyclic(self):
+        x = jnp.arange(10.0)[:, None]
+        y = jnp.arange(10)
+        xb, yb = agent_minibatch(x, y, jnp.asarray(3), 4)
+        np.testing.assert_array_equal(np.asarray(yb), [2, 3, 4, 5])
+        xb, yb = agent_minibatch(x, y, jnp.asarray(2), 4)
+        np.testing.assert_array_equal(np.asarray(yb), [8, 9, 0, 1])
+
+    def test_lm_sequences_shapes(self):
+        toks = lm_token_task(vocab=32, n_tokens=2048, seed=1)
+        it = lm_sequences(toks, batch=4, seq=16)
+        x, y = next(it)
+        assert x.shape == (4, 16) and y.shape == (4, 16)
+        np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
+
+
+class TestTopology:
+    def test_balanced(self):
+        a = balanced_assignment(10, 3)
+        assert cohort_sizes(a, 3).tolist() == [4, 3, 3]
+
+    def test_unbalanced_covers_all_rsus(self):
+        a = unbalanced_assignment(100, 10, alpha=0.5, seed=1)
+        sizes = cohort_sizes(a, 10)
+        assert sizes.sum() == 100 and (sizes >= 1).all()
+        assert sizes.max() > sizes.min()     # actually unbalanced

@@ -1,0 +1,103 @@
+"""Unit + property tests for the H²-Fed objective (paper Eq. 4/6, Alg. 1)."""
+from __future__ import annotations
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.h2fed import (H2FedParams, dual_proximal_penalty,
+                              h2fed_objective, proximal_grad_terms,
+                              proximal_sgd_step, sq_norm, tree_sub)
+
+F32 = np.float32
+
+
+def _tree(seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(5, 3)) * scale, F32),
+            "b": jnp.asarray(rng.normal(size=(3,)) * scale, F32)}
+
+
+class TestPenalty:
+    def test_zero_when_at_anchors(self):
+        w = _tree(0)
+        assert float(dual_proximal_penalty(w, w, w, 0.1, 0.2)) == 0.0
+
+    def test_zero_when_mu_zero(self):
+        w, a1, a2 = _tree(0), _tree(1), _tree(2)
+        assert float(dual_proximal_penalty(w, a1, a2, 0.0, 0.0)) == 0.0
+
+    def test_matches_closed_form(self):
+        w, a1, a2 = _tree(0), _tree(1), _tree(2)
+        mu1, mu2 = 0.3, 0.7
+        expected = 0.5 * mu1 * float(sq_norm(tree_sub(w, a1))) \
+            + 0.5 * mu2 * float(sq_norm(tree_sub(w, a2)))
+        got = float(dual_proximal_penalty(w, a1, a2, mu1, mu2))
+        np.testing.assert_allclose(got, expected, rtol=1e-6)
+
+    @settings(max_examples=30, deadline=None)
+    @given(mu1=st.floats(0, 1), mu2=st.floats(0, 1),
+           seed=st.integers(0, 100))
+    def test_nonnegative(self, mu1, mu2, seed):
+        w, a1, a2 = _tree(seed), _tree(seed + 1), _tree(seed + 2)
+        assert float(dual_proximal_penalty(w, a1, a2, mu1, mu2)) >= 0.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 50), mu1=st.floats(0.001, 1),
+           mu2=st.floats(0.001, 1))
+    def test_autodiff_matches_closed_form_grad(self, seed, mu1, mu2):
+        """∇penalty == mu1(w−a1) + mu2(w−a2) — the fused-kernel identity."""
+        w, a1, a2 = _tree(seed), _tree(seed + 1), _tree(seed + 2)
+        auto = jax.grad(
+            lambda p: dual_proximal_penalty(p, a1, a2, mu1, mu2))(w)
+        closed = proximal_grad_terms(w, a1, a2, mu1, mu2)
+        for ga, gc in zip(jax.tree.leaves(auto), jax.tree.leaves(closed)):
+            np.testing.assert_allclose(ga, gc, atol=1e-5, rtol=1e-5)
+
+
+class TestObjective:
+    def test_reduces_to_task_loss(self):
+        """mu1=mu2=0 ⇒ objective == F(w) (FedAvg limit, paper Sec. V(i))."""
+        w, a1, a2 = _tree(0), _tree(1), _tree(2)
+        task = lambda p: sq_norm(p)
+        hp = H2FedParams(mu1=0.0, mu2=0.0)
+        obj = h2fed_objective(task, hp)
+        np.testing.assert_allclose(float(obj(w, a1, a2)), float(task(w)),
+                                   rtol=1e-6)
+
+    def test_penalty_pulls_toward_anchor(self):
+        """Gradient step with large mu moves w toward the anchors."""
+        w, anchor = _tree(0, scale=2.0), _tree(1, scale=0.1)
+        hp = H2FedParams(mu1=5.0, mu2=5.0, lr=0.05)
+        zero_g = jax.tree.map(jnp.zeros_like, w)
+        before = float(sq_norm(tree_sub(w, anchor)))
+        w2 = proximal_sgd_step(w, zero_g, anchor, anchor, hp)
+        after = float(sq_norm(tree_sub(w2, anchor)))
+        assert after < before
+
+    def test_proximal_step_matches_autodiff(self):
+        """proximal_sgd_step == SGD on the full Eq. 6 objective."""
+        w, a1, a2 = _tree(0), _tree(1), _tree(2)
+        hp = H2FedParams(mu1=0.2, mu2=0.1, lr=0.03)
+        task = lambda p: 0.5 * sq_norm(p)
+        g = jax.grad(task)(w)
+        got = proximal_sgd_step(w, g, a1, a2, hp)
+        full = jax.grad(h2fed_objective(task, hp))(w, a1, a2)
+        want = jax.tree.map(lambda x, gg: x - hp.lr * gg, w, full)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+class TestParams:
+    def test_validate_accepts_defaults(self):
+        H2FedParams().validate()
+
+    @pytest.mark.parametrize("kw", [dict(mu1=-1.0), dict(lar=0),
+                                    dict(local_epochs=0), dict(n_layers=3)])
+    def test_validate_rejects(self, kw):
+        with pytest.raises(AssertionError):
+            H2FedParams(**kw).validate()

@@ -1,0 +1,89 @@
+"""Tests for the CSR/SCD/FSR connectivity model (paper Sec. III, Tab. I)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.heterogeneity import (HeterogeneityModel, connectivity_trace,
+                                      init_conn_state, sample_epochs,
+                                      step_connectivity)
+
+
+class TestConnectivity:
+    def test_csr_one_always_connected(self):
+        het = HeterogeneityModel(csr=1.0, scd=1)
+        masks = connectivity_trace(jax.random.key(0), 50, 20, het)
+        assert bool(jnp.all(masks))
+
+    def test_csr_zero_never_connected(self):
+        het = HeterogeneityModel(csr=0.0, scd=1)
+        masks = connectivity_trace(jax.random.key(0), 50, 20, het)
+        assert not bool(jnp.any(masks))
+
+    @pytest.mark.parametrize("csr", [0.1, 0.5, 0.9])
+    def test_long_run_connection_fraction_tracks_csr(self, csr):
+        """With SCD=1 the stationary connected fraction equals CSR."""
+        het = HeterogeneityModel(csr=csr, scd=1)
+        masks = connectivity_trace(jax.random.key(1), 200, 300, het)
+        frac = float(jnp.mean(masks.astype(jnp.float32)))
+        assert abs(frac - csr) < 0.03, (frac, csr)
+
+    def test_scd_holds_connection_for_duration(self):
+        """Once drawn, the connection persists exactly SCD rounds."""
+        het = HeterogeneityModel(csr=1.0, scd=4)
+        state = init_conn_state(3)
+        runs = []
+        key = jax.random.key(0)
+        for r in range(9):
+            key, k = jax.random.split(key)
+            state, mask = step_connectivity(k, state, het)
+            runs.append(np.asarray(mask))
+        assert np.all(np.stack(runs))  # csr=1: never drops
+
+        # csr=0 after a forced connect: stays up exactly scd-1 more rounds
+        state = init_conn_state(2)
+        state, m0 = step_connectivity(jax.random.key(2), state,
+                                      HeterogeneityModel(csr=1.0, scd=3))
+        assert bool(m0.all())
+        het0 = HeterogeneityModel(csr=0.0, scd=3)
+        ups = []
+        for r in range(4):
+            state, m = step_connectivity(jax.random.fold_in(key, r), state,
+                                         het0)
+            ups.append(bool(m.all()))
+        assert ups == [True, True, False, False]
+
+    def test_deterministic_given_key(self):
+        het = HeterogeneityModel(csr=0.5, scd=2)
+        a = connectivity_trace(jax.random.key(7), 30, 40, het)
+        b = connectivity_trace(jax.random.key(7), 30, 40, het)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestFSR:
+    def test_fsr_one_all_full(self):
+        e = sample_epochs(jax.random.key(0), 100,
+                          HeterogeneityModel(fsr=1.0), 5)
+        assert bool(jnp.all(e == 5))
+
+    def test_fsr_zero_all_partial(self):
+        e = sample_epochs(jax.random.key(0), 1000,
+                          HeterogeneityModel(fsr=0.0), 5)
+        assert bool(jnp.all(e < 5)) and bool(jnp.all(e >= 0))
+
+    def test_fraction_full_tracks_fsr(self):
+        e = sample_epochs(jax.random.key(3), 5000,
+                          HeterogeneityModel(fsr=0.7), 4)
+        frac = float(jnp.mean((e == 4).astype(jnp.float32)))
+        # partial draws can also land on 4? no: randint(0, 4) < 4.
+        assert abs(frac - 0.7) < 0.03
+
+
+class TestValidation:
+    @pytest.mark.parametrize("kw", [dict(csr=1.5), dict(csr=-0.1),
+                                    dict(fsr=2.0), dict(scd=0), dict(lar=0)])
+    def test_rejects_bad(self, kw):
+        with pytest.raises(AssertionError):
+            HeterogeneityModel(**kw).validate()

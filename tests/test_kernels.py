@@ -1,0 +1,226 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.dual_proximal_sgd import dual_proximal_sgd, \
+    dual_proximal_sgd_tree
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.masked_hier_agg import (build_weight_matrix, cloud_agg,
+                                           masked_hier_agg,
+                                           weighted_agg_matmul)
+
+INTERP = dict(interpret=True)
+
+
+def _rand(shape, dtype, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+ATTN_SWEEP = [
+    # (B, S, H, KV, D, window, causal)
+    (1, 64, 2, 2, 32, 0, True),        # MHA
+    (2, 128, 4, 2, 64, 0, True),       # GQA 2:1
+    (1, 100, 8, 2, 64, 0, True),       # ragged S (padding path)
+    (1, 128, 4, 1, 64, 0, True),       # MQA
+    (2, 96, 4, 2, 32, 40, True),       # sliding window
+    (1, 80, 2, 2, 32, 16, True),       # small window, ragged
+    (1, 64, 2, 2, 32, 0, False),       # non-causal (cross-attn style)
+]
+
+
+@pytest.mark.parametrize("B,S,H,KV,D,window,causal", ATTN_SWEEP)
+def test_flash_attention_matches_ref(B, S, H, KV, D, window, causal):
+    q = _rand((B, S, H, D), jnp.float32, 0)
+    k = _rand((B, S, KV, D), jnp.float32, 1)
+    v = _rand((B, S, KV, D), jnp.float32, 2)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_k=32, **INTERP)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, atol):
+    q = _rand((1, 64, 4, 64), dtype, 3)
+    k = _rand((1, 64, 2, 64), dtype, 4)
+    v = _rand((1, 64, 2, 64), dtype, 5)
+    out = flash_attention(q, k, v, block_q=32, block_k=32, **INTERP)
+    exp = ref.flash_attention_ref(q, k, v)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=atol, rtol=atol)
+
+
+@pytest.mark.parametrize("bq,bk", [(16, 64), (64, 16), (128, 128)])
+def test_flash_attention_block_shape_invariance(bq, bk):
+    """Output must not depend on the VMEM tile shape."""
+    q = _rand((1, 130, 4, 32), jnp.float32, 6)
+    k = _rand((1, 130, 2, 32), jnp.float32, 7)
+    v = _rand((1, 130, 2, 32), jnp.float32, 8)
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk, **INTERP)
+    exp = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_matches_model_path():
+    """Kernel vs the model's chunked_attention (the XLA production path)."""
+    from repro.models.attention import chunked_attention
+    q = _rand((2, 64, 4, 32), jnp.float32, 9)
+    k = _rand((2, 64, 2, 32), jnp.float32, 10)
+    v = _rand((2, 64, 2, 32), jnp.float32, 11)
+    pos = jnp.arange(64)
+    a = flash_attention(q, k, v, window=20, block_q=32, block_k=32, **INTERP)
+    b = chunked_attention(q, k, v, pos, pos, window=20, chunk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# dual-proximal SGD
+# --------------------------------------------------------------------------
+
+DPS_SWEEP = [
+    ((17,), jnp.float32),              # tiny, heavy padding
+    ((1024,), jnp.float32),            # exactly one tile
+    ((1000, 3), jnp.float32),          # 2D, padded
+    ((8, 128), jnp.bfloat16),          # bf16 params
+    ((5, 7, 11), jnp.float32),         # 3D odd
+]
+
+
+@pytest.mark.parametrize("shape,dtype", DPS_SWEEP)
+def test_dual_proximal_sgd_sweep(shape, dtype):
+    w = _rand(shape, dtype, 0)
+    g = _rand(shape, dtype, 1, 0.1)
+    a1 = _rand(shape, dtype, 2)
+    a2 = _rand(shape, dtype, 3)
+    kw = dict(lr=0.05, mu1=0.01, mu2=0.005)
+    out = dual_proximal_sgd(w, g, a1, a2, **kw, **INTERP)
+    exp = ref.dual_proximal_sgd_ref(w, g, a1, a2, **kw)
+    assert out.shape == shape and out.dtype == dtype
+    atol = 1e-6 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("mu1,mu2", [(0.0, 0.0), (0.3, 0.0), (0.0, 0.3),
+                                     (1.0, 1.0)])
+def test_dual_proximal_sgd_mu_grid(mu1, mu2):
+    """mu=0 branches (FedAvg / FedProx limits) share the same kernel."""
+    shape = (333,)
+    w, g, a1, a2 = (_rand(shape, jnp.float32, i) for i in range(4))
+    out = dual_proximal_sgd(w, g, a1, a2, lr=0.1, mu1=mu1, mu2=mu2, **INTERP)
+    exp = ref.dual_proximal_sgd_ref(w, g, a1, a2, lr=0.1, mu1=mu1, mu2=mu2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6)
+
+
+def test_dual_proximal_sgd_tree_matches_core():
+    """Kernel tree update == repro.core.h2fed.proximal_sgd_step."""
+    from repro.core.h2fed import H2FedParams, proximal_sgd_step
+    tree = {"a": _rand((40, 10), jnp.float32, 0),
+            "b": _rand((10,), jnp.float32, 1)}
+    g = jax.tree.map(lambda l: l * 0.01, tree)
+    a1 = jax.tree.map(lambda l: l + 0.1, tree)
+    a2 = jax.tree.map(lambda l: l - 0.1, tree)
+    hp = H2FedParams(mu1=0.05, mu2=0.02, lr=0.03)
+    got = dual_proximal_sgd_tree(tree, g, a1, a2, lr=hp.lr, mu1=hp.mu1,
+                                 mu2=hp.mu2, interpret=True)
+    want = proximal_sgd_step(tree, g, a1, a2, hp)
+    for x, y in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# masked hierarchical aggregation
+# --------------------------------------------------------------------------
+
+AGG_SWEEP = [
+    (4, 1, 64, jnp.float32),           # tiny
+    (100, 10, 2000, jnp.float32),      # the paper's topology (A=100, R=10)
+    (32, 4, 777, jnp.float32),         # ragged N
+    (16, 4, 512, jnp.bfloat16),        # bf16 params
+    (7, 7, 130, jnp.float32),          # R == A
+]
+
+
+@pytest.mark.parametrize("A,R,N,dtype", AGG_SWEEP)
+def test_masked_hier_agg_sweep(A, R, N, dtype):
+    rng = np.random.default_rng(A * 7 + R)
+    x = jnp.asarray(rng.standard_normal((A, N))).astype(dtype)
+    w = jnp.asarray(rng.uniform(1, 5, A), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, A), jnp.float32)
+    assign = jnp.asarray(rng.integers(0, R, A), jnp.int32)
+    got, mass_g = masked_hier_agg(x, w, mask, assign, R, **INTERP)
+    exp, mass_e = ref.masked_hier_agg_ref(x, w, mask, assign, R)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=atol, rtol=atol)
+    np.testing.assert_allclose(np.asarray(mass_g), np.asarray(mass_e),
+                               rtol=1e-6)
+
+
+def test_cloud_agg_matches_ref():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((10, 333)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 3, 10), jnp.float32)
+    got = cloud_agg(x, w, **INTERP)
+    exp = ref.cloud_agg_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-5)
+
+
+def test_weight_matrix_rows_normalized():
+    rng = np.random.default_rng(1)
+    A, R = 30, 5
+    w = jnp.asarray(rng.uniform(1, 2, A), jnp.float32)
+    mask = jnp.ones((A,))
+    assign = jnp.asarray(rng.integers(0, R, A), jnp.int32)
+    W = build_weight_matrix(w, mask, assign, R)
+    sums = np.asarray(W).sum(axis=1)
+    live = np.asarray(
+        jax.ops.segment_sum(w, assign, num_segments=R)) > 0
+    np.testing.assert_allclose(sums[live], 1.0, rtol=1e-6)
+
+
+def test_agg_kernel_matches_core_aggregation():
+    """Kernel path == repro.core.aggregation.rsu_aggregate on a real pytree."""
+    from repro.core.aggregation import rsu_aggregate
+    rng = np.random.default_rng(2)
+    A, R = 12, 3
+    tree = {"w": jnp.asarray(rng.standard_normal((A, 6, 4)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((A, 4)), jnp.float32)}
+    wts = jnp.asarray(rng.uniform(1, 2, A), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, A), jnp.float32)
+    assign = jnp.asarray(rng.integers(0, R, A), jnp.int32)
+
+    core_out, core_mass = rsu_aggregate(tree, wts, mask, assign, R)
+
+    # flatten agent-stacked tree -> (A, N), run kernel, unflatten
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate([l.reshape(A, -1) for l in leaves], axis=1)
+    k_out, k_mass = masked_hier_agg(flat, wts, mask, assign, R, **INTERP)
+    np.testing.assert_allclose(np.asarray(core_mass), np.asarray(k_mass),
+                               rtol=1e-6)
+    off = 0
+    # jax.tree.leaves sorts dict keys: "b" before "w"
+    for l, name in zip(leaves, ("b", "w")):
+        n = int(np.prod(l.shape[1:]))
+        krec = np.asarray(k_out[:, off:off + n]).reshape((R,) + l.shape[1:])
+        mass_pos = np.asarray(core_mass) > 0
+        np.testing.assert_allclose(
+            krec[mass_pos], np.asarray(core_out[name])[mass_pos], atol=2e-5)
+        off += n

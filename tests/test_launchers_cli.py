@@ -1,0 +1,43 @@
+"""End-to-end CLI smoke: the train and serve launchers (subprocess, tiny)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(args, timeout=480):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    return subprocess.run([sys.executable, "-m", *args],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+
+
+def test_train_then_serve_roundtrip(tmp_path):
+    ck = str(tmp_path / "ckpt")
+    out = _run(["repro.launch.train", "--rounds", "2", "--lar", "2",
+                "--seq", "64", "--batch", "2", "--ckpt-every", "2",
+                "--ckpt-dir", ck])
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "[done]" in out.stdout
+    assert "[ckpt]" in out.stdout
+
+    out = _run(["repro.launch.serve", "--ckpt-dir", ck, "--batch", "2",
+                "--prompt-len", "4", "--gen", "4"])
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "restored step 2" in out.stdout
+    assert "[decode]" in out.stdout
+
+
+def test_train_adaptive_mu_flag(tmp_path):
+    out = _run(["repro.launch.train", "--rounds", "2", "--lar", "1",
+                "--seq", "32", "--batch", "2", "--csr", "0.3",
+                "--adaptive-mu"])
+    assert out.returncode == 0, out.stderr[-3000:]
+    # the controller must have moved mu away from the base once csr_obs
+    # was observed low
+    assert "mu=(0.0" in out.stdout

@@ -1,0 +1,115 @@
+"""Tests for proximal-aware optimizers and the checkpoint store."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.optim import adam, sgd
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(6, 4)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+
+
+class TestSGD:
+    def test_plain_step(self):
+        p, g = _tree(0), _tree(1)
+        cfg = sgd.SGDConfig(lr=0.1)
+        new, _ = sgd.step(cfg, p, g, sgd.init(cfg, p))
+        for a, b, c in zip(jax.tree.leaves(p), jax.tree.leaves(g),
+                           jax.tree.leaves(new)):
+            np.testing.assert_allclose(np.asarray(c),
+                                       np.asarray(a) - 0.1 * np.asarray(b),
+                                       atol=1e-6)
+
+    def test_anchors_match_h2fed_core(self):
+        from repro.core.h2fed import H2FedParams, proximal_sgd_step
+        p, g, a1, a2 = _tree(0), _tree(1), _tree(2), _tree(3)
+        hp = H2FedParams(mu1=0.05, mu2=0.01, lr=0.07)
+        cfg = sgd.SGDConfig(lr=hp.lr)
+        got, _ = sgd.step(cfg, p, g, sgd.init(cfg, p),
+                          anchors=((hp.mu1, a1), (hp.mu2, a2)))
+        want = proximal_sgd_step(p, g, a1, a2, hp)
+        for x, y in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-6)
+
+    def test_momentum_accumulates(self):
+        p = _tree(0)
+        g = jax.tree.map(jnp.ones_like, p)
+        cfg = sgd.SGDConfig(lr=1.0, momentum=0.9)
+        st = sgd.init(cfg, p)
+        p1, st = sgd.step(cfg, p, g, st)
+        p2, st = sgd.step(cfg, p1, g, st)
+        # second step is larger: 1 then 1.9
+        d1 = np.asarray(p["w"] - p1["w"])
+        d2 = np.asarray(p1["w"] - p2["w"])
+        np.testing.assert_allclose(d2, d1 * 1.9, rtol=1e-5)
+
+
+class TestAdam:
+    def test_descends_quadratic(self):
+        p = {"w": jnp.asarray([5.0, -3.0])}
+        cfg = adam.AdamConfig(lr=0.1)
+        st = adam.init(cfg, p)
+        for _ in range(200):
+            g = jax.tree.map(lambda w: 2 * w, p)
+            p, st = adam.step(cfg, p, g, st)
+        assert float(jnp.abs(p["w"]).max()) < 0.1
+
+    def test_anchor_pull_converges_to_anchor(self):
+        p = {"w": jnp.asarray([5.0, 5.0])}
+        anchor = {"w": jnp.asarray([1.0, -1.0])}
+        cfg = adam.AdamConfig(lr=0.05)
+        st = adam.init(cfg, p)
+        zero = jax.tree.map(jnp.zeros_like, p)
+        for _ in range(500):
+            p, st = adam.step(cfg, p, zero, st, anchors=((1.0, anchor),))
+        np.testing.assert_allclose(np.asarray(p["w"]),
+                                   np.asarray(anchor["w"]), atol=0.05)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+                "nested": {"b": np.ones(5, np.int32)}}
+        ckpt.save(tmp_path, 3, tree)
+        out = ckpt.restore(tmp_path, 3)
+        np.testing.assert_array_equal(out["a"], tree["a"])
+        np.testing.assert_array_equal(out["nested"]["b"], tree["nested"]["b"])
+
+    def test_latest_step(self, tmp_path):
+        tree = {"x": np.zeros(2)}
+        for s in (1, 5, 12):
+            ckpt.save(tmp_path, s, tree)
+        assert ckpt.latest_step(tmp_path) == 12
+        out = ckpt.restore(tmp_path)        # picks latest
+        np.testing.assert_array_equal(out["x"], tree["x"])
+
+    def test_restore_like_treedef(self, tmp_path):
+        tree = {"w": np.ones((2, 2), np.float32)}
+        ckpt.save(tmp_path, 0, tree)
+        out = ckpt.restore(tmp_path, 0, like=tree)
+        assert set(out) == {"w"}
+
+    def test_missing_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            ckpt.restore(tmp_path / "nope")
+
+    def test_overwrite_same_step(self, tmp_path):
+        ckpt.save(tmp_path, 1, {"v": np.zeros(1)})
+        ckpt.save(tmp_path, 1, {"v": np.ones(1)})
+        out = ckpt.restore(tmp_path, 1)
+        np.testing.assert_array_equal(out["v"], np.ones(1))
+
+    def test_jax_arrays_roundtrip(self, tmp_path):
+        tree = {"p": jnp.asarray([1.5, 2.5], jnp.bfloat16)}
+        ckpt.save(tmp_path, 0, tree)
+        out = ckpt.restore(tmp_path, 0)
+        np.testing.assert_array_equal(np.asarray(out["p"], np.float32),
+                                      np.asarray(tree["p"], np.float32))

@@ -1,0 +1,50 @@
+"""Adaptive-mu orchestrator (beyond-paper, core/orchestrator.py)."""
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import orchestrator as orch
+from repro.core.h2fed import H2FedParams
+
+CFG = orch.AdaptiveMuConfig()
+BASE = H2FedParams(mu1=0.001, mu2=0.005)
+
+
+def test_good_network_decays_mu():
+    st_ = orch.AdaptiveMuState(csr_est=0.95)
+    hp, badness = orch.schedule(st_, CFG, BASE)
+    assert badness == 0.0
+    assert hp.mu1 == CFG.mu1_min and hp.mu2 == CFG.mu2_min
+
+
+def test_collapsed_network_saturates_mu():
+    st_ = orch.AdaptiveMuState(csr_est=0.05)
+    hp, badness = orch.schedule(st_, CFG, BASE)
+    assert badness == 1.0
+    assert hp.mu1 == CFG.mu1_max and hp.mu2 == CFG.mu2_max
+
+
+def test_observation_ema_moves_toward_truth():
+    s = orch.init_state()
+    for _ in range(20):
+        s = orch.observe_csr(s, CFG, connected=10, participants=100)
+    assert abs(s.csr_est - 0.1) < 0.01
+
+
+@settings(max_examples=50, deadline=None)
+@given(csr=st.floats(0.0, 1.0))
+def test_schedule_monotone_and_bounded(csr):
+    """mu2 is a monotone non-increasing function of CSR, within bounds."""
+    hp, _ = orch.schedule(orch.AdaptiveMuState(csr_est=csr), CFG, BASE)
+    assert CFG.mu2_min <= hp.mu2 <= CFG.mu2_max
+    assert CFG.mu1_min <= hp.mu1 <= CFG.mu1_max
+    hp_lo, _ = orch.schedule(orch.AdaptiveMuState(csr_est=max(csr - 0.1, 0)),
+                             CFG, BASE)
+    assert hp_lo.mu2 >= hp.mu2 - 1e-12
+
+
+def test_other_hp_fields_preserved():
+    hp, _ = orch.schedule(orch.init_state(), CFG,
+                          H2FedParams(lar=7, local_epochs=3, lr=0.2))
+    assert hp.lar == 7 and hp.local_epochs == 3 and hp.lr == 0.2

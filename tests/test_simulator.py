@@ -1,0 +1,157 @@
+"""Integration + property tests for the paper-faithful fedsim simulator:
+baseline equivalences (paper Sec. V), learning progress, determinism."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.mnist_mlp import CONFIG as MLP_CFG
+from repro.core.baselines import BASELINES, fedavg, fedprox, h2fed, hierfavg
+from repro.core.h2fed import H2FedParams
+from repro.core.heterogeneity import HeterogeneityModel
+from repro.fedsim.simulator import SimConfig, init_state, make_global_round, \
+    run_simulation
+from repro.models import mlp
+
+
+@pytest.fixture(scope="module")
+def setup(tiny_task, fed_small):
+    train, test = tiny_task
+    params = mlp.init_params(MLP_CFG, jax.random.key(0))
+    cfg = SimConfig(n_agents=fed_small.n_agents, n_rsus=4, batch=16, seed=0)
+    return cfg, fed_small, params, test
+
+
+def _run(cfg, fed, params, test, hp, het, rounds=3):
+    return run_simulation(cfg, hp, het, fed, params, rounds,
+                          x_test=test.x, y_test=test.y)
+
+
+class TestLearning:
+    def test_accuracy_improves(self, setup):
+        cfg, fed, params, test = setup
+        hp = h2fed(mu1=0.01, mu2=0.005, lar=2, lr=0.1)
+        het = HeterogeneityModel(csr=1.0, lar=hp.lar)
+        acc0 = float(mlp.accuracy(params, jnp.asarray(test.x),
+                                  jnp.asarray(test.y)))
+        _, hist = _run(cfg, fed, params, test, hp, het, rounds=5)
+        assert hist["acc"][-1] > acc0 + 0.1, (acc0, hist["acc"])
+
+    def test_learns_under_low_csr(self, setup):
+        """The paper's headline property: convergence even at CSR=0.1."""
+        cfg, fed, params, test = setup
+        hp = h2fed(mu1=0.1, mu2=0.005, lar=3, lr=0.1)
+        het = HeterogeneityModel(csr=0.1, scd=1, lar=hp.lar)
+        acc0 = float(mlp.accuracy(params, jnp.asarray(test.x),
+                                  jnp.asarray(test.y)))
+        _, hist = _run(cfg, fed, params, test, hp, het, rounds=6)
+        assert hist["acc"][-1] > acc0, (acc0, hist["acc"])
+
+    def test_deterministic(self, setup):
+        cfg, fed, params, test = setup
+        hp = h2fed(lar=2)
+        het = HeterogeneityModel(csr=0.5, lar=2)
+        _, h1 = _run(cfg, fed, params, test, hp, het)
+        _, h2 = _run(cfg, fed, params, test, hp, het)
+        np.testing.assert_array_equal(h1["acc"], h2["acc"])
+
+
+class TestBaselineEquivalences:
+    """Paper Sec. V: FedAvg / FedProx / HierFAVG are parameterizations."""
+
+    def test_fedavg_is_mu_zero(self, setup):
+        cfg, fed, params, test = setup
+        het = HeterogeneityModel(csr=1.0)
+        _, ha = _run(cfg, fed, params, test, fedavg(lr=0.05), het, 2)
+        _, hb = _run(cfg, fed, params, test,
+                     H2FedParams(mu1=0.0, mu2=0.0, lar=1, lr=0.05,
+                                 n_layers=2), het, 2)
+        np.testing.assert_allclose(ha["acc"], hb["acc"], atol=1e-6)
+
+    def test_fedprox_equals_h2fed_mu2_zero_lar1(self, setup):
+        cfg, fed, params, test = setup
+        het = HeterogeneityModel(csr=1.0)
+        _, ha = _run(cfg, fed, params, test, fedprox(mu=0.05), het, 2)
+        _, hb = _run(cfg, fed, params, test,
+                     h2fed(mu1=0.05, mu2=0.0, lar=1), het, 2)
+        np.testing.assert_allclose(ha["acc"], hb["acc"], atol=1e-6)
+
+    def test_mu1_mu2_equivalent_when_lar1_e1(self, setup):
+        """With LAR=1 and E=1 both anchors equal the cloud model at training
+        time, so (mu1=c, mu2=0) == (mu1=0, mu2=c) — the layers only separate
+        through pre-aggregation."""
+        cfg, fed, params, test = setup
+        het = HeterogeneityModel(csr=0.6)
+        hp_a = H2FedParams(mu1=0.08, mu2=0.0, lar=1, local_epochs=1, lr=0.05)
+        hp_b = H2FedParams(mu1=0.0, mu2=0.08, lar=1, local_epochs=1, lr=0.05)
+        sa, _ = _run(cfg, fed, params, test, hp_a, het, 2)
+        sb, _ = _run(cfg, fed, params, test, hp_b, het, 2)
+        for x, y in zip(jax.tree.leaves(sa.cloud_params),
+                        jax.tree.leaves(sb.cloud_params)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-5)
+
+    def test_hierfavg_differs_from_fedavg_by_lar(self, setup):
+        """LAR>1 changes the trajectory (pre-aggregation is real work)."""
+        cfg, fed, params, test = setup
+        het1 = HeterogeneityModel(csr=1.0, lar=1)
+        _, ha = _run(cfg, fed, params, test, fedavg(), het1, 2)
+        _, hb = _run(cfg, fed, params, test, hierfavg(lar=4), het1, 2)
+        assert not np.allclose(ha["acc"], hb["acc"])
+
+    def test_all_baselines_registered(self):
+        assert set(BASELINES) == {"fedavg", "fedprox", "hierfavg", "h2fed"}
+
+
+class TestAggregationSemantics:
+    def test_full_mask_lar1_single_epoch_matches_manual(self, setup):
+        """One global round at CSR=1, LAR=1, E=1, mu=0: the cloud model must
+        equal the data-weighted average of one-epoch-per-agent SGD results."""
+        cfg, fed, params, test = setup
+        hp = H2FedParams(mu1=0.0, mu2=0.0, lar=1, local_epochs=1, lr=0.05)
+        het = HeterogeneityModel(csr=1.0, scd=1, fsr=1.0)
+        round_fn = make_global_round(cfg, hp, het, fed)
+        state = init_state(cfg, params, jax.random.key(cfg.seed))
+        new_state = round_fn(state)
+
+        # manual: per-agent SGD for one epoch from `params`
+        x_all, y_all = jnp.asarray(fed.x), jnp.asarray(fed.y)
+        spe = fed.x.shape[1] // cfg.batch
+
+        def train_one(x, y):
+            w = params
+            for s in range(spe):
+                xb = jax.lax.dynamic_slice_in_dim(x, (s * cfg.batch) % x.shape[0],
+                                                  cfg.batch)
+                yb = jax.lax.dynamic_slice_in_dim(y, (s * cfg.batch) % y.shape[0],
+                                                  cfg.batch)
+                g = jax.grad(mlp.loss_fn)(w, xb, yb)
+                w = jax.tree.map(lambda a, b: a - hp.lr * b, w, g)
+            return w
+
+        agent_ws = jax.vmap(train_one)(x_all, y_all)
+        wts = jnp.asarray(fed.n_per_agent, jnp.float32)
+        # hierarchical mean with balanced weights == flat weighted mean
+        flat_mean = jax.tree.map(
+            lambda l: jnp.sum(l * (wts / wts.sum()).reshape(
+                (-1,) + (1,) * (l.ndim - 1)), axis=0), agent_ws)
+
+        # NOTE: RSU-then-cloud weighted means compose to the flat weighted
+        # mean because cloud weights are the surviving RSU masses.
+        for a, b in zip(jax.tree.leaves(new_state.cloud_params),
+                        jax.tree.leaves(flat_mean)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5, rtol=1e-4)
+
+    def test_zero_connectivity_keeps_cloud_model(self, setup):
+        cfg, fed, params, test = setup
+        hp = h2fed()
+        het = HeterogeneityModel(csr=0.0)
+        round_fn = make_global_round(cfg, hp, het, fed)
+        state = init_state(cfg, params, jax.random.key(0))
+        out = round_fn(state)
+        for a, b in zip(jax.tree.leaves(out.cloud_params),
+                        jax.tree.leaves(params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
