@@ -53,7 +53,13 @@ def run() -> List[str]:
     weights = jax.random.uniform(ks[1], (A,), jnp.float32)
     mask = (jax.random.uniform(ks[2], (A,)) < 0.5).astype(jnp.float32)
     assign = jnp.arange(A, dtype=jnp.int32) % R
-    kern = jax.jit(lambda s, w, m: ops.masked_hier_agg(s, w, m, assign, R))
+    # call the kernel module directly: off-TPU the ops facade routes this
+    # aggregation to the XLA dot (the deploy path); the microbench's job is
+    # the kernel itself — Mosaic on TPU, interpret elsewhere.
+    from repro.kernels import masked_hier_agg as mha
+    interp = jax.default_backend() != "tpu"
+    kern = jax.jit(lambda s, w, m: mha.masked_hier_agg(s, w, m, assign, R,
+                                                       interpret=interp))
     orac = jax.jit(lambda s, w, m: ref.masked_hier_agg_ref(s, w, m, assign, R))
     tk, yk = _timeit(kern, stacked, weights, mask)
     tr, yr = _timeit(orac, stacked, weights, mask)

@@ -6,15 +6,23 @@ Prints ``name,us_per_call,derived`` CSV rows for:
   fig4  — H²-Fed vs FedProx/HierFAVG/FedAvg   (paper Fig. 4)
   kernels — Pallas-kernel microbenchmarks (interpret mode vs jnp oracle)
   roofline — dry-run roofline terms           (deliverable g)
+  sharded — engine round latency: tree vs flat vs shard_map, 1 vs 8 devices
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline]
+                                                [--json results/bench/bench.json]
 Env:    REPRO_BENCH_FULL=1 for the paper-scale (100 agents) runs.
+
+``--json`` additionally writes every row (and any suite failures) to one
+JSON record — the artifact CI uploads per PR so the perf trajectory is
+tracked over time.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
 
 
 def bench_fig2():
@@ -47,6 +55,11 @@ def bench_adaptive():
     return ablation_adaptive.run()
 
 
+def bench_sharded():
+    from benchmarks import sharded_round
+    return sharded_round.run()
+
+
 SUITES = {
     "fig2": bench_fig2,
     "fig3": bench_fig3,
@@ -54,6 +67,7 @@ SUITES = {
     "kernels": bench_kernels,
     "roofline": bench_roofline,
     "adaptive": bench_adaptive,
+    "sharded": bench_sharded,
 }
 
 
@@ -61,24 +75,36 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SUITES))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + failures to one JSON record")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
 
     print("name,us_per_call,derived")
-    failures = 0
+    all_rows, errors = [], []
     for name in names:
         t0 = time.perf_counter()
         try:
             for row in SUITES[name]():
+                all_rows.append(row)
                 print(row)
         except Exception as e:  # noqa: BLE001 — keep the harness running
-            failures += 1
+            errors.append(f"{name}:{type(e).__name__}:{e}")
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}",
                   file=sys.stderr)
-        print(f"{name}/total,{(time.perf_counter() - t0) * 1e6:.0f},wall",
-              flush=True)
-    if failures:
-        raise SystemExit(f"{failures} benchmark suites failed")
+        wall = f"{name}/total,{(time.perf_counter() - t0) * 1e6:.0f},wall"
+        all_rows.append(wall)
+        print(wall, flush=True)
+
+    if args.json:
+        path = Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"suites": names, "rows": all_rows, "failures": errors},
+            indent=1))
+        print(f"[json] {path}", file=sys.stderr)
+    if errors:
+        raise SystemExit(f"{len(errors)} benchmark suites failed")
 
 
 if __name__ == "__main__":

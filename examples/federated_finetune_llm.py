@@ -47,9 +47,8 @@ def main():
                     help="int8 cross-pod aggregation (beyond-paper)")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh(
-        (2, 4, 1), ("pod", "data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4, 1), ("pod", "data", "model"))
     A = 8  # 2 pods (RSUs) x 4 agents
     cfg = get_reduced_config(args.arch)
     if cfg.encoder.kind != "none":

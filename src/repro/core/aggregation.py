@@ -6,6 +6,12 @@ leading agent (or RSU) axis.  Weights are data-volume weights n_i/n masked by
 connectivity; aggregation renormalizes over the surviving mass so that a
 partial cohort still produces a convex combination (FedAvg semantics under
 partial participation).
+
+This module is the REFERENCE implementation of the weighting algebra:
+``build_weight_matrix`` / ``cohort_mass`` / ``normalized_weights`` are the
+single source of truth shared by the tree-map path here, the Pallas matmul
+kernel (kernels/masked_hier_agg re-exports them), and the sharded engine
+(fedsim/sharded) — tests pin the kernel paths against these.
 """
 from __future__ import annotations
 
@@ -17,6 +23,56 @@ import jax.numpy as jnp
 PyTree = Any
 
 
+def normalized_weights(weights: jax.Array,
+                       mask: Optional[jax.Array] = None,
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Masked weights normalized to sum 1; uniform fallback on zero mass.
+
+    Returns (wn (A,), mass scalar).  The uniform fallback keeps downstream
+    math total — callers that must keep the previous model on a dead cohort
+    guard on the returned mass.
+    """
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    mass = jnp.sum(w)
+    safe = jnp.where(mass > 0, mass, 1.0)
+    wn = jnp.where(mass > 0, w / safe, jnp.ones_like(w) / w.shape[0])
+    return wn, mass
+
+
+def cohort_mass(weights: jax.Array, mask: jax.Array,
+                rsu_assign: jax.Array, n_rsus: int) -> jax.Array:
+    """Surviving data mass per RSU: Σ_{a∈cohort(r)} m_a·w_a  ->  (R,)."""
+    w = weights.astype(jnp.float32) * mask.astype(jnp.float32)
+    return jax.ops.segment_sum(w, rsu_assign, num_segments=n_rsus)
+
+
+def unnormalized_weight_matrix(weights: jax.Array, mask: jax.Array,
+                               rsu_assign: jax.Array,
+                               n_rsus: int) -> jax.Array:
+    """Cohort-masked (R, A) weight matrix before row normalization: zero
+    outside each RSU's cohort, m_a·w_a inside.  Shard-local slices of this
+    matrix are what the sharded engine psums (partial aggregation)."""
+    w = weights.astype(jnp.float32) * mask.astype(jnp.float32)   # (A,)
+    onehot = (rsu_assign[None, :] == jnp.arange(n_rsus)[:, None])
+    return onehot.astype(jnp.float32) * w[None, :]               # (R, A)
+
+
+def build_weight_matrix(weights: jax.Array, mask: jax.Array,
+                        rsu_assign: jax.Array, n_rsus: int) -> jax.Array:
+    """Row-normalized (R, A) masked weight matrix.
+
+    ``out[r] = W[r] @ stacked`` is the per-RSU weighted mean; rows with zero
+    surviving mass become all-zero — the caller blends those RSUs with their
+    previous model (``blend_on_mass`` semantics).  This is the one matrix
+    both the tree-map reference and the Pallas matmul kernel consume.
+    """
+    wm = unnormalized_weight_matrix(weights, mask, rsu_assign, n_rsus)
+    mass = jnp.sum(wm, axis=1, keepdims=True)
+    return wm / jnp.where(mass > 0, mass, 1.0)
+
+
 def masked_weighted_mean(stacked: PyTree, weights: jax.Array,
                          mask: Optional[jax.Array] = None) -> PyTree:
     """Σ_a m_a·w_a·x_a / Σ_a m_a·w_a over the leading axis.
@@ -26,12 +82,7 @@ def masked_weighted_mean(stacked: PyTree, weights: jax.Array,
     (an RSU with no connected agents keeps its old model upstream — callers
     guard on the mass; this keeps the function total).
     """
-    w = weights.astype(jnp.float32)
-    if mask is not None:
-        w = w * mask.astype(jnp.float32)
-    mass = jnp.sum(w)
-    safe = jnp.where(mass > 0, mass, 1.0)
-    wn = jnp.where(mass > 0, w / safe, jnp.ones_like(w) / w.shape[0])
+    wn, _ = normalized_weights(weights, mask)
 
     def agg(leaf):
         wb = wn.reshape((-1,) + (1,) * (leaf.ndim - 1))
@@ -43,23 +94,19 @@ def masked_weighted_mean(stacked: PyTree, weights: jax.Array,
 def rsu_aggregate(agent_params: PyTree, weights: jax.Array,
                   mask: jax.Array, rsu_assign: jax.Array,
                   n_rsus: int) -> Tuple[PyTree, jax.Array]:
-    """Per-RSU masked aggregation via segment-sum (Alg. 2 line 8).
+    """Per-RSU masked aggregation (Alg. 2 line 8) via the weight matrix.
 
     agent_params: leaves (A, ...); rsu_assign: (A,) int RSU id per agent.
     Returns (rsu_params with leaves (R, ...), rsu_mass (R,)).
     RSUs whose cohort mass is zero get zeros — the caller must blend with the
     previous RSU model using the returned mass (see ``blend_on_mass``).
     """
-    w = weights.astype(jnp.float32) * mask.astype(jnp.float32)
-    mass = jax.ops.segment_sum(w, rsu_assign, num_segments=n_rsus)
-    denom = jnp.where(mass > 0, mass, 1.0)
+    W = build_weight_matrix(weights, mask, rsu_assign, n_rsus)   # (R, A)
+    mass = cohort_mass(weights, mask, rsu_assign, n_rsus)
 
     def agg(leaf):
-        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
-        s = jax.ops.segment_sum(leaf.astype(jnp.float32) * wb, rsu_assign,
-                                num_segments=n_rsus)
-        db = denom.reshape((-1,) + (1,) * (leaf.ndim - 1))
-        return (s / db).astype(leaf.dtype)
+        return jnp.tensordot(W, leaf.astype(jnp.float32),
+                             axes=1).astype(leaf.dtype)
 
     return jax.tree.map(agg, agent_params), mass
 

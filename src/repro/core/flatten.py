@@ -1,0 +1,91 @@
+"""Flat-buffer parameter representation (DESIGN.md §3).
+
+The simulator's hot path treats the fleet as matrices, not pytrees: every
+agent's parameters are raveled into one contiguous fp32 row of an ``(A, N)``
+buffer (RSUs: ``(R, N)``; cloud: ``(N,)``), so hierarchical aggregation is a
+single ``(R, A) @ (A, N)`` Pallas matmul (kernels/masked_hier_agg) instead of
+O(leaves) tree-mapped reductions, and the dual-proximal SGD update is one
+fused vector expression.  Structure round-trips losslessly: ravel/unravel are
+pure reshape+concatenate/slice, bit-exact for matching dtypes, and
+differentiable — ``jax.grad`` of a loss composed with ``unravel`` yields the
+raveled gradient directly.
+
+A ``FlatSpec`` is static metadata (treedef + leaf shapes/dtypes/offsets)
+derived once per simulation from the parameter template; it never crosses a
+jit boundary as a traced value.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+BUFFER_DTYPE = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static ravel plan for one parameter pytree (no leading fleet axis)."""
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    n: int                       # total flat length Σ sizes
+
+    # -- single model: (N,) ------------------------------------------------
+    def ravel(self, tree: PyTree) -> jax.Array:
+        leaves = self.treedef.flatten_up_to(tree)
+        return jnp.concatenate(
+            [l.astype(BUFFER_DTYPE).reshape(-1) for l in leaves])
+
+    def unravel(self, vec: jax.Array) -> PyTree:
+        leaves = [
+            vec[off:off + size].reshape(shape).astype(dtype)
+            for off, size, shape, dtype in zip(
+                self.offsets, self.sizes, self.shapes, self.dtypes)]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    # -- stacked fleet: (A, N) ---------------------------------------------
+    def ravel_stacked(self, stacked: PyTree) -> jax.Array:
+        leaves = self.treedef.flatten_up_to(stacked)
+        a = leaves[0].shape[0]
+        return jnp.concatenate(
+            [l.astype(BUFFER_DTYPE).reshape(a, -1) for l in leaves], axis=1)
+
+    def unravel_stacked(self, mat: jax.Array) -> PyTree:
+        a = mat.shape[0]
+        leaves = [
+            mat[:, off:off + size].reshape((a,) + shape).astype(dtype)
+            for off, size, shape, dtype in zip(
+                self.offsets, self.sizes, self.shapes, self.dtypes)]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+def spec_of(tree: PyTree) -> FlatSpec:
+    """Build the ravel plan from a parameter template (arrays or tracers —
+    only static shape/dtype metadata is read)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    return FlatSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    offsets=offsets, sizes=sizes, n=int(sum(sizes)))
+
+
+def spec_of_stacked(stacked: PyTree) -> FlatSpec:
+    """Ravel plan from a fleet-stacked template (leading axis dropped)."""
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    shapes = tuple(tuple(l.shape[1:]) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    return FlatSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    offsets=offsets, sizes=sizes, n=int(sum(sizes)))

@@ -1,2 +1,4 @@
-from repro.fedsim.simulator import SimConfig, SimState, run_simulation, make_global_round  # noqa: F401
+from repro.fedsim.simulator import (SimConfig, SimState, FlatSimState,  # noqa: F401
+                                    init_flat_state, make_flat_global_round,
+                                    make_global_round, run_simulation)
 from repro.fedsim.pretrain import pretrain_to_target, train_centralized  # noqa: F401

@@ -1,0 +1,177 @@
+"""Agent-sharded flat-buffer simulation: shard_map over the mesh agent axes.
+
+The flat engine (fedsim/simulator, DESIGN.md §3) already holds the fleet as
+an ``(A, N)`` buffer; this module partitions that agent axis over the
+``pod``/``data`` mesh axes from launch/mesh.py (DESIGN.md §2) so each device
+trains and aggregates only its ``A / n_shards`` agents:
+
+  * per-shard training is the same vmap'd flat dual-proximal scan,
+  * the RSU layer becomes a *partial* ``(R, A_local) @ (A_local, N)``
+    aggregation matmul per shard (the Pallas kernel via kernels/ops)
+    followed by ONE ``psum`` of the (R, N) partial sums + masses — the
+    weight-matrix formulation makes cross-shard cohorts exact,
+  * RSU and cloud buffers stay replicated, so the cloud layer (Alg. 3) is
+    collective-free replicated math.
+
+Stochastic draws (CSR/SCD/FSR) happen once per round on the replicated
+(A,)-sized state — identical key discipline to the single-device engines, so
+``run_sharded_simulation`` is numerically equivalent to ``run_simulation``
+(engine="flat") to fp32 tolerance on any device count that divides A
+(tests/test_sharded.py asserts this; CI's multi-device smoke runs it on 8
+forced host devices the way launch/dryrun.py does).
+"""
+from __future__ import annotations
+
+from math import prod
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import flatten
+from repro.core.aggregation import (normalized_weights,
+                                    unnormalized_weight_matrix)
+from repro.core.h2fed import H2FedParams
+from repro.core.heterogeneity import HeterogeneityModel
+from repro.data.partition import FederatedData
+from repro.kernels import ops
+from repro.launch.mesh import agent_axes, make_mesh, shard_map
+from repro.models import mlp
+from repro.fedsim.simulator import (FlatSimState, SimConfig,
+                                    _fed_arrays, _local_train_flat,
+                                    init_flat_state, round_draws)
+
+PyTree = Any
+
+
+def make_fleet_mesh(n_devices: Optional[int] = None):
+    """Lay the fleet out over the available devices.
+
+    >= 4 devices: a ('pod', 'data') mesh (2 x n/2) exercising both agent
+    axes of the production topology; fewer: a 1-D ('data',) mesh.  The
+    `model` axis is intentionally absent — fleet models are vmapped per
+    agent, not tensor-parallel (launch/h2fed_round handles that regime).
+    """
+    n = n_devices or len(jax.devices())
+    if n >= 4 and n % 2 == 0:
+        return make_mesh((2, n // 2), ("pod", "data"))
+    return make_mesh((n,), ("data",))
+
+
+def n_shards(mesh) -> int:
+    return prod(mesh.shape[a] for a in agent_axes(mesh))
+
+
+def make_sharded_global_round(cfg: SimConfig, hp: H2FedParams,
+                              het: HeterogeneityModel, fed: FederatedData,
+                              spec: flatten.FlatSpec, mesh,
+                              loss_fn: Callable = mlp.loss_fn):
+    """Build the jitted agent-sharded FlatSimState -> FlatSimState round."""
+    x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
+        _fed_arrays(cfg, hp, fed)
+    axes = agent_axes(mesh)
+    shards = n_shards(mesh)
+    if cfg.n_agents % shards:
+        raise ValueError(
+            f"n_agents={cfg.n_agents} must divide over {shards} shards "
+            f"(mesh {dict(mesh.shape)})")
+    R, N = cfg.n_rsus, spec.n
+    ax = axes if len(axes) > 1 else axes[0]
+
+    train_agents = jax.vmap(
+        lambda x, y, w0, wr, wc, act: _local_train_flat(
+            loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
+        in_axes=(0, 0, 0, 0, None, 0))
+
+    def round_fn(cloud_flat, agent_flat, x, y, n_data, assign, masks, steps):
+        """Shard-local view: leading agent axes are A_local-sized; cloud and
+        RSU state replicated.  masks/steps: (LAR, A_local)."""
+        rsu_flat = jnp.broadcast_to(cloud_flat, (R, N))   # Alg. 2 l.2
+
+        def local_round(carry, inp):
+            rsu_flat, agent_flat = carry
+            mask_l, act_l = inp
+            w_start = jnp.take(rsu_flat, assign, axis=0)  # (A_local, N)
+            agent_flat = train_agents(x, y, w_start, w_start,
+                                      cloud_flat, act_l)
+
+            # Alg. 2 l.8: per-shard partial aggregation matmul, ONE psum
+            W_part = unnormalized_weight_matrix(
+                n_data, mask_l, assign, R)                # (R, A_local)
+            num = ops.weighted_agg_matmul(W_part, agent_flat)     # (R, N)
+            num = jax.lax.psum(num, ax)
+            mass = jax.lax.psum(jnp.sum(W_part, axis=1), ax)      # (R,)
+            new_rsu = num / jnp.where(mass > 0, mass, 1.0)[:, None]
+            rsu_flat = jnp.where((mass > 0)[:, None], new_rsu, rsu_flat)
+            return (rsu_flat, agent_flat), mass
+
+        (rsu_flat, agent_flat), masses = jax.lax.scan(
+            local_round, (rsu_flat, agent_flat), (masks, steps))
+
+        # Alg. 3 l.6: replicated cloud math — no collective needed
+        total = jnp.sum(masses, axis=0)                   # (R,)
+        wn, tsum = normalized_weights(total)
+        new_cloud = wn @ rsu_flat
+        cloud_flat = jnp.where(tsum > 0, new_cloud, cloud_flat)
+        return cloud_flat, rsu_flat, agent_flat
+
+    smapped = shard_map(
+        round_fn, mesh,
+        in_specs=(P(), P(ax), P(ax), P(ax), P(ax), P(ax),
+                  P(None, ax), P(None, ax)),
+        out_specs=(P(), P(), P(ax)),
+        axis_names=set(axes))
+
+    def global_round(state: FlatSimState) -> FlatSimState:
+        rng, k_rounds = jax.random.split(state.rng)
+        keys = jax.random.split(k_rounds, hp.lar)
+
+        # stochastic realization on the replicated (A,) state — same key
+        # discipline as the single-device engines
+        def draw(conn, key):
+            conn, mask, act = round_draws(key, conn, het, hp,
+                                          cfg.n_agents, spe)
+            return conn, (mask.astype(jnp.float32), act)
+
+        conn, (masks, steps) = jax.lax.scan(draw, state.conn, keys)
+        cloud_flat, rsu_flat, agent_flat = smapped(
+            state.cloud_flat, state.agent_flat, x_all, y_all,
+            n_per_agent, rsu_assign, masks, steps)
+        return FlatSimState(agent_flat=agent_flat, rsu_flat=rsu_flat,
+                            cloud_flat=cloud_flat, conn=conn, rng=rng)
+
+    return jax.jit(global_round)
+
+
+def run_sharded_simulation(cfg: SimConfig, hp: H2FedParams,
+                           het: HeterogeneityModel, fed: FederatedData,
+                           init_params: PyTree, n_rounds: int, *,
+                           mesh=None, x_test=None, y_test=None,
+                           loss_fn: Callable = mlp.loss_fn,
+                           ) -> Tuple[FlatSimState, Dict[str, np.ndarray]]:
+    """Sharded twin of ``run_simulation``: same rounds, agents partitioned
+    over the mesh; unravel happens only at the eval boundary."""
+    hp.validate(), het.validate()
+    mesh = mesh if mesh is not None else make_fleet_mesh()
+    spec = flatten.spec_of(init_params)
+    state = init_flat_state(cfg, spec, init_params, jax.random.key(cfg.seed))
+    round_fn = make_sharded_global_round(cfg, hp, het, fed, spec, mesh,
+                                         loss_fn)
+    eval_fn = None
+    if x_test is not None:
+        x_test, y_test = jnp.asarray(x_test), jnp.asarray(y_test)
+        eval_fn = jax.jit(lambda v: mlp.accuracy(spec.unravel(v),
+                                                 x_test, y_test))
+
+    accs, rounds = [], []
+    with mesh:
+        for r in range(n_rounds):
+            state = round_fn(state)
+            if eval_fn is not None and (r % cfg.eval_every == 0
+                                        or r == n_rounds - 1):
+                accs.append(float(eval_fn(state.cloud_flat)))
+                rounds.append(r + 1)
+    history = {"round": np.asarray(rounds), "acc": np.asarray(accs)}
+    return state, history

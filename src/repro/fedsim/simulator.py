@@ -13,6 +13,20 @@ One compiled ``global_round``:
   3. Cloud aggregation over RSUs weighted by surviving data mass
      (Alg. 3 line 6); if nothing survived the cloud model is kept.
 
+Two engines share this program structure (DESIGN.md §3):
+
+  engine="flat" (default, the production hot path) — the fleet lives in
+  contiguous fp32 buffers: agents (A, N), RSUs (R, N), cloud (N,)
+  (core/flatten).  Both aggregation layers are single Pallas matmul calls
+  (kernels/masked_hier_agg via kernels/ops) and the dual-proximal update is
+  one fused vector expression; parameters are unraveled to pytrees only at
+  eval/checkpoint boundaries.  fedsim/sharded.py partitions the same
+  buffers' agent axis over a device mesh.
+
+  engine="tree" (the reference) — per-leaf jax.tree.map aggregation
+  (core/aggregation).  Property tests assert both engines agree to fp32
+  tolerance (tests/test_flatten.py).
+
 Baseline equivalences (paper Sec. V) hold *exactly* by construction:
 LAR=1 makes the RSU layer a pass-through (w_k == w at training time), so
 mu=0 is FedAvg and mu1>0 is FedProx on the flat topology; mu=0 with LAR>1
@@ -27,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import flatten
 from repro.core.aggregation import (blend_on_mass, broadcast_to_agents,
                                     gather_rsu_for_agents, masked_weighted_mean,
                                     rsu_aggregate)
@@ -35,6 +50,7 @@ from repro.core.heterogeneity import (ConnState, HeterogeneityModel,
                                       init_conn_state, step_connectivity)
 from repro.data.partition import FederatedData
 from repro.data.pipeline import agent_minibatch
+from repro.kernels import ops
 from repro.models import mlp
 
 PyTree = Any
@@ -50,9 +66,19 @@ class SimConfig:
 
 
 class SimState(NamedTuple):
+    """Pytree-view state (the eval/checkpoint boundary representation)."""
     agent_params: PyTree    # stacked (A, ...) — w_{i,k}
     rsu_params: PyTree      # stacked (R, ...) — w_k
     cloud_params: PyTree    # (...)            — w
+    conn: ConnState
+    rng: jax.Array
+
+
+class FlatSimState(NamedTuple):
+    """Flat-buffer state: the whole fleet as three contiguous fp32 buffers."""
+    agent_flat: jax.Array   # (A, N)
+    rsu_flat: jax.Array     # (R, N)
+    cloud_flat: jax.Array   # (N,)
     conn: ConnState
     rng: jax.Array
 
@@ -64,6 +90,51 @@ def init_state(cfg: SimConfig, init_params: PyTree, key) -> SimState:
         cloud_params=init_params,
         conn=init_conn_state(cfg.n_agents),
         rng=key)
+
+
+def init_flat_state(cfg: SimConfig, spec: flatten.FlatSpec,
+                    init_params: PyTree, key) -> FlatSimState:
+    vec = spec.ravel(init_params)
+    return FlatSimState(
+        agent_flat=jnp.broadcast_to(vec, (cfg.n_agents, spec.n)),
+        rsu_flat=jnp.broadcast_to(vec, (cfg.n_rsus, spec.n)),
+        cloud_flat=vec,
+        conn=init_conn_state(cfg.n_agents),
+        rng=key)
+
+
+def to_flat_state(spec: flatten.FlatSpec, state: SimState) -> FlatSimState:
+    return FlatSimState(agent_flat=spec.ravel_stacked(state.agent_params),
+                        rsu_flat=spec.ravel_stacked(state.rsu_params),
+                        cloud_flat=spec.ravel(state.cloud_params),
+                        conn=state.conn, rng=state.rng)
+
+
+def from_flat_state(spec: flatten.FlatSpec, state: FlatSimState) -> SimState:
+    return SimState(agent_params=spec.unravel_stacked(state.agent_flat),
+                    rsu_params=spec.unravel_stacked(state.rsu_flat),
+                    cloud_params=spec.unravel(state.cloud_flat),
+                    conn=state.conn, rng=state.rng)
+
+
+def round_draws(key, conn: ConnState, het: HeterogeneityModel,
+                hp: H2FedParams, n_agents: int, spe: int):
+    """One local round's stochastic realization, shared by every engine.
+
+    Returns (conn', mask (A,) bool, active_steps (A,) int): the CSR/SCD
+    connectivity draw and the FSR-drawn completed-epoch step counts
+    (0 epochs == disconnected).
+    """
+    k_conn, k_fsr = jax.random.split(key)
+    conn, connected = step_connectivity(k_conn, conn, het)
+    full = jax.random.bernoulli(k_fsr, het.fsr, (n_agents,))
+    epochs = jnp.where(full, hp.local_epochs,
+                       jax.random.randint(jax.random.fold_in(k_fsr, 1),
+                                          (n_agents,), 0,
+                                          max(hp.local_epochs, 1)))
+    active_steps = epochs * spe
+    mask = connected & (active_steps > 0)
+    return conn, mask, active_steps
 
 
 def _local_train(loss_fn: Callable, x, y, w0: PyTree, w_rsu: PyTree,
@@ -95,16 +166,109 @@ def _local_train(loss_fn: Callable, x, y, w0: PyTree, w_rsu: PyTree,
     return w
 
 
-def make_global_round(cfg: SimConfig, hp: H2FedParams,
-                      het: HeterogeneityModel, fed: FederatedData,
-                      loss_fn: Callable = mlp.loss_fn):
-    """Build the jitted global round for a fixed dataset/topology."""
+def _local_train_flat(loss_fn: Callable, spec: flatten.FlatSpec, x, y,
+                      w0: jax.Array, w_rsu: jax.Array, w_cloud: jax.Array,
+                      hp: H2FedParams, n_steps: int,
+                      active_steps: jax.Array, batch: int) -> jax.Array:
+    """Flat-buffer twin of ``_local_train``: the whole model is one (N,)
+    fp32 vector, so the dual-proximal update (Alg. 1, Eq. 6) is a single
+    fused expression — no per-leaf tree traffic in the inner loop."""
+
+    grad_fn = jax.grad(lambda wf, xb, yb: loss_fn(spec.unravel(wf), xb, yb))
+
+    def body(w, step):
+        xb, yb = agent_minibatch(x, y, step, batch)
+        g = grad_fn(w, xb, yb)
+        live = (step < active_steps).astype(jnp.float32)
+        w = w - hp.lr * live * (g + hp.mu1 * (w - w_rsu)
+                                + hp.mu2 * (w - w_cloud))
+        return w, None
+
+    w, _ = jax.lax.scan(body, w0, jnp.arange(n_steps))
+    return w
+
+
+def _fed_arrays(cfg: SimConfig, hp: H2FedParams, fed: FederatedData):
     x_all = jnp.asarray(fed.x)
     y_all = jnp.asarray(fed.y)
     n_per_agent = jnp.asarray(fed.n_per_agent, jnp.float32)
     rsu_assign = jnp.asarray(fed.rsu_assign)
     spe = max(int(fed.x.shape[1]) // cfg.batch, 1)       # steps per epoch
     n_steps = hp.local_epochs * spe                      # static bound
+    return x_all, y_all, n_per_agent, rsu_assign, spe, n_steps
+
+
+def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
+                          het: HeterogeneityModel, fed: FederatedData,
+                          spec: flatten.FlatSpec,
+                          loss_fn: Callable = mlp.loss_fn):
+    """The flat-buffer global round body: FlatSimState -> FlatSimState
+    (un-jitted — callers compose and jit it).
+
+    Both aggregation layers are single Pallas matmuls on the (A, N) buffer
+    (``ops.masked_hier_agg`` / ``ops.cloud_agg``); nothing is unraveled
+    inside the round except the per-minibatch loss evaluation.
+    """
+    x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
+        _fed_arrays(cfg, hp, fed)
+
+    train_agents = jax.vmap(
+        lambda x, y, w0, wr, wc, act: _local_train_flat(
+            loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
+        in_axes=(0, 0, 0, 0, None, 0))
+
+    def global_round(state: FlatSimState) -> FlatSimState:
+        rng, k_rounds = jax.random.split(state.rng)
+        # Alg. 2 line 2: RSUs replace w_k with the current cloud model
+        rsu_flat = jnp.broadcast_to(state.cloud_flat, (cfg.n_rsus, spec.n))
+        keys = jax.random.split(k_rounds, hp.lar)
+
+        def local_round(carry, key):
+            rsu_flat, conn, agent_flat = carry
+            conn, mask, active_steps = round_draws(
+                key, conn, het, hp, cfg.n_agents, spe)
+
+            # Alg. 2 l.5 / Alg. 1 l.1: every agent starts from its RSU row
+            w_start = jnp.take(rsu_flat, rsu_assign, axis=0)     # (A, N)
+            agent_flat = train_agents(x_all, y_all, w_start, w_start,
+                                      state.cloud_flat, active_steps)
+
+            # Alg. 2 line 8: one (R, A) @ (A, N) Pallas matmul
+            new_rsu, mass = ops.masked_hier_agg(
+                agent_flat, n_per_agent, mask.astype(jnp.float32),
+                rsu_assign, cfg.n_rsus)
+            rsu_flat = jnp.where((mass > 0)[:, None], new_rsu, rsu_flat)
+            return (rsu_flat, conn, agent_flat), mass
+
+        (rsu_flat, conn, agent_flat), masses = jax.lax.scan(
+            local_round,
+            (rsu_flat, state.conn, state.agent_flat), keys)
+
+        # Alg. 3 line 6: cloud aggregation — the (1, R) @ (R, N) matmul
+        total_mass = jnp.sum(masses, axis=0)                     # (R,)
+        new_cloud = ops.cloud_agg(rsu_flat, total_mass)
+        cloud_flat = jnp.where(jnp.sum(total_mass) > 0, new_cloud,
+                               state.cloud_flat)
+        return FlatSimState(agent_flat=agent_flat, rsu_flat=rsu_flat,
+                            cloud_flat=cloud_flat, conn=conn, rng=rng)
+
+    return global_round
+
+
+def make_flat_global_round(cfg: SimConfig, hp: H2FedParams,
+                           het: HeterogeneityModel, fed: FederatedData,
+                           spec: flatten.FlatSpec,
+                           loss_fn: Callable = mlp.loss_fn):
+    """The flat-buffer global round: FlatSimState -> FlatSimState, jitted."""
+    return jax.jit(_make_flat_round_body(cfg, hp, het, fed, spec, loss_fn))
+
+
+def _make_tree_global_round(cfg: SimConfig, hp: H2FedParams,
+                            het: HeterogeneityModel, fed: FederatedData,
+                            loss_fn: Callable):
+    """The per-leaf tree-map reference round (the original engine)."""
+    x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
+        _fed_arrays(cfg, hp, fed)
 
     train_agents = jax.vmap(
         lambda x, y, w0, wr, wc, act: _local_train(
@@ -113,16 +277,8 @@ def make_global_round(cfg: SimConfig, hp: H2FedParams,
 
     def local_round(carry, key):
         rsu_params, conn, cloud_params = carry
-        k_conn, k_fsr = jax.random.split(key)
-        conn, connected = step_connectivity(k_conn, conn, het)
-        # FSR: completed epochs per agent (0 epochs == disconnected)
-        full = jax.random.bernoulli(k_fsr, het.fsr, (cfg.n_agents,))
-        epochs = jnp.where(full, hp.local_epochs,
-                           jax.random.randint(jax.random.fold_in(k_fsr, 1),
-                                              (cfg.n_agents,), 0,
-                                              max(hp.local_epochs, 1)))
-        active_steps = epochs * spe
-        mask = connected & (active_steps > 0)
+        conn, mask, active_steps = round_draws(
+            key, conn, het, hp, cfg.n_agents, spe)
 
         # Alg. 2 line 5 / Alg. 1 line 1: every agent starts from its RSU model
         w_start = gather_rsu_for_agents(rsu_params, rsu_assign)
@@ -156,27 +312,83 @@ def make_global_round(cfg: SimConfig, hp: H2FedParams,
     return jax.jit(global_round)
 
 
+def make_global_round(cfg: SimConfig, hp: H2FedParams,
+                      het: HeterogeneityModel, fed: FederatedData,
+                      loss_fn: Callable = mlp.loss_fn, *,
+                      engine: str = "flat"):
+    """Build the jitted SimState -> SimState global round.
+
+    engine="flat" runs the Pallas flat-buffer path (ravel on entry, unravel
+    on exit — the standalone ``make_flat_global_round`` avoids even that);
+    engine="tree" is the per-leaf reference.
+    """
+    if engine == "tree":
+        return _make_tree_global_round(cfg, hp, het, fed, loss_fn)
+    if engine != "flat":
+        raise ValueError(f"unknown engine {engine!r} (want 'flat'|'tree')")
+
+    body_cache: Dict[flatten.FlatSpec, Callable] = {}
+
+    @jax.jit
+    def global_round(state: SimState) -> SimState:
+        # one compiled program: ravel -> flat round -> unravel all fuse, so
+        # per-round loops (benchmarks, tests) pay no eager conversion cost.
+        # spec_of reads only static metadata, so it works on tracers and
+        # the cache is keyed per parameter structure.
+        spec = flatten.spec_of(state.cloud_params)
+        if spec not in body_cache:
+            body_cache[spec] = _make_flat_round_body(
+                cfg, hp, het, fed, spec, loss_fn)
+        out = body_cache[spec](to_flat_state(spec, state))
+        return from_flat_state(spec, out)
+
+    return global_round
+
+
 def run_simulation(cfg: SimConfig, hp: H2FedParams, het: HeterogeneityModel,
                    fed: FederatedData, init_params: PyTree,
                    n_rounds: int, *, x_test=None, y_test=None,
                    loss_fn: Callable = mlp.loss_fn,
                    eval_fn: Optional[Callable] = None,
+                   engine: str = "flat",
                    ) -> Tuple[SimState, Dict[str, np.ndarray]]:
-    """Run ``n_rounds`` global rounds; returns final state + history."""
+    """Run ``n_rounds`` global rounds; returns final state + history.
+
+    With the default flat engine the fleet stays in (A, N)/(R, N)/(N,)
+    buffers across all rounds; pytrees are materialized only for the
+    per-round eval and for the returned final state.
+    """
     hp.validate(), het.validate()
     key = jax.random.key(cfg.seed)
-    state = init_state(cfg, init_params, key)
-    round_fn = make_global_round(cfg, hp, het, fed, loss_fn)
     if eval_fn is None and x_test is not None:
         x_test, y_test = jnp.asarray(x_test), jnp.asarray(y_test)
         eval_fn = jax.jit(lambda p: mlp.accuracy(p, x_test, y_test))
 
+    if engine == "flat":
+        spec = flatten.spec_of(init_params)
+        state = init_flat_state(cfg, spec, init_params, key)
+        round_fn = make_flat_global_round(cfg, hp, het, fed, spec, loss_fn)
+        # eval_fn is called eagerly (unravel is cheap outside jit) so
+        # user-supplied non-traceable metrics keep working; the built-in
+        # accuracy eval_fn above is already jitted.
+        eval_state = (None if eval_fn is None else
+                      (lambda s: eval_fn(spec.unravel(s.cloud_flat))))
+        finalize = lambda s: from_flat_state(spec, s)        # noqa: E731
+    elif engine == "tree":
+        state = init_state(cfg, init_params, key)
+        round_fn = _make_tree_global_round(cfg, hp, het, fed, loss_fn)
+        eval_state = (None if eval_fn is None else
+                      (lambda s: eval_fn(s.cloud_params)))
+        finalize = lambda s: s                               # noqa: E731
+    else:
+        raise ValueError(f"unknown engine {engine!r} (want 'flat'|'tree')")
+
     accs, rounds = [], []
     for r in range(n_rounds):
         state = round_fn(state)
-        if eval_fn is not None and (r % cfg.eval_every == 0
-                                    or r == n_rounds - 1):
-            accs.append(float(eval_fn(state.cloud_params)))
+        if eval_state is not None and (r % cfg.eval_every == 0
+                                       or r == n_rounds - 1):
+            accs.append(float(eval_state(state)))
             rounds.append(r + 1)
     history = {"round": np.asarray(rounds), "acc": np.asarray(accs)}
-    return state, history
+    return finalize(state), history

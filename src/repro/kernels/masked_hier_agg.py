@@ -7,9 +7,12 @@ special case.  Both are the same computation:
     out[r, n] = Σ_a  W[r, a] · X[a, n]
 
 where ``W`` is the (R, A) row-normalized masked weight matrix (zero outside
-each RSU's cohort).  That is a skinny matmul — MXU work, not gather work —
-which is exactly how the TPU wants hierarchy aggregation expressed (the
-GPU-native formulation would be a segmented reduction; DESIGN.md §2).
+each RSU's cohort; core/aggregation.build_weight_matrix is the reference).
+That is a skinny matmul — MXU work, not gather work — which is exactly how
+the TPU wants hierarchy aggregation expressed (the GPU-native formulation
+would be a segmented reduction; DESIGN.md §2).  The flat-buffer simulation
+engine (DESIGN.md §3) calls this every round via the kernels/ops facade,
+which routes to the equivalent XLA dot off-TPU.
 
 Tiling: A and R are small (≤ a few hundred agents), so W stays fully
 resident in VMEM; the grid walks column blocks of X (the parameter axis,
@@ -23,6 +26,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+# the weighting algebra lives in core.aggregation (the reference
+# implementation tests pin this kernel against); re-exported for callers
+# that treat this module as the aggregation entry point.
+from repro.core.aggregation import (build_weight_matrix, cohort_mass,  # noqa: F401
+                                    normalized_weights)
 
 LANE = 128
 
@@ -65,21 +74,6 @@ def weighted_agg_matmul(weight_matrix: jax.Array, stacked: jax.Array, *,
     return out[:, :N] if pad_n else out
 
 
-def build_weight_matrix(weights: jax.Array, mask: jax.Array,
-                        rsu_assign: jax.Array, n_rsus: int) -> jax.Array:
-    """Row-normalized (R, A) masked weight matrix.
-
-    Rows with zero surviving mass become all-zero — the caller blends those
-    RSUs with their previous model (``blend_on_mass`` semantics).
-    """
-    A = weights.shape[0]
-    w = weights.astype(jnp.float32) * mask.astype(jnp.float32)   # (A,)
-    onehot = (rsu_assign[None, :] == jnp.arange(n_rsus)[:, None])
-    wm = onehot.astype(jnp.float32) * w[None, :]                 # (R, A)
-    mass = jnp.sum(wm, axis=1, keepdims=True)
-    return wm / jnp.where(mass > 0, mass, 1.0)
-
-
 def masked_hier_agg(stacked_flat: jax.Array, weights: jax.Array,
                     mask: jax.Array, rsu_assign: jax.Array, n_rsus: int, *,
                     interpret: bool = False):
@@ -89,17 +83,13 @@ def masked_hier_agg(stacked_flat: jax.Array, weights: jax.Array,
     Returns (rsu_params (R, N), mass (R,)).
     """
     W = build_weight_matrix(weights, mask, rsu_assign, n_rsus)
-    w = weights.astype(jnp.float32) * mask.astype(jnp.float32)
-    mass = jax.ops.segment_sum(w, rsu_assign, num_segments=n_rsus)
+    mass = cohort_mass(weights, mask, rsu_assign, n_rsus)
     return weighted_agg_matmul(W, stacked_flat, interpret=interpret), mass
 
 
 def cloud_agg(rsu_flat: jax.Array, rsu_weights: jax.Array, *,
               interpret: bool = False) -> jax.Array:
     """Cloud aggregation: the R→1 case.  rsu_flat: (R, N) -> (N,)."""
-    R = rsu_flat.shape[0]
-    mass = jnp.sum(rsu_weights.astype(jnp.float32))
-    wn = jnp.where(mass > 0, rsu_weights.astype(jnp.float32) / jnp.where(
-        mass > 0, mass, 1.0), jnp.ones((R,), jnp.float32) / R)
+    wn, _ = normalized_weights(rsu_weights)
     return weighted_agg_matmul(wn[None, :], rsu_flat,
                                interpret=interpret)[0]

@@ -1,9 +1,12 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-On CPU (this container) every call runs in ``interpret=True`` mode — the
-kernel body executes in Python per grid cell with identical semantics; on a
-real TPU backend the same code lowers to Mosaic.  ``INTERPRET`` is resolved
-once from the backend so call sites never need to care.
+On a TPU backend these lower to Mosaic.  Off-TPU the *pointwise/scan*
+kernels run in ``interpret=True`` mode (kernel body as jax ops, identical
+semantics); the *aggregation matmuls* instead route to the equivalent
+XLA ``dot_general`` formulation — interpret-mode grid walking is a
+debugging tool, not the CPU deploy path (see benchmarks/kernels_micro), and
+the hot simulation loop (fedsim/simulator engine="flat") calls these every
+round.  Tests pin both lowerings against kernels/ref.py.
 """
 from __future__ import annotations
 
@@ -12,6 +15,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.aggregation import (build_weight_matrix, cohort_mass,
+                                    normalized_weights)
 from repro.kernels import dual_proximal_sgd as _dps
 from repro.kernels import flash_attention as _fa
 from repro.kernels import masked_hier_agg as _mha
@@ -20,6 +25,16 @@ from repro.kernels import masked_hier_agg as _mha
 @functools.lru_cache(maxsize=1)
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _xla_agg_matmul(weight_matrix, stacked):
+    """The aggregation matmul as one XLA dot — same contract as
+    ``masked_hier_agg.weighted_agg_matmul`` (fp32 accumulate, param dtype
+    out)."""
+    out = jax.lax.dot_general(
+        weight_matrix.astype(jnp.float32), stacked.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    return out.astype(stacked.dtype)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
@@ -40,13 +55,23 @@ def dual_proximal_sgd_tree(w, g, a1, a2, *, lr: float, mu1: float,
                                        mu2=mu2, interpret=_interpret())
 
 
+def weighted_agg_matmul(weight_matrix, stacked):
+    """(R, A) @ (A, N) aggregation matmul — the raw kernel, for callers
+    (e.g. the sharded engine) that build their own partial weight matrix."""
+    if _interpret():
+        return _xla_agg_matmul(weight_matrix, stacked)
+    return _mha.weighted_agg_matmul(weight_matrix, stacked, interpret=False)
+
+
 def masked_hier_agg(stacked_flat, weights, mask, rsu_assign, n_rsus: int):
-    return _mha.masked_hier_agg(stacked_flat, weights, mask, rsu_assign,
-                                n_rsus, interpret=_interpret())
+    W = build_weight_matrix(weights, mask, rsu_assign, n_rsus)
+    mass = cohort_mass(weights, mask, rsu_assign, n_rsus)
+    return weighted_agg_matmul(W, stacked_flat), mass
 
 
 def cloud_agg(rsu_flat, rsu_weights):
-    return _mha.cloud_agg(rsu_flat, rsu_weights, interpret=_interpret())
+    wn, _ = normalized_weights(rsu_weights)
+    return weighted_agg_matmul(wn[None, :], rsu_flat)[0]
 
 
 def slstm_scan(wx, r_gates, b_gates, *, block_s: int = 256):

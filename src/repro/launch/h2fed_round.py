@@ -35,9 +35,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import flatten
 from repro.core.h2fed import H2FedParams
 from repro.launch import sharding as shard
-from repro.launch.mesh import n_agents
+from repro.launch.mesh import n_agents, shard_map
 from repro.models import model as M
 from repro.models.config import ArchConfig
 
@@ -60,6 +61,25 @@ def _wmean_over(axis: str, tree: PyTree, weight, old: PyTree) -> PyTree:
             .astype(leaf.dtype)
 
     return jax.tree.map(agg, tree, old), mass
+
+
+def _wmean_over_flat(axis: str, tree: PyTree, weight, old: PyTree) -> PyTree:
+    """``_wmean_over`` on the raveled (N,) buffer (DESIGN.md §3): ONE psum
+    of one contiguous fp32 vector per aggregation layer instead of an
+    O(leaves) collective schedule.  Semantics identical to the per-leaf
+    path.
+
+    Model-axis-replicated fleets only: raveling a tensor-parallel-sharded
+    tree would force an all-gather over `model` before the psum, inflating
+    the collective volume by the TP degree — ``make_h2fed_round`` rejects
+    that combination up front."""
+    spec = flatten.spec_of(tree)
+    vec = spec.ravel(tree)
+    mass = jax.lax.psum(weight, axis)
+    safe = jnp.where(mass > 0, mass, 1.0)
+    s = jax.lax.psum(vec * weight, axis)
+    out = jnp.where(mass > 0, s / safe, spec.ravel(old))
+    return spec.unravel(out), mass
 
 
 def _quantized_pod_mean(tree: PyTree, anchor: PyTree, weight, old: PyTree,
@@ -91,8 +111,14 @@ def _quantized_pod_mean(tree: PyTree, anchor: PyTree, weight, old: PyTree,
 
 def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
                      *, quantize_cloud: bool = False,
+                     flat_agg: bool = False,
                      microbatch: int = 0):
     """Build the hierarchical round function (to be jit'd by the caller).
+
+    flat_agg=True runs both aggregation layers on the raveled parameter
+    buffer (one fused collective each — the flat-buffer engine's formulation
+    threaded into the SPMD program); incompatible with quantize_cloud,
+    which keeps its own per-leaf scale handling.
 
     Inputs (global view):
       cloud_params — model-sharded, replicated over (pod, data)
@@ -102,6 +128,15 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
     Output: (new cloud_params, metrics)
     """
     pod = _pod_axis(mesh)
+    if flat_agg and quantize_cloud:
+        raise ValueError(
+            "flat_agg composes with the exact cloud reduction only")
+    if flat_agg and mesh.shape.get("model", 1) > 1:
+        raise ValueError(
+            "flat_agg requires model-axis size 1: raveling tensor-parallel-"
+            "sharded params would all-gather over `model` before the psum "
+            "(use the per-leaf path on TP meshes)")
+    wmean = _wmean_over_flat if flat_agg else _wmean_over
     aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
 
     def agent_loss(w, local_batch):
@@ -140,7 +175,7 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
             local_batch, m = inp
             w_ik = local_epochs(w_k, cloud_params, local_batch)
             weight = my_n * m                          # CSR-masked volume
-            w_k, mass = _wmean_over("data", w_ik, weight, w_k)
+            w_k, mass = wmean("data", w_ik, weight, w_k)
             return (w_k, mass_acc + mass), mass
 
         (w_k, mass_total), masses = jax.lax.scan(
@@ -157,7 +192,7 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
                 new_cloud = _quantized_pod_mean(
                     w_k, cloud_params, mass_total, cloud_params, pod_mass)
             else:
-                new_cloud, _ = _wmean_over(pod, w_k, mass_total, cloud_params)
+                new_cloud, _ = wmean(pod, w_k, mass_total, cloud_params)
 
         metrics = {"surviving_mass": pod_mass,
                    "lar_masses": masses}
@@ -173,12 +208,12 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
     n_spec = P(batch_axes)
     out_mass = P()
 
-    smapped = jax.shard_map(
-        round_fn, mesh=mesh,
+    smapped = shard_map(
+        round_fn, mesh,
         in_specs=(p_rep, batch_spec, mask_spec, n_spec),
         out_specs=(p_rep, {"surviving_mass": out_mass,
                            "lar_masses": P(None)}),
-        axis_names=axis_names, check_vma=False)
+        axis_names=axis_names)
     return smapped
 
 
@@ -222,7 +257,8 @@ def comm_model(cfg: ArchConfig, hp: H2FedParams, mesh,
 
 def round_input_specs(cfg: ArchConfig, shape_name: str, mesh,
                       hp: Optional[H2FedParams] = None,
-                      quantize_cloud: bool = False) -> Dict[str, Any]:
+                      quantize_cloud: bool = False,
+                      flat_agg: bool = False) -> Dict[str, Any]:
     """(fn, SDS args, in_shardings) for the dry-run driver."""
     from repro.launch.steps import SHAPES, shape_adapted_config
 
@@ -255,7 +291,8 @@ def round_input_specs(cfg: ArchConfig, shape_name: str, mesh,
     mask = jax.ShapeDtypeStruct((hp.lar, A), f32)
     n_data = jax.ShapeDtypeStruct((A,), f32)
 
-    fn = make_h2fed_round(cfg, hp, mesh, quantize_cloud=quantize_cloud)
+    fn = make_h2fed_round(cfg, hp, mesh, quantize_cloud=quantize_cloud,
+                          flat_agg=flat_agg)
     return dict(
         fn=fn,
         args=(params_shapes, batch_tree, mask, n_data),

@@ -13,20 +13,48 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions.
+
+    ``axis_types`` (explicit Auto axes) only exists on newer jax; on the
+    0.4.x line every mesh axis is Auto already, so omitting it is exact.
+    """
+    shape, axes = tuple(shape), tuple(axes)
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names, check: bool = False):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax takes ``axis_names`` (manual axes) + ``check_vma``; the 0.4.x
+    ``jax.experimental.shard_map`` expresses the same contract as
+    ``auto`` (the complement set) + ``check_rep``.
+    """
+    axis_names = frozenset(axis_names)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - axis_names
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check, auto=auto)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count
     to cover prod(shape) devices)."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def agent_axes(mesh) -> tuple:

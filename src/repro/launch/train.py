@@ -35,6 +35,9 @@ def _parse_args():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--quantize-cloud", action="store_true")
+    ap.add_argument("--flat-agg", action="store_true",
+                    help="flat-buffer aggregation: one fused collective per "
+                         "hierarchy layer instead of per-leaf reductions")
     ap.add_argument("--adaptive-mu", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=2)
@@ -63,9 +66,10 @@ def main():
     from repro.launch.h2fed_round import comm_model, make_h2fed_round
     from repro.models import model as M
 
+    from repro.launch.mesh import make_mesh
+
     mesh_shape = tuple(int(x) for x in args.mesh.split(","))
-    mesh = jax.make_mesh(mesh_shape, ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh(mesh_shape, ("pod", "data", "model"))
     A = mesh_shape[0] * mesh_shape[1]
     cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
     if cfg.encoder.kind != "none":
@@ -107,7 +111,8 @@ def main():
             key = (hp.mu1, hp.mu2)
             if key not in round_fns:
                 fn = make_h2fed_round(cfg, hp, mesh,
-                                      quantize_cloud=args.quantize_cloud)
+                                      quantize_cloud=args.quantize_cloud,
+                                      flat_agg=args.flat_agg)
                 round_fns[key] = jax.jit(fn, in_shardings=(
                     shard.param_shardings_model_only(
                         jax.eval_shape(lambda: params), mesh),

@@ -1,0 +1,114 @@
+"""Property-testing compat layer: real hypothesis when installed, a
+deterministic seeded sampler otherwise.
+
+The CI image installs ``hypothesis`` from ``pyproject.toml`` and gets the
+real shrinking engine.  Hermetic containers that cannot pip-install still
+collect and run the property tests through the fallback below: each
+``@given`` test is executed ``max_examples`` times with values drawn from a
+``numpy`` Generator seeded by the test's qualified name, so failures are
+reproducible run-to-run (no shrinking, but the drawn kwargs appear in the
+traceback).
+
+Only the strategy surface this repo uses is implemented:
+``st.integers / st.floats / st.sampled_from / st.booleans`` and
+``hnp.arrays(dtype, shape, elements=...)``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import zlib
+
+import numpy as np
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def draw(self, rng):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, width=64, **_kw):
+            def sample(rng):
+                v = float(rng.uniform(min_value, max_value))
+                if width == 32:
+                    v = float(np.float32(v))
+                return min(max(v, min_value), max_value)
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    class _HypothesisNumpy:
+        @staticmethod
+        def arrays(dtype, shape, elements=None):
+            shape = (shape,) if isinstance(shape, int) else tuple(shape)
+
+            def sample(rng):
+                if elements is None:
+                    return rng.standard_normal(shape).astype(dtype)
+                n = int(np.prod(shape)) if shape else 1
+                flat = [elements.draw(rng) for _ in range(n)]
+                return np.asarray(flat, dtype).reshape(shape)
+
+            return _Strategy(sample)
+
+    st = _Strategies()
+    hnp = _HypothesisNumpy()
+
+    def settings(max_examples: int = 10, **_kw):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_prop_max_examples", 10)
+                n = int(os.environ.get("PROP_MAX_EXAMPLES", n))
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # hide the drawn params from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "hnp", "settings", "st"]

@@ -1,11 +1,9 @@
 """Property tests for hierarchical CSR-masked aggregation (Alg. 2/3)."""
 from __future__ import annotations
 
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from prop_compat import given, hnp, settings, st
 
 from repro.core.aggregation import (blend_on_mass, broadcast_to_agents,
                                     cloud_aggregate, gather_rsu_for_agents,

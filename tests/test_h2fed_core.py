@@ -1,13 +1,11 @@
 """Unit + property tests for the H²-Fed objective (paper Eq. 4/6, Alg. 1)."""
 from __future__ import annotations
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from prop_compat import given, settings, st
 
 from repro.core.h2fed import (H2FedParams, dual_proximal_penalty,
                               h2fed_objective, proximal_grad_terms,

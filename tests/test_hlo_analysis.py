@@ -56,8 +56,8 @@ class TestInPlaceUpdates:
         assert b >= honest / 4, b
 
     def test_collectives_counted_per_kind(self):
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1,), ("data",))
         # single-device: no collectives expected; analyzer returns zeros
         def f(x):
             return x * 2

@@ -14,6 +14,18 @@ import pytest
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
+# jaxlib < 0.5 hard-aborts (Check failed: sharding.IsManualSubgroup()) when
+# the SPMD partitioner meets the transformer h2fed_round's manual(pod,data) x
+# auto(model) subgroup program.  The MLP-fleet sharded engine (test_sharded)
+# and the model-axis-1 CLI path are unaffected; on jax >= 0.5 these run.
+import jax  # noqa: E402
+
+OLD_JAX_SPMD = tuple(
+    int(x) for x in jax.__version__.split(".")[:2]) < (0, 5)
+needs_spmd_subgroups = pytest.mark.skipif(
+    OLD_JAX_SPMD, reason="manual x auto shard_map subgroups crash the XLA "
+                         "SPMD partitioner on jaxlib < 0.5")
+
 
 def _run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
     env = dict(os.environ)
@@ -55,6 +67,7 @@ class TestMesh:
 
 
 class TestH2FedRoundShardMap:
+    @needs_spmd_subgroups
     def test_round_matches_fedsim_semantics(self):
         """The compiled shard_map hierarchical round must be numerically
         equivalent to a replicated-math reference of Algorithms 1-3 (same
@@ -143,6 +156,61 @@ class TestH2FedRoundShardMap:
         out = _run_sub(code, devices=8, timeout=900)
         assert "match ok" in out
 
+    def test_flat_agg_matches_per_leaf(self):
+        """flat_agg=True (one raveled-buffer collective per layer) must be
+        numerically identical to the per-leaf reductions.  model-axis size 1
+        so the program runs on every supported jax (see needs_spmd_subgroups
+        for the TP>1 regime)."""
+        code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch.h2fed_round import make_h2fed_round
+        from repro.core.h2fed import H2FedParams
+        from repro.configs.registry import get_reduced_config
+        from repro.models import model as M
+
+        mesh = make_test_mesh((2, 4, 1))
+        cfg = get_reduced_config('qwen3-0.6b', n_layers=2, d_model=128,
+                                 d_ff=256, vocab_size=128, n_heads=4,
+                                 n_kv_heads=2)
+        hp = H2FedParams(mu1=0.05, mu2=0.01, lar=2, local_epochs=1, lr=0.1)
+        A, b, S = 8, 2, 16
+        rng = np.random.default_rng(0)
+        params = M.init_params(cfg, jax.random.key(0))
+        batch = {'tokens': jnp.asarray(rng.integers(0, 128, (hp.lar, A, b, S)), jnp.int32),
+                 'labels': jnp.asarray(rng.integers(0, 128, (hp.lar, A, b, S)), jnp.int32)}
+        mask = jnp.asarray(rng.integers(0, 2, (hp.lar, A)), jnp.float32)
+        mask = mask.at[:, 0].set(1.0)
+        n_data = jnp.asarray(rng.uniform(1, 3, (A,)), jnp.float32)
+        with mesh:
+            o1, m1 = jax.jit(make_h2fed_round(cfg, hp, mesh))(
+                params, batch, mask, n_data)
+            o2, m2 = jax.jit(make_h2fed_round(cfg, hp, mesh, flat_agg=True))(
+                params, batch, mask, n_data)
+        for a, b_ in zip(jax.tree.leaves(o1), jax.tree.leaves(o2)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b_, np.float32),
+                                       atol=1e-6, rtol=1e-6)
+        assert float(m1['surviving_mass']) == float(m2['surviving_mass'])
+        # guard rails: unsupported combinations fail fast
+        try:
+            make_h2fed_round(cfg, hp, mesh, flat_agg=True,
+                             quantize_cloud=True)
+            raise SystemExit('expected ValueError (quantize)')
+        except ValueError:
+            pass
+        mesh_tp = make_test_mesh((2, 2, 2))
+        try:
+            make_h2fed_round(cfg, hp, mesh_tp, flat_agg=True)
+            raise SystemExit('expected ValueError (TP mesh)')
+        except ValueError:
+            pass
+        print('flat-agg ok')
+        """
+        out = _run_sub(code, devices=8, timeout=900)
+        assert "flat-agg ok" in out
+
+    @needs_spmd_subgroups
     def test_quantized_cloud_agg_close_to_exact(self):
         """int8 cross-pod aggregation stays within quantization error."""
         code = """
@@ -203,7 +271,9 @@ class TestDryRunMini:
             lowered = jax.jit(spec['fn'], in_shardings=spec['in_shardings']) \\
                 .lower(*spec['args'])
             compiled = lowered.compile()
-        assert compiled.cost_analysis()['flops'] > 0
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca   # old-jax: list
+        assert ca['flops'] > 0
         txt = compiled.as_text()
         assert 'all-reduce' in txt or 'all-gather' in txt
         print('ok')
@@ -224,7 +294,11 @@ class TestDryRunMini:
         with mesh:
             compiled = jax.jit(spec['fn'], in_shardings=spec['in_shardings']) \\
                 .lower(*spec['args']).compile()
-        assert compiled.memory_analysis().peak_memory_in_bytes > 0
+        mem = compiled.memory_analysis()
+        peak = getattr(mem, 'peak_memory_in_bytes', None)
+        if peak is None:                      # old-jax: no peak stat
+            peak = mem.temp_size_in_bytes + mem.output_size_in_bytes
+        assert peak > 0
         print('ok')
         """
         assert "ok" in _run_sub(code, devices=8, timeout=900)

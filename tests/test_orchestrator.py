@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from prop_compat import given, settings, st
 
 from repro.core import orchestrator as orch
 from repro.core.h2fed import H2FedParams
