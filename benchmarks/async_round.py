@@ -1,0 +1,208 @@
+"""Sync-vs-async engine benchmark (DESIGN.md §6) for the BENCH json flow.
+
+Two measurements on the SAME federated workload:
+
+  * round latency — one compiled global round of engine="flat" (the
+    synchronous barrier) vs engine="async" (staleness-weighted RSU buffers,
+    in-flight delivery bookkeeping): what the semi-async machinery costs.
+  * 90%-disconnect convergence — the paper's headline regime: only 10% of
+    agents are TIMELY per tick.  The sync engine sees csr=0.1 and discards
+    everything else; the async engine sees the same timely rate
+    (csr_async · P(delay=0) == 0.1) but additionally merges the delayed
+    majority late (staleness-decayed) instead of discarding their work.
+    The record lands in the bench JSON artifact so the convergence
+    trajectory is tracked per PR.
+
+Standalone:
+  PYTHONPATH=src python -m benchmarks.async_round \
+      [--agents 20 --rsus 4 --rounds 2 --conv-rounds 6 --csr 0.1 \
+       --max-delay 2 --out results/bench]
+
+Via the harness:
+  PYTHONPATH=src python -m benchmarks.run --only async
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from pathlib import Path
+from typing import List
+
+
+def _parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--agents", type=int, default=20)
+    ap.add_argument("--rsus", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=2, help="timed rounds")
+    ap.add_argument("--conv-rounds", type=int, default=6,
+                    help="convergence-record rounds")
+    ap.add_argument("--lar", type=int, default=2)
+    ap.add_argument("--csr", type=float, default=0.1,
+                    help="connection success ratio (0.1 = 90%% disconnect)")
+    ap.add_argument("--max-delay", type=int, default=2)
+    ap.add_argument("--delay-p", type=float, default=0.6)
+    ap.add_argument("--staleness-decay", type=float, default=0.5)
+    ap.add_argument("--buffer-keep", type=float, default=0.5)
+    ap.add_argument("--n-train", type=int, default=2000)
+    ap.add_argument("--out", default=os.environ.get("REPRO_RESULTS",
+                                                    "results") + "/bench")
+    return ap.parse_args()
+
+
+def _time_rounds(round_fn, state, n: int, unpack: bool = False) -> float:
+    """Mean per-round wall seconds, compile + relayout warmup excluded.
+    The round jits donate their input state, so every call rebinds."""
+    import jax
+
+    def step(s):
+        out = round_fn(s)
+        return out[0] if unpack else out
+
+    state = step(step(state))                    # compile x2 + warmup
+    jax.block_until_ready(state)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        state = step(state)
+    jax.block_until_ready(state)
+    return (time.perf_counter() - t0) / n
+
+
+def run_cell(args) -> dict:
+    import jax
+
+    from repro.configs.mnist_mlp import CONFIG as MLP_CFG
+    from repro.core import flatten
+    from repro.core.baselines import h2fed
+    from repro.core.heterogeneity import HeterogeneityModel
+    from repro.data.partition import scenario_two
+    from repro.data.synthetic import mnist_class_task
+    from repro.fedsim.async_engine import (AsyncConfig, init_async_state,
+                                           make_async_global_round)
+    from repro.fedsim.simulator import (SimConfig, init_flat_state,
+                                        make_flat_global_round,
+                                        run_simulation)
+    from repro.models import mlp
+
+    train, test = mnist_class_task(n_train=args.n_train, n_test=400, seed=0)
+    fed = scenario_two(train, n_agents=args.agents, n_rsus=args.rsus,
+                       seed=0)
+    cfg = SimConfig(n_agents=args.agents, n_rsus=args.rsus, batch=16,
+                    seed=0)
+    hp = h2fed(mu1=0.1, mu2=0.005, lar=args.lar, lr=0.1)
+    het_sync = HeterogeneityModel(csr=args.csr, lar=hp.lar)
+    # same TIMELY participation as sync: csr_async·P(d=0) == csr; the
+    # delayed majority is the straggler work async recovers late
+    p_fresh = 1.0 - args.delay_p if args.max_delay else 1.0
+    csr_async = min(1.0, args.csr / max(p_fresh, args.csr))
+    het_async = HeterogeneityModel(csr=csr_async, lar=hp.lar,
+                                   max_delay=args.max_delay,
+                                   delay_p=args.delay_p)
+    acfg = AsyncConfig(staleness_decay=args.staleness_decay,
+                       buffer_keep=args.buffer_keep)
+    params = mlp.init_params(MLP_CFG, jax.random.key(0))
+    spec = flatten.spec_of(params)
+
+    # --- round latency: the barrier engine vs the semi-async engine ---
+    # (fresh key per engine: the donated round jits consume their input
+    # state, including the rng key buffer)
+    flat_round = make_flat_global_round(cfg, hp, het_sync, fed, spec)
+    t_flat = _time_rounds(
+        flat_round,
+        init_flat_state(cfg, spec, params, jax.random.key(cfg.seed)),
+        args.rounds)
+    async_round = make_async_global_round(cfg, hp, het_async, fed, spec,
+                                          acfg)
+    t_async = _time_rounds(
+        async_round,
+        init_async_state(cfg, spec, params, jax.random.key(cfg.seed)),
+        args.rounds, unpack=True)
+
+    # --- 90%-disconnect convergence record: sync barrier vs late merges ---
+    _, h_sync = run_simulation(cfg, hp, het_sync, fed, params,
+                               args.conv_rounds, x_test=test.x,
+                               y_test=test.y, engine="flat")
+    _, h_async = run_simulation(cfg, hp, het_async, fed, params,
+                                args.conv_rounds, x_test=test.x,
+                                y_test=test.y, engine="async",
+                                async_cfg=acfg)
+
+    return {
+        "bench": "async_round",
+        "n_devices": len(jax.devices()),
+        "n_agents": args.agents,
+        "n_rsus": args.rsus,
+        "lar": args.lar,
+        "n_params": spec.n,
+        "csr": args.csr,
+        "csr_async": csr_async,
+        "max_delay": args.max_delay,
+        "staleness_decay": args.staleness_decay,
+        "buffer_keep": args.buffer_keep,
+        "round_s": {"flat": t_flat, "async": t_async},
+        "async_vs_flat": t_flat / max(t_async, 1e-12),
+        "convergence": {
+            "round": [int(r) for r in h_sync["round"]],
+            "acc_sync": [float(a) for a in h_sync["acc"]],
+            "acc_async": [float(a) for a in h_async["acc"]],
+            "absorbed_mass_async":
+                [float(m) for m in h_async["absorbed_mass"]],
+            "pending_mass_async":
+                [float(m) for m in h_async["pending_mass"]],
+        },
+    }
+
+
+def _csv_rows(rec: dict) -> List[str]:
+    from benchmarks.common import csv_row
+    rows = [csv_row(f"async_round/{eng}", s * 1e6,
+                    f"A{rec['n_agents']}xR{rec['n_rsus']}")
+            for eng, s in rec["round_s"].items()]
+    conv = rec["convergence"]
+    rows.append(csv_row("async_round/conv_final_sync",
+                        conv["acc_sync"][-1] * 1e6,
+                        f"csr={rec['csr']}"))
+    rows.append(csv_row("async_round/conv_final_async",
+                        conv["acc_async"][-1] * 1e6,
+                        f"csr={rec['csr']} D={rec['max_delay']}"))
+    return rows
+
+
+def run() -> List[str]:
+    """Harness entry (benchmarks.run --only async): one in-process cell —
+    device count is irrelevant (both engines are single-jit programs)."""
+    args = _parse_args_default()
+    rec = run_cell(args)
+    _write(rec, Path(args.out))
+    return _csv_rows(rec)
+
+
+def _parse_args_default():
+    import sys
+    argv, sys.argv = sys.argv, [sys.argv[0]]
+    try:
+        return _parse_args()
+    finally:
+        sys.argv = argv
+
+
+def _write(rec: dict, out_dir: Path):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / "async_round.json"
+    path.write_text(json.dumps(rec, indent=1))
+    return path
+
+
+def main():
+    import sys
+    args = _parse_args()
+    rec = run_cell(args)
+    path = _write(rec, Path(args.out))
+    for row in _csv_rows(rec):
+        print(row)
+    print(f"[json] {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows for:
   kernels — Pallas-kernel microbenchmarks (interpret mode vs jnp oracle)
   roofline — dry-run roofline terms           (deliverable g)
   sharded — engine round latency: tree vs flat vs shard_map, 1 vs 8 devices
+  async   — sync-vs-async round latency + 90%-disconnect convergence record
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline]
                                                 [--json results/bench/bench.json]
@@ -60,6 +61,11 @@ def bench_sharded():
     return sharded_round.run()
 
 
+def bench_async():
+    from benchmarks import async_round
+    return async_round.run()
+
+
 SUITES = {
     "fig2": bench_fig2,
     "fig3": bench_fig3,
@@ -68,6 +74,7 @@ SUITES = {
     "roofline": bench_roofline,
     "adaptive": bench_adaptive,
     "sharded": bench_sharded,
+    "async": bench_async,
 }
 
 

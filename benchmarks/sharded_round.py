@@ -86,24 +86,30 @@ def run_cell(args) -> dict:
     het = HeterogeneityModel(csr=0.8, lar=hp.lar)
     params = mlp.init_params(MLP_CFG, jax.random.key(0))
     spec = flatten.spec_of(params)
-    key = jax.random.key(cfg.seed)
+
+    # fresh key per engine: the flat/sharded round jits donate their input
+    # state, so a shared key buffer would be consumed by the first engine
+    def key():
+        return jax.random.key(cfg.seed)
 
     timings = {}
     # tree reference
     tree_round = make_global_round(cfg, hp, het, fed, engine="tree")
-    timings["tree"] = _time_rounds(tree_round, init_state(cfg, params, key),
+    timings["tree"] = _time_rounds(tree_round,
+                                   init_state(cfg, params, key()),
                                    args.rounds)
     # flat Pallas engine
     flat_round = make_flat_global_round(cfg, hp, het, fed, spec)
     timings["flat"] = _time_rounds(
-        flat_round, init_flat_state(cfg, spec, params, key), args.rounds)
+        flat_round, init_flat_state(cfg, spec, params, key()), args.rounds)
     # sharded flat engine over the fleet mesh
     mesh = sharded.make_fleet_mesh()
     sh_round = sharded.make_sharded_global_round(cfg, hp, het, fed, spec,
                                                  mesh)
     with mesh:
         timings["sharded"] = _time_rounds(
-            sh_round, init_flat_state(cfg, spec, params, key), args.rounds)
+            sh_round, init_flat_state(cfg, spec, params, key()),
+            args.rounds)
 
     return {
         "bench": "sharded_round",

@@ -12,6 +12,14 @@ This module is the REFERENCE implementation of the weighting algebra:
 single source of truth shared by the tree-map path here, the Pallas matmul
 kernel (kernels/masked_hier_agg re-exports them), and the sharded engine
 (fedsim/sharded) — tests pin the kernel paths against these.
+
+It also owns the STALENESS algebra of the semi-async engine (DESIGN.md §6):
+``staleness_weights`` (the decay schedule applied to late arrivals),
+``scatter_accumulate`` (the unnormalized segment-sum late-merge the Pallas
+route in kernels/ops is pinned against), and ``buffer_absorb`` (the running
+cohort-mass RSU-buffer merge that keeps weights normalized as stragglers
+trickle in).  ``fedsim/async_engine`` and ``launch/h2fed_round
+--async-rounds`` both consume exactly these functions.
 """
 from __future__ import annotations
 
@@ -71,6 +79,70 @@ def build_weight_matrix(weights: jax.Array, mask: jax.Array,
     wm = unnormalized_weight_matrix(weights, mask, rsu_assign, n_rsus)
     mass = jnp.sum(wm, axis=1, keepdims=True)
     return wm / jnp.where(mass > 0, mass, 1.0)
+
+
+def staleness_weights(staleness: jax.Array, *, decay: float = 0.5,
+                      schedule: str = "exp") -> jax.Array:
+    """Staleness-decay multiplier s(τ) for updates arriving τ ticks late.
+
+    schedule="exp":  s(τ) = decay^τ    (decay in [0, 1]; 1.0 disables decay)
+    schedule="poly": s(τ) = (1+τ)^-decay  (decay >= 0; 0.0 disables decay)
+
+    Both schedules are monotone non-increasing in τ with s(0) = 1, so fresh
+    arrivals are never down-weighted and the synchronous limit is exact
+    (property-tested in tests/test_async.py).
+    """
+    tau = jnp.asarray(staleness, jnp.float32)
+    if schedule == "exp":
+        return jnp.power(jnp.float32(decay), tau)
+    if schedule == "poly":
+        return jnp.power(1.0 + tau, -jnp.float32(decay))
+    raise ValueError(f"unknown schedule {schedule!r} (want 'exp'|'poly')")
+
+
+def scatter_accumulate(stacked: jax.Array, weights: jax.Array,
+                       rsu_assign: jax.Array,
+                       n_rsus: int) -> Tuple[jax.Array, jax.Array]:
+    """Unnormalized masked scatter-accumulate (the batched late-merge):
+
+        num[r]  = Σ_{a: assign(a)=r} w_a · x_a      -> (R, N)
+        mass[r] = Σ_{a: assign(a)=r} w_a            -> (R,)
+
+    This segment-sum formulation is the reference; ``kernels/ops
+    .masked_scatter_accumulate`` routes to the Pallas MXU matmul on TPU and
+    back here off-TPU.  Weights already carry mask x data-volume x staleness
+    decay — zero-weight rows contribute nothing.
+    """
+    w = weights.astype(jnp.float32)
+    mass = jax.ops.segment_sum(w, rsu_assign, num_segments=n_rsus)
+    num = jax.ops.segment_sum(stacked.astype(jnp.float32) * w[:, None],
+                              rsu_assign, num_segments=n_rsus)
+    return num, mass
+
+
+def buffer_absorb(buf: jax.Array, buf_mass: jax.Array, num: jax.Array,
+                  new_mass: jax.Array, *, keep: float = 0.0,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Merge one tick's accumulated arrivals into a staleness buffer.
+
+    buf: (R, N) current buffer model; buf_mass: (R,) its running absorbed
+    cohort mass M; num/new_mass: this tick's ``scatter_accumulate`` output.
+
+        retained = keep · M
+        buf'     = (retained · buf + num) / (retained + new_mass)
+        M'       = retained + new_mass
+
+    so ``buf'`` stays the exactly-normalized weighted mean of everything
+    absorbed (running cohort-mass accounting), rows with zero total mass
+    keep the old model, and ``keep=0`` is replace-on-arrivals — the
+    synchronous RSU semantics (blend_on_mass) the sync-limit anchor pins.
+    """
+    retained = jnp.float32(keep) * buf_mass.astype(jnp.float32)
+    total = retained + new_mass.astype(jnp.float32)
+    safe = jnp.where(total > 0, total, 1.0)[:, None]
+    merged = (retained[:, None] * buf.astype(jnp.float32) + num) / safe
+    out = jnp.where((total > 0)[:, None], merged, buf.astype(jnp.float32))
+    return out.astype(buf.dtype), total
 
 
 def masked_weighted_mean(stacked: PyTree, weights: jax.Array,

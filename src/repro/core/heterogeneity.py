@@ -1,10 +1,17 @@
-"""Heterogeneity model (paper Sec. III, Tab. I): CSR, SCD, FSR, LAR.
+"""Heterogeneity model (paper Sec. III, Tab. I): CSR, SCD, FSR, LAR —
+plus the arrival-latency extension for the semi-async engine.
 
 Connectivity is a per-round process: an agent that (re)connects stays
 connected for SCD rounds (Stable Connection Duration), then re-draws with
 probability CSR.  FSR draws how many of the requested E local epochs each
 agent completes (< 1 epoch == disconnected, per the paper).  All draws are
 functional (keyed) so experiments are reproducible.
+
+Arrival latency (DESIGN.md §6, cf. arXiv:2110.09073): each agent's finished
+update reaches its RSU ``d`` sub-round ticks after it was computed, with
+``d`` drawn from a censored geometric on ``[0, max_delay]`` (tail mass
+clips to the bound).  With ``max_delay=0`` every arrival is immediate and
+the semi-async engine degenerates to the synchronous ones.
 """
 from __future__ import annotations
 
@@ -21,10 +28,13 @@ class HeterogeneityModel:
     scd: int = 1           # Stable Connection Duration (rounds)
     fsr: float = 1.0       # Full-task Success Ratio   in [0, 1]
     lar: int = 1           # Local Aggregation Rounds (per RSU, paper <= 50)
+    max_delay: int = 0     # arrival-latency bound D (sub-round ticks)
+    delay_p: float = 0.0   # geometric tail of the latency draw in [0, 1]
 
     def validate(self):
         assert 0.0 <= self.csr <= 1.0 and 0.0 <= self.fsr <= 1.0
         assert self.scd >= 1 and self.lar >= 1
+        assert self.max_delay >= 0 and 0.0 <= self.delay_p <= 1.0
         return self
 
 
@@ -64,6 +74,26 @@ def sample_epochs(key, n_agents: int, het: HeterogeneityModel,
     partial = jax.random.randint(jax.random.fold_in(key, 1), (n_agents,),
                                  0, max(requested_e, 1))
     return jnp.where(full, requested_e, partial).astype(jnp.int32)
+
+
+def sample_latency(key, n_agents: int, het: HeterogeneityModel) -> jax.Array:
+    """Arrival latency per agent in sub-round ticks: CENSORED geometric —
+    ``P(d) = (1-p)·p^d`` for ``d < max_delay`` with the remaining tail mass
+    ``p^max_delay`` piled on ``max_delay`` (inverse-CDF then clip, NOT a
+    renormalized truncation), so ``P(d=0) == 1 - delay_p`` exactly — the
+    identity the async benchmark's timely-participation calibration uses.
+
+    ``delay_p=0`` (or ``max_delay=0``) is the synchronous limit (all zeros);
+    ``delay_p=1`` pins every agent at the full ``max_delay`` — the
+    all-arrivals-stale regime the property tests exercise.
+    """
+    if het.max_delay == 0 or het.delay_p <= 0.0:
+        return jnp.zeros((n_agents,), jnp.int32)
+    if het.delay_p >= 1.0:
+        return jnp.full((n_agents,), het.max_delay, jnp.int32)
+    u = jax.random.uniform(key, (n_agents,), minval=1e-7, maxval=1.0)
+    d = jnp.floor(jnp.log(u) / jnp.log(het.delay_p))
+    return jnp.clip(d, 0, het.max_delay).astype(jnp.int32)
 
 
 def connectivity_trace(key, n_agents: int, n_rounds: int,

@@ -1,4 +1,8 @@
 from repro.fedsim.simulator import (SimConfig, SimState, FlatSimState,  # noqa: F401
                                     init_flat_state, make_flat_global_round,
                                     make_global_round, run_simulation)
+from repro.fedsim.async_engine import (AsyncConfig, AsyncSimState,  # noqa: F401
+                                       init_async_state,
+                                       make_async_global_round,
+                                       run_async_simulation)
 from repro.fedsim.pretrain import pretrain_to_target, train_centralized  # noqa: F401

@@ -1,0 +1,296 @@
+"""Semi-asynchronous flat-buffer simulation engine (DESIGN.md §6).
+
+The synchronous engines (fedsim/simulator, DESIGN.md §3) enforce a global
+round barrier: every local round, disconnected or slow agents are masked out
+and their work is discarded — exactly the regime where semi-asynchronous
+hierarchical FL (cf. arXiv:2110.09073) wins in C-ITS.  This engine drops the
+barrier.  Time advances in sub-round TICKS (one tick == one local round of
+the sync cadence); each agent's finished update *arrives* at its RSU
+``d`` ticks after it was computed, with ``d`` drawn per agent per tick from
+the heterogeneity latency model (``core.heterogeneity.sample_latency``):
+
+  * an agent with an in-flight update is BUSY (still computing/uploading)
+    and trains nothing new until it delivers — so at most one update per
+    agent is pending and the in-flight buffer is three flat arrays:
+    ``pending_x (A, N)``, ``pending_w (A,)``, ``pending_t (A,)``;
+  * each tick the RSU layer absorbs whatever arrives — the zero-latency
+    cohort plus due stragglers — via ONE masked scatter-accumulate on the
+    ``(A, N)`` buffer (``kernels/ops.masked_scatter_accumulate``: Pallas
+    MXU matmul on TPU, XLA segment_sum elsewhere), each arrival weighted
+    ``n_a · mask_a · s(d)`` with the staleness schedule
+    ``core.aggregation.staleness_weights``;
+  * the RSU buffer merge is ``core.aggregation.buffer_absorb``: a running
+    cohort-mass blend, so a late merge is a cheap rank-1/batched update on
+    the ``(R, N)`` buffer, weights stay exactly normalized as stragglers
+    trickle in, and ``buffer_keep=0`` reproduces the synchronous
+    replace-on-arrivals semantics;
+  * the cloud layer aggregates whatever RSU state exists at its less
+    frequent cadence (every ``cloud_every`` ticks; 0 = once per global
+    round like the sync engines), weighted by absorbed cohort mass.
+
+Correctness anchor (test-pinned, tests/test_async.py): with zero latencies
+(``max_delay=0``) and decay disabled (``staleness_decay=1``,
+``buffer_keep=0``, ``cloud_every=0``) the tick loop runs the same draws with
+the same key discipline as ``engine="flat"`` and reproduces it to fp32
+tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flatten
+from repro.core.aggregation import buffer_absorb, staleness_weights
+from repro.core.h2fed import H2FedParams
+from repro.core.heterogeneity import (ConnState, HeterogeneityModel,
+                                      init_conn_state, sample_latency)
+from repro.data.partition import FederatedData
+from repro.kernels import ops
+from repro.models import mlp
+from repro.fedsim.simulator import (SimConfig, _fed_arrays,
+                                    _local_train_flat, round_draws)
+
+PyTree = Any
+
+# key-discipline constant: the latency draw folds the per-tick round key so
+# the conn/FSR draws stay bit-identical to engine="flat" (the sync anchor).
+_LATENCY_FOLD = 7
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Staleness algebra + cadence knobs of the semi-async engine."""
+    staleness_decay: float = 0.5   # s(τ) parameter (1.0 disables for "exp")
+    schedule: str = "exp"          # "exp" | "poly" (core.staleness_weights)
+    buffer_keep: float = 0.0       # RSU mass retained across ticks in [0,1]
+    cloud_every: int = 0           # cloud cadence in ticks (0 = per round)
+
+    def validate(self):
+        assert self.schedule in ("exp", "poly")
+        if self.schedule == "exp":
+            assert 0.0 <= self.staleness_decay <= 1.0
+        else:
+            assert self.staleness_decay >= 0.0
+        assert 0.0 <= self.buffer_keep <= 1.0
+        assert self.cloud_every >= 0
+        return self
+
+    def weight(self, staleness):
+        return staleness_weights(staleness, decay=self.staleness_decay,
+                                 schedule=self.schedule)
+
+
+class AsyncSimState(NamedTuple):
+    """Flat-buffer fleet state plus the in-flight (pending) buffers."""
+    agent_flat: jax.Array   # (A, N) latest local model per agent
+    rsu_flat: jax.Array     # (R, N) staleness-buffer models
+    rsu_mass: jax.Array     # (R,)   running absorbed cohort mass M
+    cloud_flat: jax.Array   # (N,)
+    pending_x: jax.Array    # (A, N) in-flight update (one per busy agent)
+    pending_w: jax.Array    # (A,)   its decayed delivery weight n·m·s(d)
+    pending_t: jax.Array    # (A,)   int32 ticks until delivery (0 = none)
+    conn: ConnState
+    rng: jax.Array
+
+
+def init_async_state(cfg: SimConfig, spec: flatten.FlatSpec,
+                     init_params: PyTree, key) -> AsyncSimState:
+    vec = spec.ravel(init_params)
+    a, n = cfg.n_agents, spec.n
+    return AsyncSimState(
+        agent_flat=jnp.broadcast_to(vec, (a, n)),
+        rsu_flat=jnp.broadcast_to(vec, (cfg.n_rsus, n)),
+        rsu_mass=jnp.zeros((cfg.n_rsus,), jnp.float32),
+        cloud_flat=vec,
+        pending_x=jnp.zeros((a, n), jnp.float32),
+        pending_w=jnp.zeros((a,), jnp.float32),
+        pending_t=jnp.zeros((a,), jnp.int32),
+        conn=init_conn_state(a),
+        rng=key)
+
+
+def pending_mass(state: AsyncSimState) -> jax.Array:
+    """Total decayed weight still in flight (conservation bookkeeping)."""
+    return jnp.sum(state.pending_w * (state.pending_t > 0))
+
+
+def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
+                           het: HeterogeneityModel, fed: FederatedData,
+                           spec: flatten.FlatSpec, acfg: AsyncConfig,
+                           loss_fn: Callable = mlp.loss_fn):
+    """The un-jitted semi-async global round:
+    AsyncSimState -> (AsyncSimState, metrics)."""
+    x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
+        _fed_arrays(cfg, hp, fed)
+    A, R, N = cfg.n_agents, cfg.n_rsus, spec.n
+
+    train_agents = jax.vmap(
+        lambda x, y, w0, wr, wc, act: _local_train_flat(
+            loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
+        in_axes=(0, 0, 0, 0, None, 0))
+
+    # cloud cadence gate per tick (static python bools -> traced array)
+    ce = acfg.cloud_every
+    do_cloud = jnp.asarray(
+        [ce > 0 and (t + 1) % ce == 0 for t in range(hp.lar)], bool)
+
+    def tick(carry, inp):
+        (rsu_flat, rsu_mass, cloud_flat, conn, agent_flat,
+         pend_x, pend_w, pend_t, cloud_macc) = carry
+        key, cloud_now = inp
+
+        # 1. in-flight countdown: due updates deliver this tick; agents
+        #    still computing stay busy and train nothing new.
+        in_flight = pend_t > 0
+        pend_t = jnp.maximum(pend_t - 1, 0)
+        due = in_flight & (pend_t == 0)
+        busy = in_flight & ~due
+
+        # 2. stochastic realization — identical conn/FSR key discipline to
+        #    engine="flat"; the latency draw uses a folded key so it never
+        #    perturbs the sync draws.
+        conn, mask, active_steps = round_draws(key, conn, het, hp, A, spe)
+        delays = sample_latency(jax.random.fold_in(key, _LATENCY_FOLD),
+                                A, het)
+        maskf = mask.astype(jnp.float32)
+        free = ~busy                                  # may start new work
+
+        # 3. training: every non-busy agent runs its drawn steps from the
+        #    current RSU buffer model (busy agents keep their row).
+        act = jnp.where(busy, 0, active_steps)
+        w_start = jnp.take(rsu_flat, rsu_assign, axis=0)       # (A, N)
+        trained = train_agents(x_all, y_all, w_start, w_start,
+                               cloud_flat, act)
+        agent_flat = jnp.where(busy[:, None], agent_flat, trained)
+
+        # 4. arrivals: the zero-latency cohort (s(0) == 1) plus due
+        #    stragglers — two masked scatter-accumulates on (A, N).
+        w_imm = (n_per_agent * maskf * free
+                 * (delays == 0).astype(jnp.float32))          # (A,)
+        w_due = jnp.where(due, pend_w, 0.0)
+        num_i, m_i = ops.masked_scatter_accumulate(
+            agent_flat, w_imm, rsu_assign, R)
+        num_d, m_d = ops.masked_scatter_accumulate(
+            pend_x, w_due, rsu_assign, R)
+
+        # 5. staleness-buffer merge with running cohort-mass accounting
+        rsu_flat, rsu_mass = buffer_absorb(
+            rsu_flat, rsu_mass, num_i + num_d, m_i + m_d,
+            keep=acfg.buffer_keep)
+        cloud_macc = cloud_macc + m_i + m_d
+
+        # 6. enqueue new in-flight work (connected, trained, delayed);
+        #    the delivery weight is decayed at enqueue — s(d) is known.
+        enq = mask & free & (delays > 0)
+        pend_x = jnp.where(enq[:, None], trained, pend_x)
+        w_enq = n_per_agent * maskf * acfg.weight(delays)
+        pend_w = jnp.where(enq, w_enq, pend_w)
+        pend_t = jnp.where(enq, delays, pend_t)
+
+        # 7. cloud cadence: aggregate whatever RSU state exists, weighted
+        #    by the mass absorbed since the last cloud aggregation.
+        new_cloud = ops.cloud_agg(rsu_flat, cloud_macc)
+        take = cloud_now & (jnp.sum(cloud_macc) > 0)
+        cloud_flat = jnp.where(take, new_cloud, cloud_flat)
+        cloud_macc = jnp.where(cloud_now, jnp.zeros_like(cloud_macc),
+                               cloud_macc)
+
+        tick_metrics = {
+            "absorbed_mass": m_i + m_d,                       # (R,)
+            "immediate_mass": jnp.sum(m_i),
+            "due_mass": jnp.sum(m_d),
+            "enqueued_mass": jnp.sum(jnp.where(enq, w_enq, 0.0)),
+        }
+        carry = (rsu_flat, rsu_mass, cloud_flat, conn, agent_flat,
+                 pend_x, pend_w, pend_t, cloud_macc)
+        return carry, tick_metrics
+
+    def global_round(state: AsyncSimState
+                     ) -> Tuple[AsyncSimState, Dict[str, jax.Array]]:
+        rng, k_rounds = jax.random.split(state.rng)
+        keys = jax.random.split(k_rounds, hp.lar)
+        # round start: RSUs re-anchor to the cloud model (Alg. 2 line 2)
+        # and the staleness buffer restarts its mass accounting.
+        rsu_flat = jnp.broadcast_to(state.cloud_flat, (R, N))
+        carry = (rsu_flat, jnp.zeros((R,), jnp.float32), state.cloud_flat,
+                 state.conn, state.agent_flat, state.pending_x,
+                 state.pending_w, state.pending_t,
+                 jnp.zeros((R,), jnp.float32))
+        carry, ticks = jax.lax.scan(tick, carry, (keys, do_cloud))
+        (rsu_flat, rsu_mass, cloud_flat, conn, agent_flat,
+         pend_x, pend_w, pend_t, cloud_macc) = carry
+
+        # round-end cloud aggregation over the not-yet-aggregated mass
+        # (with cloud_every=0 this is exactly the sync Alg. 3 line 6).
+        new_cloud = ops.cloud_agg(rsu_flat, cloud_macc)
+        cloud_flat = jnp.where(jnp.sum(cloud_macc) > 0, new_cloud,
+                               cloud_flat)
+
+        out = AsyncSimState(agent_flat=agent_flat, rsu_flat=rsu_flat,
+                            rsu_mass=rsu_mass, cloud_flat=cloud_flat,
+                            pending_x=pend_x, pending_w=pend_w,
+                            pending_t=pend_t, conn=conn, rng=rng)
+        metrics = dict(ticks)
+        metrics["pending_mass"] = pending_mass(out)
+        return out, metrics
+
+    return global_round
+
+
+def make_async_global_round(cfg: SimConfig, hp: H2FedParams,
+                            het: HeterogeneityModel, fed: FederatedData,
+                            spec: flatten.FlatSpec,
+                            acfg: Optional[AsyncConfig] = None,
+                            loss_fn: Callable = mlp.loss_fn):
+    """Build the jitted semi-async round: AsyncSimState -> (state, metrics).
+
+    The input state's buffers are DONATED (updated in place at scale) —
+    callers must rebind, ``state, m = round_fn(state)``, and never reuse the
+    consumed input.
+    """
+    acfg = (acfg or AsyncConfig()).validate()
+    body = _make_async_round_body(cfg, hp, het, fed, spec, acfg, loss_fn)
+    return jax.jit(body, donate_argnums=(0,))
+
+
+def run_async_simulation(cfg: SimConfig, hp: H2FedParams,
+                         het: HeterogeneityModel, fed: FederatedData,
+                         init_params: PyTree, n_rounds: int, *,
+                         acfg: Optional[AsyncConfig] = None,
+                         x_test=None, y_test=None,
+                         loss_fn: Callable = mlp.loss_fn,
+                         eval_fn: Optional[Callable] = None,
+                         ) -> Tuple[AsyncSimState, Dict[str, np.ndarray]]:
+    """Run ``n_rounds`` semi-async global rounds; returns final state +
+    history (accuracy curve plus per-round absorbed/pending mass so the
+    straggler economy is observable).  ``fedsim.simulator.run_simulation``
+    dispatches here for ``engine="async"``.
+    """
+    hp.validate(), het.validate()
+    acfg = (acfg or AsyncConfig()).validate()
+    key = jax.random.key(cfg.seed)
+    spec = flatten.spec_of(init_params)
+    state = init_async_state(cfg, spec, init_params, key)
+    round_fn = make_async_global_round(cfg, hp, het, fed, spec, acfg,
+                                       loss_fn)
+    if eval_fn is None and x_test is not None:
+        x_test, y_test = jnp.asarray(x_test), jnp.asarray(y_test)
+        eval_fn = jax.jit(lambda p: mlp.accuracy(p, x_test, y_test))
+
+    accs, rounds, absorbed, pending = [], [], [], []
+    for r in range(n_rounds):
+        state, metrics = round_fn(state)
+        absorbed.append(float(jnp.sum(metrics["absorbed_mass"])))
+        pending.append(float(metrics["pending_mass"]))
+        if eval_fn is not None and (r % cfg.eval_every == 0
+                                    or r == n_rounds - 1):
+            accs.append(float(eval_fn(spec.unravel(state.cloud_flat))))
+            rounds.append(r + 1)
+    history = {"round": np.asarray(rounds), "acc": np.asarray(accs),
+               "absorbed_mass": np.asarray(absorbed),
+               "pending_mass": np.asarray(pending)}
+    return state, history

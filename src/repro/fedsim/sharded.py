@@ -142,7 +142,9 @@ def make_sharded_global_round(cfg: SimConfig, hp: H2FedParams,
         return FlatSimState(agent_flat=agent_flat, rsu_flat=rsu_flat,
                             cloud_flat=cloud_flat, conn=conn, rng=rng)
 
-    return jax.jit(global_round)
+    # donate the state buffers so the sharded (A, N) update is in-place on
+    # every device (callers rebind: state = round_fn(state))
+    return jax.jit(global_round, donate_argnums=(0,))
 
 
 def run_sharded_simulation(cfg: SimConfig, hp: H2FedParams,

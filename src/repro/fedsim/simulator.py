@@ -27,6 +27,12 @@ Two engines share this program structure (DESIGN.md §3):
   (core/aggregation).  Property tests assert both engines agree to fp32
   tolerance (tests/test_flatten.py).
 
+  engine="async" (fedsim/async_engine, DESIGN.md §6) — drops the global
+  round barrier: agents deliver with drawn arrival latencies, RSU buffers
+  absorb stragglers with staleness-decayed weights, and the cloud
+  aggregates at its own cadence.  With zero latencies and decay disabled it
+  reproduces engine="flat" to fp32 tolerance (tests/test_async.py).
+
 Baseline equivalences (paper Sec. V) hold *exactly* by construction:
 LAR=1 makes the RSU layer a pass-through (w_k == w at training time), so
 mu=0 is FedAvg and mu1>0 is FedProx on the flat topology; mu=0 with LAR>1
@@ -259,8 +265,16 @@ def make_flat_global_round(cfg: SimConfig, hp: H2FedParams,
                            het: HeterogeneityModel, fed: FederatedData,
                            spec: flatten.FlatSpec,
                            loss_fn: Callable = mlp.loss_fn):
-    """The flat-buffer global round: FlatSimState -> FlatSimState, jitted."""
-    return jax.jit(_make_flat_round_body(cfg, hp, het, fed, spec, loss_fn))
+    """The flat-buffer global round: FlatSimState -> FlatSimState, jitted.
+
+    The input state's buffers are DONATED: the (A, N)/(R, N)/(N,) update is
+    in-place at scale (no copy of the fleet per round; verified via the
+    dry-run HLO alias analysis, launch/hlo_analysis.donated_params).
+    Callers must rebind — ``state = round_fn(state)`` — and never touch the
+    consumed input again.
+    """
+    return jax.jit(_make_flat_round_body(cfg, hp, het, fed, spec, loss_fn),
+                   donate_argnums=(0,))
 
 
 def _make_tree_global_round(cfg: SimConfig, hp: H2FedParams,
@@ -351,13 +365,21 @@ def run_simulation(cfg: SimConfig, hp: H2FedParams, het: HeterogeneityModel,
                    loss_fn: Callable = mlp.loss_fn,
                    eval_fn: Optional[Callable] = None,
                    engine: str = "flat",
+                   async_cfg=None,
                    ) -> Tuple[SimState, Dict[str, np.ndarray]]:
     """Run ``n_rounds`` global rounds; returns final state + history.
 
     With the default flat engine the fleet stays in (A, N)/(R, N)/(N,)
     buffers across all rounds; pytrees are materialized only for the
-    per-round eval and for the returned final state.
+    per-round eval and for the returned final state.  ``engine="async"``
+    dispatches to the semi-asynchronous engine (fedsim/async_engine,
+    configured by ``async_cfg``) and returns its AsyncSimState.
     """
+    if engine == "async":
+        from repro.fedsim import async_engine
+        return async_engine.run_async_simulation(
+            cfg, hp, het, fed, init_params, n_rounds, acfg=async_cfg,
+            x_test=x_test, y_test=y_test, loss_fn=loss_fn, eval_fn=eval_fn)
     hp.validate(), het.validate()
     key = jax.random.key(cfg.seed)
     if eval_fn is None and x_test is not None:
@@ -381,7 +403,8 @@ def run_simulation(cfg: SimConfig, hp: H2FedParams, het: HeterogeneityModel,
                       (lambda s: eval_fn(s.cloud_params)))
         finalize = lambda s: s                               # noqa: E731
     else:
-        raise ValueError(f"unknown engine {engine!r} (want 'flat'|'tree')")
+        raise ValueError(
+            f"unknown engine {engine!r} (want 'flat'|'tree'|'async')")
 
     accs, rounds = [], []
     for r in range(n_rounds):

@@ -31,7 +31,8 @@ from jax.experimental import pallas as pl
 # implementation tests pin this kernel against); re-exported for callers
 # that treat this module as the aggregation entry point.
 from repro.core.aggregation import (build_weight_matrix, cohort_mass,  # noqa: F401
-                                    normalized_weights)
+                                    normalized_weights,
+                                    unnormalized_weight_matrix)
 
 LANE = 128
 
@@ -85,6 +86,27 @@ def masked_hier_agg(stacked_flat: jax.Array, weights: jax.Array,
     W = build_weight_matrix(weights, mask, rsu_assign, n_rsus)
     mass = cohort_mass(weights, mask, rsu_assign, n_rsus)
     return weighted_agg_matmul(W, stacked_flat, interpret=interpret), mass
+
+
+def scatter_accumulate(stacked_flat: jax.Array, weights: jax.Array,
+                       rsu_assign: jax.Array, n_rsus: int, *,
+                       interpret: bool = False):
+    """Unnormalized batched late-merge (semi-async engine, DESIGN.md §6):
+
+        num[r, n] = Σ_{a: assign(a)=r}  w_a · X[a, n],   mass[r] = Σ w_a
+
+    On TPU this is the same MXU formulation as the normalized aggregation —
+    the cohort-masked *unnormalized* (R, A) weight matrix stays resident in
+    VMEM and the grid walks parameter-axis tiles; a GPU/CPU-native scatter-add
+    lives in ``core.aggregation.scatter_accumulate`` (the reference this is
+    pinned against) and is what ``kernels/ops`` routes to off-TPU.
+    """
+    W = unnormalized_weight_matrix(weights, jnp.ones_like(weights),
+                                   rsu_assign, n_rsus)             # (R, A)
+    mass = jnp.sum(W, axis=1)
+    num = weighted_agg_matmul(W, stacked_flat.astype(jnp.float32),
+                              interpret=interpret)
+    return num, mass
 
 
 def cloud_agg(rsu_flat: jax.Array, rsu_weights: jax.Array, *,

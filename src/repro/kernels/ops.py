@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import (build_weight_matrix, cohort_mass,
-                                    normalized_weights)
+                                    normalized_weights,
+                                    scatter_accumulate as _scatter_ref)
 from repro.kernels import dual_proximal_sgd as _dps
 from repro.kernels import flash_attention as _fa
 from repro.kernels import masked_hier_agg as _mha
@@ -67,6 +68,22 @@ def masked_hier_agg(stacked_flat, weights, mask, rsu_assign, n_rsus: int):
     W = build_weight_matrix(weights, mask, rsu_assign, n_rsus)
     mass = cohort_mass(weights, mask, rsu_assign, n_rsus)
     return weighted_agg_matmul(W, stacked_flat), mass
+
+
+def masked_scatter_accumulate(stacked_flat, weights, rsu_assign,
+                              n_rsus: int):
+    """Batched late-merge accumulate for the semi-async engine:
+    ``(num (R, N), mass (R,)) = Σ_a w_a·x_a`` grouped by RSU, weights
+    unnormalized (mask x data volume x staleness decay folded in).
+
+    TPU: the Pallas aggregation matmul with the unnormalized weight matrix
+    resident in VMEM (MXU work); off-TPU: the XLA ``segment_sum``
+    scatter-add reference from ``core.aggregation``.
+    """
+    if _interpret():
+        return _scatter_ref(stacked_flat, weights, rsu_assign, n_rsus)
+    return _mha.scatter_accumulate(stacked_flat, weights, rsu_assign,
+                                   n_rsus, interpret=False)
 
 
 def cloud_agg(rsu_flat, rsu_weights):

@@ -89,6 +89,17 @@ def slstm_scan_ref(wx, r_gates, b_gates):
     return jnp.swapaxes(hs, 0, 1)
 
 
+def scatter_accumulate_ref(stacked_flat, weights, rsu_assign, n_rsus):
+    """Reference for the unnormalized late-merge accumulate.
+
+    The algebra's single source of truth is
+    ``core.aggregation.scatter_accumulate`` (segment-sum formulation);
+    aliased here so kernel tests keep their one-oracle-per-kernel shape.
+    """
+    from repro.core.aggregation import scatter_accumulate
+    return scatter_accumulate(stacked_flat, weights, rsu_assign, n_rsus)
+
+
 def cloud_agg_ref(rsu_flat, rsu_weights):
     w = rsu_weights.astype(jnp.float32)
     mass = jnp.sum(w)

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import flatten
+from repro.core.aggregation import staleness_weights
 from repro.core.h2fed import H2FedParams
 from repro.launch import sharding as shard
 from repro.launch.mesh import n_agents, shard_map
@@ -112,7 +113,10 @@ def _quantized_pod_mean(tree: PyTree, anchor: PyTree, weight, old: PyTree,
 def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
                      *, quantize_cloud: bool = False,
                      flat_agg: bool = False,
-                     microbatch: int = 0):
+                     microbatch: int = 0,
+                     async_rounds: int = 0,
+                     staleness_decay: float = 0.5,
+                     buffer_keep: float = 0.0):
     """Build the hierarchical round function (to be jit'd by the caller).
 
     flat_agg=True runs both aggregation layers on the raveled parameter
@@ -120,11 +124,21 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
     threaded into the SPMD program); incompatible with quantize_cloud,
     which keeps its own per-leaf scale handling.
 
+    async_rounds=D > 0 runs the semi-async tick model (DESIGN.md §6) inside
+    the SPMD program: each agent keeps a staleness-bounded (one-slot, delay
+    <= D) in-flight buffer of its raveled update, deliveries are
+    staleness-decayed (``core.aggregation.staleness_weights``) and the RSU
+    psum absorbs them with running cohort-mass accounting (buffer_keep).
+    Requires flat_agg (the pending buffer is the raveled (N,) vector) and
+    takes one extra input, ``delays`` — with all delays zero and
+    buffer_keep=0 the program is the synchronous flat_agg round exactly.
+
     Inputs (global view):
       cloud_params — model-sharded, replicated over (pod, data)
       batch        — leaves (LAR, A, b, ...) with A over ('pod','data')
       mask         — (LAR, A) float connectivity (CSR/SCD/FSR realization)
       n_data       — (A,) float per-agent data volume n_{i,k}
+      delays       — (LAR, A) int arrival latency (async_rounds > 0 only)
     Output: (new cloud_params, metrics)
     """
     pod = _pod_axis(mesh)
@@ -136,6 +150,10 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
             "flat_agg requires model-axis size 1: raveling tensor-parallel-"
             "sharded params would all-gather over `model` before the psum "
             "(use the per-leaf path on TP meshes)")
+    if async_rounds and not flat_agg:
+        raise ValueError(
+            "async_rounds requires flat_agg: the staleness-bounded in-flight "
+            "buffer lives on the raveled (N,) vector")
     wmean = _wmean_over_flat if flat_agg else _wmean_over
     aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
 
@@ -198,6 +216,80 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
                    "lar_masses": masses}
         return new_cloud, metrics
 
+    def async_round_fn(cloud_params, batch, mask, n_data, delays):
+        """Semi-async tick body (DESIGN.md §6) — per shard = one agent.
+
+        The agent keeps a one-slot staleness-bounded in-flight buffer of its
+        raveled update (pend_x/pend_w/pend_t); while it is in flight the
+        agent is busy and contributes nothing new.  Each tick the RSU psum
+        absorbs the zero-latency cohort plus due stragglers (decayed at
+        enqueue) with running cohort-mass accounting — the same algebra the
+        fedsim async engine runs on (A, N) buffers.
+        """
+        spec = flatten.spec_of(cloud_params)
+        local_batch_all = jax.tree.map(
+            lambda l: l.reshape((l.shape[0],) + l.shape[2:]), batch)
+        my_n = n_data.reshape(())
+        my_mask = mask.reshape((mask.shape[0],))
+        my_delay = jnp.clip(delays.reshape((delays.shape[0],)),
+                            0, async_rounds)
+        cloud_vec = spec.ravel(cloud_params)
+
+        def tick(carry, inp):
+            w_k_vec, rsu_mass, pend_x, pend_w, pend_t, mass_acc = carry
+            local_batch, m, d = inp
+            in_flight = pend_t > 0
+            pend_t = jnp.maximum(pend_t - 1, 0)
+            due = in_flight & (pend_t == 0)
+            free = ~(in_flight & ~due)                 # not still busy
+
+            w_ik = local_epochs(spec.unravel(w_k_vec), cloud_params,
+                                local_batch)
+            x_new = spec.ravel(w_ik)
+
+            freef = free.astype(jnp.float32)
+            w_imm = my_n * m * freef * (d == 0).astype(jnp.float32)
+            w_due = jnp.where(due, pend_w, 0.0)
+            num = jax.lax.psum(w_imm * x_new + w_due * pend_x, "data")
+            m_new = jax.lax.psum(w_imm + w_due, "data")
+
+            retained = buffer_keep * rsu_mass
+            total = retained + m_new
+            safe = jnp.where(total > 0, total, 1.0)
+            w_k_vec = jnp.where(total > 0,
+                                (retained * w_k_vec + num) / safe,
+                                w_k_vec)
+            # per-tick leaf-dtype round-trip: the sync flat path unravels
+            # w_k after every aggregation (bf16 leaves quantize there), so
+            # the zero-delay limit must too to stay bit-identical
+            w_k_vec = spec.ravel(spec.unravel(w_k_vec))
+
+            enq = (m > 0) & free & (d > 0)
+            pend_x = jnp.where(enq, x_new, pend_x)
+            pend_w = jnp.where(
+                enq, my_n * m * staleness_weights(d, decay=staleness_decay),
+                pend_w)
+            pend_t = jnp.where(enq, d, pend_t)
+            return (w_k_vec, total, pend_x, pend_w, pend_t,
+                    mass_acc + m_new), m_new
+
+        zf = jnp.zeros((), jnp.float32)
+        init = (cloud_vec, zf, jnp.zeros_like(cloud_vec), zf,
+                jnp.zeros((), jnp.int32), zf)
+        (w_k_vec, _, _, _, _, mass_total), masses = jax.lax.scan(
+            tick, init, (local_batch_all, my_mask, my_delay))
+
+        # cloud layer on the raveled buffer, weighted by absorbed mass
+        if pod is None:
+            new_vec, pod_mass = w_k_vec, mass_total
+        else:
+            pod_mass = jax.lax.psum(mass_total, pod)
+            safe = jnp.where(pod_mass > 0, pod_mass, 1.0)
+            s = jax.lax.psum(w_k_vec * mass_total, pod)
+            new_vec = jnp.where(pod_mass > 0, s / safe, cloud_vec)
+        metrics = {"surviving_mass": pod_mass, "lar_masses": masses}
+        return spec.unravel(new_vec), metrics
+
     axis_names = {"data"} | ({"pod"} if pod else set())
 
     # manual-axes specs: params replicated over (pod,data); batch split on A
@@ -208,6 +300,13 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
     n_spec = P(batch_axes)
     out_mass = P()
 
+    if async_rounds:
+        return shard_map(
+            async_round_fn, mesh,
+            in_specs=(p_rep, batch_spec, mask_spec, n_spec, mask_spec),
+            out_specs=(p_rep, {"surviving_mass": out_mass,
+                               "lar_masses": P(None)}),
+            axis_names=axis_names)
     smapped = shard_map(
         round_fn, mesh,
         in_specs=(p_rep, batch_spec, mask_spec, n_spec),

@@ -329,6 +329,55 @@ def analyze(text: str) -> Dict[str, float]:
             "collective_bytes": sum(colls.values()), "collectives": colls}
 
 
+_ALIAS_PAIR_RE = re.compile(r"\{([0-9 ,]*)\}:\s*\((\d+)")
+
+
+def donated_params(text: str) -> List[int]:
+    """Entry-parameter numbers aliased to outputs in post-optimization HLO.
+
+    Buffer donation (``jit(..., donate_argnums=...)``) that XLA actually
+    honored shows up as the module-level ``input_output_alias`` table —
+    ``{out_index}: (param_number, {param_index}, ...)`` pairs.  Returns the
+    sorted set of donated parameter numbers (empty: nothing aliased, i.e.
+    the update is NOT in-place).  Used by the dry-run flow and
+    tests/test_async.py to verify the FlatSimState donation is a no-copy
+    round.
+    """
+    start = text.find("input_output_alias=")
+    if start < 0:
+        return []
+    # brace-match the alias table (it contains nested {out_index} groups)
+    i = text.find("{", start)
+    depth, j = 0, i
+    while j < len(text):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        j += 1
+    table = text[i + 1:j]
+    return sorted({int(m.group(2))
+                   for m in _ALIAS_PAIR_RE.finditer(table)})
+
+
+def param_shapes(text: str) -> Dict[int, str]:
+    """Entry-computation parameter number -> type string (donation checks
+    pair this with ``donated_params`` to name which buffers went in-place).
+    """
+    comps, entry = parse_module(text)
+    out: Dict[int, str] = {}
+    if entry is None:
+        return out
+    for op in comps[entry].ops:
+        if op.op == "parameter":
+            m = re.search(r"parameter\((\d+)\)", op.rest)
+            if m:
+                out[int(m.group(1))] = op.out_type
+    return out
+
+
 def breakdown(text: str, top: int = 20) -> List[Tuple[str, float, float]]:
     """Per-top-level-op attribution of (bytes, flops) in the entry
     computation, trip counts applied — the §Perf 'profile'.  Returns

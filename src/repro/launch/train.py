@@ -38,6 +38,15 @@ def _parse_args():
     ap.add_argument("--flat-agg", action="store_true",
                     help="flat-buffer aggregation: one fused collective per "
                          "hierarchy layer instead of per-leaf reductions")
+    ap.add_argument("--async-rounds", type=int, default=0, metavar="D",
+                    help="semi-async rounds with a staleness-bounded "
+                         "in-flight buffer: agents deliver up to D local "
+                         "ticks late with staleness-decayed weight "
+                         "(implies --flat-agg; 0 = synchronous)")
+    ap.add_argument("--staleness-decay", type=float, default=0.5,
+                    help="per-tick exponential decay of late deliveries")
+    ap.add_argument("--buffer-keep", type=float, default=0.0,
+                    help="RSU cohort mass retained across ticks [0, 1]")
     ap.add_argument("--adaptive-mu", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=2)
@@ -71,6 +80,10 @@ def main():
     mesh_shape = tuple(int(x) for x in args.mesh.split(","))
     mesh = make_mesh(mesh_shape, ("pod", "data", "model"))
     A = mesh_shape[0] * mesh_shape[1]
+    if args.async_rounds and not args.flat_agg:
+        print("[async] --async-rounds implies --flat-agg (raveled pending "
+              "buffer); enabling it")
+        args.flat_agg = True
     cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
     if cfg.encoder.kind != "none":
         raise SystemExit("text-only archs for the LM training launcher")
@@ -112,14 +125,21 @@ def main():
             if key not in round_fns:
                 fn = make_h2fed_round(cfg, hp, mesh,
                                       quantize_cloud=args.quantize_cloud,
-                                      flat_agg=args.flat_agg)
-                round_fns[key] = jax.jit(fn, in_shardings=(
+                                      flat_agg=args.flat_agg,
+                                      async_rounds=args.async_rounds,
+                                      staleness_decay=args.staleness_decay,
+                                      buffer_keep=args.buffer_keep)
+                mask_sh = NamedSharding(mesh, P(None, ("pod", "data")))
+                in_sh = (
                     shard.param_shardings_model_only(
                         jax.eval_shape(lambda: params), mesh),
                     {"tokens": NamedSharding(mesh, P(None, ("pod", "data"))),
                      "labels": NamedSharding(mesh, P(None, ("pod", "data")))},
-                    NamedSharding(mesh, P(None, ("pod", "data"))),
-                    NamedSharding(mesh, P(("pod", "data")))))
+                    mask_sh,
+                    NamedSharding(mesh, P(("pod", "data"))))
+                if args.async_rounds:
+                    in_sh = in_sh + (mask_sh,)
+                round_fns[key] = jax.jit(fn, in_shardings=in_sh)
 
             n = args.batch * (args.seq + 1)
             toks = np.zeros((args.lar, A, args.batch, args.seq), np.int32)
@@ -135,10 +155,14 @@ def main():
             mask = (rng.random((args.lar, A)) < args.csr).astype(np.float32)
             n_data = np.full((A,), float(args.batch * args.seq), np.float32)
 
-            cloud, metrics = round_fns[key](
-                cloud, {"tokens": jnp.asarray(toks),
-                        "labels": jnp.asarray(labs)},
-                jnp.asarray(mask), jnp.asarray(n_data))
+            round_args = [cloud, {"tokens": jnp.asarray(toks),
+                                  "labels": jnp.asarray(labs)},
+                          jnp.asarray(mask), jnp.asarray(n_data)]
+            if args.async_rounds:
+                delays = rng.integers(0, args.async_rounds + 1,
+                                      (args.lar, A)).astype(np.int32)
+                round_args.append(jnp.asarray(delays))
+            cloud, metrics = round_fns[key](*round_args)
             observed = float(mask.mean())
             mu_state = orch.observe_csr(mu_state, mu_cfg, observed, 1.0)
             loss = float(M.loss_fn(cfg, cloud, ev)[0])

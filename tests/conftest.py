@@ -1,13 +1,48 @@
 """Shared fixtures.  NOTE: device count is NOT forced here — smoke tests and
-benches see the single real CPU device; only the dry-run (a subprocess)
-creates 512 placeholder devices (system spec §Multi-pod dry-run)."""
+benches see the single real CPU device; anything needing >1 device runs
+through ``run_forced_devices`` below, which forces
+``XLA_FLAGS=--xla_force_host_platform_device_count`` in a SUBPROCESS before
+its jax initializes (the launch/dryrun mechanism) so the main pytest process
+keeps the single real CPU device."""
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
 
 import jax
 import numpy as np
 import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_forced_devices(code: str, devices: int = 8,
+                       timeout: int = 600) -> str:
+    """Run ``code`` in a subprocess with ``devices`` forced host devices.
+
+    The single shared implementation of the forced-device-count setup used
+    by test_sharded.py, test_launch.py and test_async.py (multi-device
+    cases); asserts a zero exit and returns stdout.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def forced_devices_run():
+    """Fixture handle on ``run_forced_devices`` for multi-device tests."""
+    return run_forced_devices
 
 
 @pytest.fixture(scope="session")

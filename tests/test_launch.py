@@ -1,18 +1,15 @@
 """Distributed-runtime tests.  Anything needing >1 device runs in a
-subprocess with XLA_FLAGS=--xla_force_host_platform_device_count so the main
-pytest process keeps the single real CPU device (system spec §Dry-run.0)."""
+subprocess via the shared ``run_forced_devices`` helper (tests/conftest.py)
+so the main pytest process keeps the single real CPU device (system spec
+§Dry-run.0)."""
 from __future__ import annotations
 
 import json
-import os
-import subprocess
-import sys
-import textwrap
 from pathlib import Path
 
 import pytest
 
-SRC = str(Path(__file__).resolve().parents[1] / "src")
+from conftest import run_forced_devices as _run_sub
 
 # jaxlib < 0.5 hard-aborts (Check failed: sharding.IsManualSubgroup()) when
 # the SPMD partitioner meets the transformer h2fed_round's manual(pod,data) x
@@ -25,17 +22,6 @@ OLD_JAX_SPMD = tuple(
 needs_spmd_subgroups = pytest.mark.skipif(
     OLD_JAX_SPMD, reason="manual x auto shard_map subgroups crash the XLA "
                          "SPMD partitioner on jaxlib < 0.5")
-
-
-def _run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = SRC
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, timeout=timeout,
-                         env=env)
-    assert out.returncode == 0, out.stderr[-4000:]
-    return out.stdout
 
 
 class TestMesh:

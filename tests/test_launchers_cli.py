@@ -33,6 +33,17 @@ def test_train_then_serve_roundtrip(tmp_path):
     assert "[decode]" in out.stdout
 
 
+def test_train_async_rounds_flag():
+    """--async-rounds drives the semi-async SPMD path (DESIGN.md §6) and
+    auto-enables flat_agg for the raveled pending buffer."""
+    out = _run(["repro.launch.train", "--rounds", "2", "--lar", "2",
+                "--seq", "32", "--batch", "2", "--async-rounds", "2",
+                "--csr", "0.5"])
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "[done]" in out.stdout
+    assert "implies --flat-agg" in out.stdout
+
+
 def test_train_adaptive_mu_flag(tmp_path):
     out = _run(["repro.launch.train", "--rounds", "2", "--lar", "1",
                 "--seq", "32", "--batch", "2", "--csr", "0.3",

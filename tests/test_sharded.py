@@ -1,25 +1,17 @@
 """Agent-sharded engine tests (DESIGN.md §4).
 
 Single-device cases run inline on a (1,)-'data' mesh; true multi-device
-cases run in subprocesses with XLA_FLAGS=--xla_force_host_platform_device_count
-(the launch/dryrun mechanism) so the main pytest process keeps the single
-real CPU device — CI's multi-device smoke step runs this file under 8
-forced host devices, where ``make_fleet_mesh`` becomes a ('pod','data')
-mesh and the same equivalence must hold.
+cases run in subprocesses via the shared ``forced_devices_run`` fixture
+(tests/conftest.py) so the main pytest process keeps the single real CPU
+device — CI's multi-device smoke step runs this file under 8 forced host
+devices, where ``make_fleet_mesh`` becomes a ('pod','data') mesh and the
+same equivalence must hold.
 """
 from __future__ import annotations
-
-import os
-import subprocess
-import sys
-import textwrap
-from pathlib import Path
 
 import jax
 import numpy as np
 import pytest
-
-SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 EQUIV_CODE = """
 import jax, numpy as np
@@ -49,17 +41,6 @@ _, h_sh = run_sharded_simulation(cfg, hp, het, fed, params, 3, mesh=mesh,
 np.testing.assert_allclose(h_flat["acc"], h_sh["acc"], atol=2e-3)
 print("axes", agent_axes(mesh), "shards-ok")
 """
-
-
-def _run_sub(code: str, devices: int, timeout: int = 600) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = SRC
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, timeout=timeout,
-                         env=env)
-    assert out.returncode == 0, out.stderr[-4000:]
-    return out.stdout
 
 
 @pytest.fixture(scope="module")
@@ -120,12 +101,14 @@ class TestSingleDevice:
 
 
 class TestMultiDevice:
-    def test_equivalence_on_8_devices(self):
+    def test_equivalence_on_8_devices(self, forced_devices_run):
         """Flat vs sharded on a 2x4 ('pod','data') mesh — CI's smoke step."""
-        out = _run_sub(EQUIV_CODE.format(devices=8), devices=8, timeout=900)
+        out = forced_devices_run(EQUIV_CODE.format(devices=8), devices=8,
+                                 timeout=900)
         assert "shards-ok" in out
         assert "('pod', 'data')" in out
 
-    def test_equivalence_on_2_devices(self):
-        out = _run_sub(EQUIV_CODE.format(devices=2), devices=2, timeout=900)
+    def test_equivalence_on_2_devices(self, forced_devices_run):
+        out = forced_devices_run(EQUIV_CODE.format(devices=2), devices=2,
+                                 timeout=900)
         assert "shards-ok" in out
