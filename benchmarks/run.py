@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows for:
   roofline — dry-run roofline terms           (deliverable g)
   sharded — engine round latency: tree vs flat vs shard_map, 1 vs 8 devices
   async   — sync-vs-async round latency + 90%-disconnect convergence record
+  topology — replicated vs RSU-sharded round latency at large R (2x4 mesh)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline]
                                                 [--json results/bench/bench.json]
@@ -66,6 +67,11 @@ def bench_async():
     return async_round.run()
 
 
+def bench_topology():
+    from benchmarks import topology_round
+    return topology_round.run()
+
+
 SUITES = {
     "fig2": bench_fig2,
     "fig3": bench_fig3,
@@ -75,6 +81,7 @@ SUITES = {
     "adaptive": bench_adaptive,
     "sharded": bench_sharded,
     "async": bench_async,
+    "topology": bench_topology,
 }
 
 

@@ -81,22 +81,28 @@ def build_weight_matrix(weights: jax.Array, mask: jax.Array,
     return wm / jnp.where(mass > 0, mass, 1.0)
 
 
-def staleness_weights(staleness: jax.Array, *, decay: float = 0.5,
+def staleness_weights(staleness: jax.Array, *, decay=0.5,
                       schedule: str = "exp") -> jax.Array:
     """Staleness-decay multiplier s(τ) for updates arriving τ ticks late.
 
     schedule="exp":  s(τ) = decay^τ    (decay in [0, 1]; 1.0 disables decay)
     schedule="poly": s(τ) = (1+τ)^-decay  (decay >= 0; 0.0 disables decay)
 
+    ``decay`` may be a scalar (today's uniform schedule) or an array
+    broadcastable against ``staleness`` — per-RSU adaptive schedules pass
+    ``decay_vec[rsu_assign]`` so each agent decays with its own RSU's rate
+    (DESIGN.md §6; scalar broadcast keeps the uniform behavior exactly).
+
     Both schedules are monotone non-increasing in τ with s(0) = 1, so fresh
     arrivals are never down-weighted and the synchronous limit is exact
     (property-tested in tests/test_async.py).
     """
     tau = jnp.asarray(staleness, jnp.float32)
+    dec = jnp.asarray(decay, jnp.float32)
     if schedule == "exp":
-        return jnp.power(jnp.float32(decay), tau)
+        return jnp.power(dec, tau)
     if schedule == "poly":
-        return jnp.power(1.0 + tau, -jnp.float32(decay))
+        return jnp.power(1.0 + tau, -dec)
     raise ValueError(f"unknown schedule {schedule!r} (want 'exp'|'poly')")
 
 
@@ -121,7 +127,7 @@ def scatter_accumulate(stacked: jax.Array, weights: jax.Array,
 
 
 def buffer_absorb(buf: jax.Array, buf_mass: jax.Array, num: jax.Array,
-                  new_mass: jax.Array, *, keep: float = 0.0,
+                  new_mass: jax.Array, *, keep=0.0,
                   ) -> Tuple[jax.Array, jax.Array]:
     """Merge one tick's accumulated arrivals into a staleness buffer.
 
@@ -136,8 +142,11 @@ def buffer_absorb(buf: jax.Array, buf_mass: jax.Array, num: jax.Array,
     absorbed (running cohort-mass accounting), rows with zero total mass
     keep the old model, and ``keep=0`` is replace-on-arrivals — the
     synchronous RSU semantics (blend_on_mass) the sync-limit anchor pins.
+
+    ``keep`` may be a scalar or an (R,) vector — per-RSU adaptive retention
+    (DESIGN.md §6); scalar broadcast keeps today's uniform behavior.
     """
-    retained = jnp.float32(keep) * buf_mass.astype(jnp.float32)
+    retained = jnp.asarray(keep, jnp.float32) * buf_mass.astype(jnp.float32)
     total = retained + new_mass.astype(jnp.float32)
     safe = jnp.where(total > 0, total, 1.0)[:, None]
     merged = (retained[:, None] * buf.astype(jnp.float32) + num) / safe

@@ -1,0 +1,294 @@
+"""Topology-first hierarchy: agents ↔ RSUs ↔ cloud as ONE object (DESIGN.md §4).
+
+The paper's Fig. 1 hierarchy used to be scattered across the engines: the
+simulator carried an ``rsu_assign`` array, ``fedsim/sharded`` derived its own
+mesh/shard math, and ``launch/h2fed_round`` re-derived the pod axis and batch
+specs.  ``HierarchyTopology`` centralizes all of it:
+
+  * the agent → RSU assignment (``balanced_assignment`` /
+    ``unbalanced_assignment`` model the paper's traffic-flow imbalance),
+  * the device-mesh layout (``pod`` ↔ RSU groups over the slow DCI, ``data``
+    ↔ agents within an RSU group over the fast ICI — DESIGN.md §2),
+  * the BLOCK structure of the (R, A) aggregation weight matrix: in
+    RSU-sharded mode RSU ``r`` lives on pod ``r // rsu_per_pod`` and
+    ``agent_perm`` co-locates every agent with its RSU's pod, so the weight
+    matrix is block-diagonal over pods and the RSU aggregation becomes a
+    pod-local ``(R_local, A_local) @ (A_local, N)`` matmul
+    (``kernels/ops.block_local_agg``) with NO cross-pod traffic,
+  * the ``PartitionSpec``s every engine shards its ``(A, N)`` / ``(R, N)`` /
+    ``(N,)`` buffers with (``agent_spec`` / ``rsu_spec`` / ``cloud_spec``).
+
+Two modes:
+
+  replicated  (default) — the (R, N) RSU buffer is replicated on every
+      device; the RSU layer needs one psum over ALL agent axes.  The small-R
+      fast path and the equivalence anchor.
+  rsu_sharded — the RSU axis is sharded over the pod axis; agents are
+      permuted onto their RSU's pod, the RSU layer psums over the data axis
+      ONLY (pod-local), and only the cloud layer pays a cross-pod
+      collective — the paper's communication-avoidance insight made literal
+      in the device topology (tests pin this via
+      ``launch/hlo_analysis.collective_schedule``).
+
+Consumers: ``fedsim/sharded`` (both modes), ``fedsim/async_engine``
+(RSU-sharded semi-async round), ``launch/h2fed_round`` (SPMD flavor via
+``HierarchyTopology.from_mesh``: one agent per (pod, data) position, one RSU
+per pod).
+"""
+from __future__ import annotations
+
+from math import prod
+from typing import Optional, Tuple
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+AGENT_AXES = ("pod", "data")
+
+
+# --------------------------------------------------------------------------
+# agent → RSU assignment models (paper Sec. III)
+# --------------------------------------------------------------------------
+
+def balanced_assignment(n_agents: int, n_rsus: int) -> np.ndarray:
+    """Static a → a mod R assignment (matches the data partitioner)."""
+    return (np.arange(n_agents) % n_rsus).astype(np.int32)
+
+
+def unbalanced_assignment(n_agents: int, n_rsus: int, *, alpha: float = 1.0,
+                          seed: int = 0) -> np.ndarray:
+    """Dirichlet(alpha) cohort sizes; every RSU keeps >= 1 agent (paper
+    Sec. III: "unbalanced agent number at RSUs")."""
+    rng = np.random.default_rng(seed)
+    props = rng.dirichlet([alpha] * n_rsus)
+    counts = np.maximum(np.round(props * n_agents).astype(int), 1)
+    while counts.sum() > n_agents:
+        counts[np.argmax(counts)] -= 1
+    while counts.sum() < n_agents:
+        counts[np.argmin(counts)] += 1
+    return np.repeat(np.arange(n_rsus), counts).astype(np.int32)
+
+
+def cohort_sizes(assign: np.ndarray, n_rsus: int) -> np.ndarray:
+    return np.bincount(assign, minlength=n_rsus).astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# fleet mesh construction (moved here from fedsim/sharded)
+# --------------------------------------------------------------------------
+
+def make_fleet_mesh(n_devices: Optional[int] = None, *,
+                    n_pods: Optional[int] = None):
+    """Lay the fleet out over the available devices.
+
+    Default: >= 4 devices get a ('pod', 'data') mesh (2 x n/2) exercising
+    both agent axes of the production topology; fewer get a 1-D ('data',)
+    mesh.  ``n_pods`` pins the pod-axis size explicitly (RSU-sharded runs
+    sweep it; must divide the device count).  The `model` axis is
+    intentionally absent — fleet models are vmapped per agent, not
+    tensor-parallel (launch/h2fed_round handles that regime).
+    """
+    import jax
+    from repro.launch.mesh import make_mesh
+
+    n = n_devices or len(jax.devices())
+    if n_pods is not None:
+        if n_pods < 1 or n % n_pods:
+            raise ValueError(
+                f"n_pods={n_pods} must divide the device count {n}")
+        return make_mesh((n_pods, n // n_pods), ("pod", "data"))
+    if n >= 4 and n % 2 == 0:
+        return make_mesh((2, n // 2), ("pod", "data"))
+    return make_mesh((n,), ("data",))
+
+
+# --------------------------------------------------------------------------
+# the topology object
+# --------------------------------------------------------------------------
+
+class HierarchyTopology:
+    """Agent ↔ RSU ↔ cloud structure bound to a device mesh (DESIGN.md §4).
+
+    mesh may be a ``jax.sharding.Mesh`` or anything exposing ``.shape``
+    (mapping axis → size) and ``.axis_names`` — validation reads only static
+    metadata, so errors fire before any device work.
+    """
+
+    def __init__(self, n_agents: int, n_rsus: int, mesh, *,
+                 rsu_assign: Optional[np.ndarray] = None,
+                 rsu_sharded: bool = False):
+        if n_agents < 1 or n_rsus < 1:
+            raise ValueError(f"need n_agents, n_rsus >= 1 "
+                             f"(got {n_agents}, {n_rsus})")
+        self.n_agents = int(n_agents)
+        self.n_rsus = int(n_rsus)
+        self.mesh = mesh
+        self.rsu_sharded = bool(rsu_sharded)
+
+        # mesh-derived structure first: the shard-divisibility errors fire
+        # before the assignment is even looked at (callers rely on this —
+        # tests/test_sharded.py pins the "must divide" message)
+        shape = dict(mesh.shape)
+        self.agent_axes: Tuple[str, ...] = tuple(
+            a for a in mesh.axis_names if a in AGENT_AXES)
+        if not self.agent_axes:
+            raise ValueError(f"mesh {shape} has no agent axes "
+                             f"(want some of {AGENT_AXES})")
+        self.pod_axis: Optional[str] = \
+            "pod" if "pod" in self.agent_axes else None
+        self.data_axes: Tuple[str, ...] = tuple(
+            a for a in self.agent_axes if a != "pod")
+        self.n_pods = int(shape.get("pod", 1))
+        self.n_shards = int(prod(shape[a] for a in self.agent_axes))
+        self.data_shards = self.n_shards // max(self.n_pods, 1)
+        if self.n_agents % self.n_shards:
+            raise ValueError(
+                f"n_agents={self.n_agents} must divide over "
+                f"{self.n_shards} shards (mesh {shape})")
+
+        assign = (balanced_assignment(n_agents, n_rsus)
+                  if rsu_assign is None
+                  else np.asarray(rsu_assign, np.int32))
+        if assign.shape != (self.n_agents,):
+            raise ValueError(f"rsu_assign must be ({n_agents},), "
+                             f"got {assign.shape}")
+        if assign.min() < 0 or assign.max() >= n_rsus:
+            raise ValueError("rsu_assign ids out of range "
+                             f"[0, {n_rsus}): {assign.min()}..{assign.max()}")
+        self.rsu_assign = assign
+
+        if self.rsu_sharded:
+            if self.n_rsus % self.n_pods:
+                raise ValueError(
+                    f"rsu_sharded needs the pod axis to divide the RSU "
+                    f"axis: n_rsus={self.n_rsus} is not divisible by "
+                    f"n_pods={self.n_pods} (mesh {shape})")
+            self.rsu_per_pod = self.n_rsus // self.n_pods
+            self.pod_of_rsu = (np.arange(self.n_rsus)
+                               // self.rsu_per_pod).astype(np.int32)
+            pod_of_agent = self.pod_of_rsu[self.rsu_assign]
+            counts = np.bincount(pod_of_agent, minlength=self.n_pods)
+            if not (counts == counts[0]).all():
+                raise ValueError(
+                    "rsu_sharded needs equal agents per pod, got "
+                    f"per-pod cohorts {counts.tolist()} — rebalance the "
+                    "assignment or re-map RSUs to pods")
+            if counts[0] % max(self.data_shards, 1):
+                raise ValueError(
+                    f"agents per pod ({int(counts[0])}) must divide over "
+                    f"the data axis ({self.data_shards} shards)")
+            # co-locate each agent with its RSU's pod: stable sort keeps
+            # the original relative order inside each pod block
+            self.agent_perm = np.argsort(
+                pod_of_agent, kind="stable").astype(np.int32)
+            self.inv_agent_perm = np.argsort(
+                self.agent_perm, kind="stable").astype(np.int32)
+            assign_p = self.rsu_assign[self.agent_perm]
+            self.local_assign = (
+                assign_p - self.pod_of_rsu[assign_p] * self.rsu_per_pod
+            ).astype(np.int32)
+        else:
+            self.rsu_per_pod = self.n_rsus
+            self.pod_of_rsu = np.zeros((self.n_rsus,), np.int32)
+            self.agent_perm = np.arange(self.n_agents, dtype=np.int32)
+            self.inv_agent_perm = self.agent_perm
+            self.local_assign = self.rsu_assign
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def from_mesh(cls, mesh) -> "HierarchyTopology":
+        """SPMD flavor (launch/h2fed_round): one agent per (pod, data) mesh
+        position, one RSU per pod — the agent's shard IS its identity, so
+        the permutation is trivially the identity and the topology only
+        carries the axis/spec bookkeeping."""
+        shape = dict(mesh.shape)
+        pods = int(shape.get("pod", 1))
+        data = int(prod(shape[a] for a in mesh.axis_names
+                        if a in AGENT_AXES and a != "pod"))
+        n_agents = pods * data
+        assign = np.repeat(np.arange(pods, dtype=np.int32), data)
+        return cls(n_agents, max(pods, 1), mesh, rsu_assign=assign,
+                   rsu_sharded="pod" in mesh.axis_names)
+
+    # -- axis / spec surface ----------------------------------------------
+
+    @property
+    def shard_axes(self):
+        """The agent-axis name(s) in the form psum/PartitionSpec take."""
+        return (self.agent_axes if len(self.agent_axes) > 1
+                else self.agent_axes[0])
+
+    @property
+    def data_shard_axes(self):
+        """The within-pod (data) axis name(s); None if the mesh is
+        pod-only."""
+        if not self.data_axes:
+            return None
+        return (self.data_axes if len(self.data_axes) > 1
+                else self.data_axes[0])
+
+    @property
+    def agent_spec(self) -> P:
+        """(A, ...) buffers: leading axis over all agent mesh axes."""
+        return P(self.shard_axes)
+
+    @property
+    def rsu_spec(self) -> P:
+        """(R, ...) buffers: pod-sharded in rsu_sharded mode, else
+        replicated."""
+        if self.rsu_sharded and self.pod_axis is not None:
+            return P(self.pod_axis)
+        return P()
+
+    @property
+    def cloud_spec(self) -> P:
+        """(N,) cloud buffer: always replicated over the agent axes."""
+        return P()
+
+    def stacked_spec(self, n_leading: int = 1) -> P:
+        """(T, ..., A, ...) inputs (per-round masks/steps/batches): the
+        agent axis sits after ``n_leading`` replicated axes."""
+        return P(*([None] * n_leading), self.shard_axes)
+
+    def cloud_psum_mean(self, rsu_mass, rsu_flat, fallback):
+        """Mass-weighted cloud mean of this shard's RSU block — in
+        rsu_sharded mode the ONE cross-pod collective of a round
+        (DESIGN.md §4).  rsu_mass: (R_local,); rsu_flat: (R_local, N);
+        returns (N,), ``fallback`` where the global mass is zero."""
+        import jax
+        import jax.numpy as jnp
+        part = rsu_mass @ rsu_flat
+        pmass = jnp.sum(rsu_mass)
+        if self.rsu_sharded and self.pod_axis is not None:
+            part = jax.lax.psum(part, self.pod_axis)
+            pmass = jax.lax.psum(pmass, self.pod_axis)
+        return jnp.where(pmass > 0,
+                         part / jnp.where(pmass > 0, pmass, 1.0), fallback)
+
+    # -- block structure ---------------------------------------------------
+
+    def permute_agents(self, arr, axis: int = 0):
+        """Reorder an (..., A, ...) array into pod-block agent order."""
+        return np.take(arr, self.agent_perm, axis=axis) \
+            if isinstance(arr, np.ndarray) else _jnp_take(
+                arr, self.agent_perm, axis)
+
+    def unpermute_agents(self, arr, axis: int = 0):
+        """Inverse of ``permute_agents``."""
+        return np.take(arr, self.inv_agent_perm, axis=axis) \
+            if isinstance(arr, np.ndarray) else _jnp_take(
+                arr, self.inv_agent_perm, axis)
+
+    def describe(self) -> str:
+        mode = "rsu_sharded" if self.rsu_sharded else "replicated"
+        return (f"HierarchyTopology(A={self.n_agents}, R={self.n_rsus}, "
+                f"pods={self.n_pods}, shards={self.n_shards}, "
+                f"R_local={self.rsu_per_pod}, mode={mode})")
+
+    __repr__ = describe
+
+
+def _jnp_take(arr, idx, axis):
+    import jax.numpy as jnp
+    return jnp.take(arr, jnp.asarray(idx), axis=axis)

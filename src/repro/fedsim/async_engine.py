@@ -18,38 +18,59 @@ the heterogeneity latency model (``core.heterogeneity.sample_latency``):
     ``(A, N)`` buffer (``kernels/ops.masked_scatter_accumulate``: Pallas
     MXU matmul on TPU, XLA segment_sum elsewhere), each arrival weighted
     ``n_a · mask_a · s(d)`` with the staleness schedule
-    ``core.aggregation.staleness_weights``;
+    ``core.aggregation.staleness_weights`` — ``s`` may decay PER RSU
+    (an (R,) decay vector in ``AsyncConfig.staleness_decay``; scalar
+    broadcast keeps the uniform schedule);
   * the RSU buffer merge is ``core.aggregation.buffer_absorb``: a running
     cohort-mass blend, so a late merge is a cheap rank-1/batched update on
     the ``(R, N)`` buffer, weights stay exactly normalized as stragglers
     trickle in, and ``buffer_keep=0`` reproduces the synchronous
     replace-on-arrivals semantics;
-  * the cloud layer aggregates whatever RSU state exists at its less
-    frequent cadence (every ``cloud_every`` ticks; 0 = once per global
-    round like the sync engines), weighted by absorbed cohort mass.
+  * the cloud layer aggregates whatever RSU state exists at its own, less
+    frequent cadence: ``cloud_every`` ticks counted on a GLOBAL tick
+    counter carried in the state, so the cadence spans global-round
+    boundaries (a ``cloud_every=3`` schedule with LAR=2 fires at global
+    ticks 3, 6, 9, ... — decoupled from the LAR scan).  Under a decoupled
+    cadence the round boundary stops being special altogether: the RSU
+    buffers, their running mass and the cloud accumulator all persist
+    across rounds (no per-round re-anchor), so the mass the cloud
+    aggregation weights by always accounts for content the buffers still
+    hold.  ``cloud_every=0`` keeps the per-global-round re-anchor +
+    aggregation of the sync engines (the sync-limit anchor).
+
+RSU-sharded execution (DESIGN.md §4): ``make_sharded_async_global_round``
+runs the same tick algebra under ``shard_map`` on a
+``core.topology.HierarchyTopology`` — agents live on their RSU's pod, the
+scatter-accumulate is the block-local ``kernels/ops.block_local_agg`` psum'd
+over the within-pod data axis only, ``buffer_absorb`` runs on the local
+``(R_local, N)`` shard, and only the cloud cadence pays a cross-pod
+collective.
 
 Correctness anchor (test-pinned, tests/test_async.py): with zero latencies
 (``max_delay=0``) and decay disabled (``staleness_decay=1``,
 ``buffer_keep=0``, ``cloud_every=0``) the tick loop runs the same draws with
 the same key discipline as ``engine="flat"`` and reproduces it to fp32
-tolerance.
+tolerance — in both the replicated and the RSU-sharded layout.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import flatten
 from repro.core.aggregation import buffer_absorb, staleness_weights
 from repro.core.h2fed import H2FedParams
 from repro.core.heterogeneity import (ConnState, HeterogeneityModel,
                                       init_conn_state, sample_latency)
+from repro.core.topology import HierarchyTopology
 from repro.data.partition import FederatedData
 from repro.kernels import ops
+from repro.launch.mesh import shard_map
 from repro.models import mlp
 from repro.fedsim.simulator import (SimConfig, _fed_arrays,
                                     _local_train_flat, round_draws)
@@ -63,25 +84,59 @@ _LATENCY_FOLD = 7
 
 @dataclasses.dataclass(frozen=True)
 class AsyncConfig:
-    """Staleness algebra + cadence knobs of the semi-async engine."""
-    staleness_decay: float = 0.5   # s(τ) parameter (1.0 disables for "exp")
+    """Staleness algebra + cadence knobs of the semi-async engine.
+
+    ``staleness_decay`` and ``buffer_keep`` accept a scalar (uniform, the
+    original behavior) or an (R,)-length tuple — per-RSU adaptive schedules
+    (DESIGN.md §6), exposed on the CLI as a comma list
+    (``--staleness-decay 0.9,0.5,...``).
+    """
+    staleness_decay: Union[float, Tuple[float, ...]] = 0.5
     schedule: str = "exp"          # "exp" | "poly" (core.staleness_weights)
-    buffer_keep: float = 0.0       # RSU mass retained across ticks in [0,1]
-    cloud_every: int = 0           # cloud cadence in ticks (0 = per round)
+    buffer_keep: Union[float, Tuple[float, ...]] = 0.0
+    cloud_every: int = 0           # cloud cadence in GLOBAL ticks (0 = per
+    #                                global round, the sync anchor)
 
     def validate(self):
         assert self.schedule in ("exp", "poly")
+        dec = np.asarray(self.staleness_decay, np.float32)
         if self.schedule == "exp":
-            assert 0.0 <= self.staleness_decay <= 1.0
+            assert ((0.0 <= dec) & (dec <= 1.0)).all()
         else:
-            assert self.staleness_decay >= 0.0
-        assert 0.0 <= self.buffer_keep <= 1.0
+            assert (dec >= 0.0).all()
+        keep = np.asarray(self.buffer_keep, np.float32)
+        assert ((0.0 <= keep) & (keep <= 1.0)).all()
         assert self.cloud_every >= 0
         return self
 
-    def weight(self, staleness):
-        return staleness_weights(staleness, decay=self.staleness_decay,
-                                 schedule=self.schedule)
+    def agent_decay(self, rsu_assign, n_rsus: int):
+        """Per-agent decay rate: scalar pass-through, or the (R,) vector
+        gathered through the agent → RSU assignment."""
+        dec = np.asarray(self.staleness_decay, np.float32)
+        if dec.ndim == 0:
+            return float(dec)
+        if dec.shape != (n_rsus,):
+            raise ValueError(
+                f"staleness_decay vector must have one entry per RSU "
+                f"({n_rsus},), got {dec.shape}")
+        return jnp.asarray(dec)[jnp.asarray(rsu_assign)]
+
+    def rsu_keep(self, n_rsus: int):
+        """Buffer retention per RSU: scalar or validated (R,) vector."""
+        keep = np.asarray(self.buffer_keep, np.float32)
+        if keep.ndim == 0:
+            return float(keep)
+        if keep.shape != (n_rsus,):
+            raise ValueError(
+                f"buffer_keep vector must have one entry per RSU "
+                f"({n_rsus},), got {keep.shape}")
+        return jnp.asarray(keep)
+
+    def weight(self, staleness, decay=None):
+        return staleness_weights(
+            staleness,
+            decay=self.staleness_decay if decay is None else decay,
+            schedule=self.schedule)
 
 
 class AsyncSimState(NamedTuple):
@@ -95,6 +150,9 @@ class AsyncSimState(NamedTuple):
     pending_t: jax.Array    # (A,)   int32 ticks until delivery (0 = none)
     conn: ConnState
     rng: jax.Array
+    cloud_macc: jax.Array   # (R,)   mass absorbed since last cloud agg
+    tick: jax.Array         # ()     int32 global tick counter (the cloud
+    #                                cadence clock — spans round boundaries)
 
 
 def init_async_state(cfg: SimConfig, spec: flatten.FlatSpec,
@@ -110,7 +168,9 @@ def init_async_state(cfg: SimConfig, spec: flatten.FlatSpec,
         pending_w=jnp.zeros((a,), jnp.float32),
         pending_t=jnp.zeros((a,), jnp.int32),
         conn=init_conn_state(a),
-        rng=key)
+        rng=key,
+        cloud_macc=jnp.zeros((cfg.n_rsus,), jnp.float32),
+        tick=jnp.zeros((), jnp.int32))
 
 
 def pending_mass(state: AsyncSimState) -> jax.Array:
@@ -127,21 +187,19 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
     x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
         _fed_arrays(cfg, hp, fed)
     A, R, N = cfg.n_agents, cfg.n_rsus, spec.n
+    decay = acfg.agent_decay(rsu_assign, R)     # scalar or (A,)
+    keep = acfg.rsu_keep(R)                     # scalar or (R,)
 
     train_agents = jax.vmap(
         lambda x, y, w0, wr, wc, act: _local_train_flat(
             loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
         in_axes=(0, 0, 0, 0, None, 0))
 
-    # cloud cadence gate per tick (static python bools -> traced array)
-    ce = acfg.cloud_every
-    do_cloud = jnp.asarray(
-        [ce > 0 and (t + 1) % ce == 0 for t in range(hp.lar)], bool)
+    ce = acfg.cloud_every                       # static cadence (python int)
 
-    def tick(carry, inp):
+    def tick(carry, key):
         (rsu_flat, rsu_mass, cloud_flat, conn, agent_flat,
-         pend_x, pend_w, pend_t, cloud_macc) = carry
-        key, cloud_now = inp
+         pend_x, pend_w, pend_t, cloud_macc, gtick) = carry
 
         # 1. in-flight countdown: due updates deliver this tick; agents
         #    still computing stay busy and train nothing new.
@@ -179,25 +237,37 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
 
         # 5. staleness-buffer merge with running cohort-mass accounting
         rsu_flat, rsu_mass = buffer_absorb(
-            rsu_flat, rsu_mass, num_i + num_d, m_i + m_d,
-            keep=acfg.buffer_keep)
+            rsu_flat, rsu_mass, num_i + num_d, m_i + m_d, keep=keep)
         cloud_macc = cloud_macc + m_i + m_d
 
         # 6. enqueue new in-flight work (connected, trained, delayed);
-        #    the delivery weight is decayed at enqueue — s(d) is known.
+        #    the delivery weight is decayed at enqueue — s(d) is known and
+        #    the rate may be per-RSU (gathered through rsu_assign).
         enq = mask & free & (delays > 0)
         pend_x = jnp.where(enq[:, None], trained, pend_x)
-        w_enq = n_per_agent * maskf * acfg.weight(delays)
+        w_enq = n_per_agent * maskf * acfg.weight(delays, decay=decay)
         pend_w = jnp.where(enq, w_enq, pend_w)
         pend_t = jnp.where(enq, delays, pend_t)
 
-        # 7. cloud cadence: aggregate whatever RSU state exists, weighted
-        #    by the mass absorbed since the last cloud aggregation.
-        new_cloud = ops.cloud_agg(rsu_flat, cloud_macc)
-        take = cloud_now & (jnp.sum(cloud_macc) > 0)
-        cloud_flat = jnp.where(take, new_cloud, cloud_flat)
-        cloud_macc = jnp.where(cloud_now, jnp.zeros_like(cloud_macc),
-                               cloud_macc)
+        # 7. cloud cadence on the GLOBAL tick clock (spans round
+        #    boundaries): aggregate whatever RSU state exists, weighted by
+        #    the mass absorbed since the last cloud aggregation.  The
+        #    aggregation runs under lax.cond so non-fire ticks pay nothing.
+        gtick = gtick + 1
+        if ce:
+            def _fire(args):
+                rsu, macc, cloud = args
+                new_cloud = ops.cloud_agg(rsu, macc)
+                cloud = jnp.where(jnp.sum(macc) > 0, new_cloud, cloud)
+                return cloud, jnp.zeros_like(macc)
+
+            def _hold(args):
+                _, macc, cloud = args
+                return cloud, macc
+
+            cloud_flat, cloud_macc = jax.lax.cond(
+                (gtick % ce) == 0, _fire, _hold,
+                (rsu_flat, cloud_macc, cloud_flat))
 
         tick_metrics = {
             "absorbed_mass": m_i + m_d,                       # (R,)
@@ -206,34 +276,47 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
             "enqueued_mass": jnp.sum(jnp.where(enq, w_enq, 0.0)),
         }
         carry = (rsu_flat, rsu_mass, cloud_flat, conn, agent_flat,
-                 pend_x, pend_w, pend_t, cloud_macc)
+                 pend_x, pend_w, pend_t, cloud_macc, gtick)
         return carry, tick_metrics
 
     def global_round(state: AsyncSimState
                      ) -> Tuple[AsyncSimState, Dict[str, jax.Array]]:
         rng, k_rounds = jax.random.split(state.rng)
         keys = jax.random.split(k_rounds, hp.lar)
-        # round start: RSUs re-anchor to the cloud model (Alg. 2 line 2)
-        # and the staleness buffer restarts its mass accounting.
-        rsu_flat = jnp.broadcast_to(state.cloud_flat, (R, N))
-        carry = (rsu_flat, jnp.zeros((R,), jnp.float32), state.cloud_flat,
+        # per-round cadence (ce == 0, the sync anchor): RSUs re-anchor to
+        # the cloud model at round start (Alg. 2 line 2) and the buffer /
+        # cloud-mass accounting restarts with them.  Decoupled cadence
+        # (ce > 0): the round boundary is no longer special — RSU buffers,
+        # their running mass AND the cloud accumulator all persist, so the
+        # mass the eventual cloud aggregation weights by always accounts
+        # for content the buffers still hold.
+        if ce:
+            rsu0, rmass0, macc0 = (state.rsu_flat, state.rsu_mass,
+                                   state.cloud_macc)
+        else:
+            rsu0 = jnp.broadcast_to(state.cloud_flat, (R, N))
+            rmass0 = jnp.zeros((R,), jnp.float32)
+            macc0 = jnp.zeros((R,), jnp.float32)
+        carry = (rsu0, rmass0, state.cloud_flat,
                  state.conn, state.agent_flat, state.pending_x,
-                 state.pending_w, state.pending_t,
-                 jnp.zeros((R,), jnp.float32))
-        carry, ticks = jax.lax.scan(tick, carry, (keys, do_cloud))
+                 state.pending_w, state.pending_t, macc0, state.tick)
+        carry, ticks = jax.lax.scan(tick, carry, keys)
         (rsu_flat, rsu_mass, cloud_flat, conn, agent_flat,
-         pend_x, pend_w, pend_t, cloud_macc) = carry
+         pend_x, pend_w, pend_t, cloud_macc, gtick) = carry
 
-        # round-end cloud aggregation over the not-yet-aggregated mass
-        # (with cloud_every=0 this is exactly the sync Alg. 3 line 6).
-        new_cloud = ops.cloud_agg(rsu_flat, cloud_macc)
-        cloud_flat = jnp.where(jnp.sum(cloud_macc) > 0, new_cloud,
-                               cloud_flat)
+        if not ce:
+            # per-round cadence: round-end cloud aggregation over the
+            # not-yet-aggregated mass (exactly the sync Alg. 3 line 6).
+            new_cloud = ops.cloud_agg(rsu_flat, cloud_macc)
+            cloud_flat = jnp.where(jnp.sum(cloud_macc) > 0, new_cloud,
+                                   cloud_flat)
+            cloud_macc = jnp.zeros((R,), jnp.float32)
 
         out = AsyncSimState(agent_flat=agent_flat, rsu_flat=rsu_flat,
                             rsu_mass=rsu_mass, cloud_flat=cloud_flat,
                             pending_x=pend_x, pending_w=pend_w,
-                            pending_t=pend_t, conn=conn, rng=rng)
+                            pending_t=pend_t, conn=conn, rng=rng,
+                            cloud_macc=cloud_macc, tick=gtick)
         metrics = dict(ticks)
         metrics["pending_mass"] = pending_mass(out)
         return out, metrics
@@ -257,10 +340,216 @@ def make_async_global_round(cfg: SimConfig, hp: H2FedParams,
     return jax.jit(body, donate_argnums=(0,))
 
 
+# --------------------------------------------------------------------------
+# RSU-sharded semi-async round (DESIGN.md §4 x §6)
+# --------------------------------------------------------------------------
+
+def make_sharded_async_global_round(cfg: SimConfig, hp: H2FedParams,
+                                    het: HeterogeneityModel,
+                                    fed: FederatedData,
+                                    spec: flatten.FlatSpec,
+                                    topo: HierarchyTopology,
+                                    acfg: Optional[AsyncConfig] = None,
+                                    loss_fn: Callable = mlp.loss_fn):
+    """The semi-async tick loop under ``shard_map`` on an RSU-sharded
+    topology: in-flight buffers live with their agents, the per-tick
+    scatter-accumulate is block-local (``kernels/ops.block_local_agg``,
+    psum over the within-pod data axis only), ``buffer_absorb`` runs on the
+    pod's ``(R_local, N)`` shard, and only the cloud cadence reduces over
+    the pod axis.  State arrays use the topology's pod-block agent order
+    (``run_sharded_async_simulation`` converts at the boundary); the global
+    RSU order is untouched (pods own contiguous RSU blocks).
+    """
+    if not topo.rsu_sharded:
+        raise ValueError("make_sharded_async_global_round needs an "
+                         "rsu_sharded=True HierarchyTopology "
+                         "(use make_async_global_round otherwise)")
+    acfg = (acfg or AsyncConfig()).validate()
+    x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
+        _fed_arrays(cfg, hp, fed)
+    A, R, N = cfg.n_agents, cfg.n_rsus, spec.n
+    R_loc = topo.rsu_per_pod
+    perm = jnp.asarray(topo.agent_perm)
+    x_all = jnp.take(x_all, perm, axis=0)
+    y_all = jnp.take(y_all, perm, axis=0)
+    n_per_agent = jnp.take(n_per_agent, perm, axis=0)
+    local_assign = jnp.asarray(topo.local_assign)
+    # per-agent decay / per-RSU keep as full arrays so the shard_map specs
+    # stay uniform (scalar knobs broadcast)
+    decay = jnp.broadcast_to(
+        jnp.asarray(acfg.agent_decay(rsu_assign, R), jnp.float32), (A,))
+    decay = jnp.take(decay, perm, axis=0)
+    keep = jnp.broadcast_to(
+        jnp.asarray(acfg.rsu_keep(R), jnp.float32), (R,))
+    data_ax = topo.data_shard_axes
+    pod_ax = topo.pod_axis
+    ce = acfg.cloud_every
+
+    train_agents = jax.vmap(
+        lambda x, y, w0, wr, wc, act: _local_train_flat(
+            loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
+        in_axes=(0, 0, 0, 0, None, 0))
+
+    def _pod_sum(v):
+        return jax.lax.psum(v, data_ax) if data_ax is not None else v
+
+    def round_fn(cloud_flat, agent_flat, rsu_flat0, rsu_mass0, pend_x,
+                 pend_w, pend_t, cloud_macc, gtick0, x, y, n_data, assign,
+                 dec, keep_l, masks, steps, delays_all):
+        """Shard-local: A_local agents of this pod's R_local RSUs."""
+        if ce:
+            # decoupled cadence: the (R_local, N) block and its running
+            # mass persist across round boundaries (see the replicated
+            # twin's global_round for the rationale)
+            rsu_flat, rsu_mass = rsu_flat0, rsu_mass0
+        else:
+            rsu_flat = jnp.broadcast_to(cloud_flat, (R_loc, N))
+            rsu_mass = jnp.zeros((R_loc,), jnp.float32)
+
+        def tick(carry, inp):
+            (rsu_flat, rsu_mass, cloud_flat, agent_flat,
+             pend_x, pend_w, pend_t, cloud_macc, gtick) = carry
+            maskf, act_steps, delays = inp
+
+            in_flight = pend_t > 0
+            pend_t = jnp.maximum(pend_t - 1, 0)
+            due = in_flight & (pend_t == 0)
+            busy = in_flight & ~due
+            free = ~busy
+
+            act = jnp.where(busy, 0, act_steps)
+            w_start = jnp.take(rsu_flat, assign, axis=0)
+            trained = train_agents(x, y, w_start, w_start, cloud_flat, act)
+            agent_flat = jnp.where(busy[:, None], agent_flat, trained)
+
+            # block-local arrivals; psum over the data axis only
+            w_imm = (n_data * maskf * free
+                     * (delays == 0).astype(jnp.float32))
+            w_due = jnp.where(due, pend_w, 0.0)
+            num_i, m_i = ops.block_local_agg(agent_flat, w_imm, assign,
+                                             R_loc)
+            num_d, m_d = ops.block_local_agg(pend_x, w_due, assign, R_loc)
+            num = _pod_sum(num_i + num_d)
+            m_new = _pod_sum(m_i + m_d)
+            rsu_flat, rsu_mass = buffer_absorb(rsu_flat, rsu_mass, num,
+                                               m_new, keep=keep_l)
+            cloud_macc = cloud_macc + m_new
+
+            enq = (maskf > 0) & free & (delays > 0)
+            pend_x = jnp.where(enq[:, None], trained, pend_x)
+            w_enq = n_data * maskf * staleness_weights(
+                delays, decay=dec, schedule=acfg.schedule)
+            pend_w = jnp.where(enq, w_enq, pend_w)
+            pend_t = jnp.where(enq, delays, pend_t)
+
+            gtick = gtick + 1
+            if ce:
+                # lax.cond keeps the cross-pod psum OFF non-fire ticks —
+                # the RSU step stays pod-local except when the cadence
+                # actually fires (every replica takes the same branch:
+                # the tick clock is replicated)
+                def _fire(args):
+                    rsu, macc, cloud = args
+                    cloud = topo.cloud_psum_mean(macc, rsu, cloud)
+                    return cloud, jnp.zeros_like(macc)
+
+                def _hold(args):
+                    _, macc, cloud = args
+                    return cloud, macc
+
+                cloud_flat, cloud_macc = jax.lax.cond(
+                    (gtick % ce) == 0, _fire, _hold,
+                    (rsu_flat, cloud_macc, cloud_flat))
+
+            # per-pod metric partials ((1,)-shaped so the out spec can
+            # carry the pod axis); summed to globals outside the shard_map
+            tick_metrics = {
+                "absorbed_mass": m_new,                       # (R_local,)
+                "immediate_mass": _pod_sum(jnp.sum(m_i))[None],
+                "due_mass": _pod_sum(jnp.sum(m_d))[None],
+                "enqueued_mass":
+                    _pod_sum(jnp.sum(jnp.where(enq, w_enq, 0.0)))[None],
+            }
+            carry = (rsu_flat, rsu_mass, cloud_flat, agent_flat,
+                     pend_x, pend_w, pend_t, cloud_macc, gtick)
+            return carry, tick_metrics
+
+        carry = (rsu_flat, rsu_mass, cloud_flat, agent_flat,
+                 pend_x, pend_w, pend_t, cloud_macc, gtick0)
+        carry, ticks = jax.lax.scan(tick, carry,
+                                    (masks, steps, delays_all))
+        (rsu_flat, rsu_mass, cloud_flat, agent_flat,
+         pend_x, pend_w, pend_t, cloud_macc, gtick) = carry
+
+        if not ce:
+            # per-round cadence: the round-end cloud aggregation is the
+            # round's ONE cross-pod collective
+            cloud_flat = topo.cloud_psum_mean(cloud_macc, rsu_flat,
+                                              cloud_flat)
+            cloud_macc = jnp.zeros_like(cloud_macc)
+
+        return (cloud_flat, agent_flat, rsu_flat, rsu_mass,
+                pend_x, pend_w, pend_t, cloud_macc, gtick, ticks)
+
+    P_a, P_r, P_c = topo.agent_spec, topo.rsu_spec, topo.cloud_spec
+    P_s = topo.stacked_spec()
+    pod_stack = (P(None, pod_ax) if pod_ax is not None else P(None, None))
+    smapped = shard_map(
+        round_fn, topo.mesh,
+        in_specs=(P_c, P_a, P_r, P_r, P_a, P_a, P_a, P_r, P_c, P_a, P_a,
+                  P_a, P_a, P_a, P_r, P_s, P_s, P_s),
+        out_specs=(P_c, P_a, P_r, P_r, P_a, P_a, P_a, P_r, P_c,
+                   {"absorbed_mass": pod_stack, "immediate_mass": pod_stack,
+                    "due_mass": pod_stack, "enqueued_mass": pod_stack}),
+        axis_names=set(topo.agent_axes))
+
+    def global_round(state: AsyncSimState
+                     ) -> Tuple[AsyncSimState, Dict[str, jax.Array]]:
+        rng, k_rounds = jax.random.split(state.rng)
+        keys = jax.random.split(k_rounds, hp.lar)
+
+        # draws + latencies on the replicated ORIGINAL agent order (the
+        # flat-engine key discipline), permuted onto the pod-block layout
+        def draw(conn, key):
+            conn, mask, act = round_draws(key, conn, het, hp, A, spe)
+            d = sample_latency(jax.random.fold_in(key, _LATENCY_FOLD),
+                               A, het)
+            return conn, (mask.astype(jnp.float32), act, d)
+
+        conn, (masks, steps, delays) = jax.lax.scan(draw, state.conn, keys)
+        masks = jnp.take(masks, perm, axis=1)
+        steps = jnp.take(steps, perm, axis=1)
+        delays = jnp.take(delays, perm, axis=1)
+
+        macc0 = (state.cloud_macc if ce
+                 else jnp.zeros((R,), jnp.float32))
+        (cloud_flat, agent_flat, rsu_flat, rsu_mass, pend_x, pend_w,
+         pend_t, cloud_macc, gtick, ticks) = smapped(
+            state.cloud_flat, state.agent_flat, state.rsu_flat,
+            state.rsu_mass, state.pending_x, state.pending_w,
+            state.pending_t, macc0, state.tick,
+            x_all, y_all, n_per_agent, local_assign, decay, keep,
+            masks, steps, delays)
+
+        out = AsyncSimState(agent_flat=agent_flat, rsu_flat=rsu_flat,
+                            rsu_mass=rsu_mass, cloud_flat=cloud_flat,
+                            pending_x=pend_x, pending_w=pend_w,
+                            pending_t=pend_t, conn=conn, rng=rng,
+                            cloud_macc=cloud_macc, tick=gtick)
+        metrics = {"absorbed_mass": ticks["absorbed_mass"]}  # (LAR, R)
+        for k in ("immediate_mass", "due_mass", "enqueued_mass"):
+            metrics[k] = jnp.sum(ticks[k], axis=1)           # (LAR,)
+        metrics["pending_mass"] = pending_mass(out)
+        return out, metrics
+
+    return jax.jit(global_round, donate_argnums=(0,))
+
+
 def run_async_simulation(cfg: SimConfig, hp: H2FedParams,
                          het: HeterogeneityModel, fed: FederatedData,
                          init_params: PyTree, n_rounds: int, *,
                          acfg: Optional[AsyncConfig] = None,
+                         topo: Optional[HierarchyTopology] = None,
                          x_test=None, y_test=None,
                          loss_fn: Callable = mlp.loss_fn,
                          eval_fn: Optional[Callable] = None,
@@ -268,29 +557,52 @@ def run_async_simulation(cfg: SimConfig, hp: H2FedParams,
     """Run ``n_rounds`` semi-async global rounds; returns final state +
     history (accuracy curve plus per-round absorbed/pending mass so the
     straggler economy is observable).  ``fedsim.simulator.run_simulation``
-    dispatches here for ``engine="async"``.
+    dispatches here for ``engine="async"``.  Passing an ``rsu_sharded``
+    ``HierarchyTopology`` runs the tick loop RSU-sharded over its mesh
+    (the returned state is converted back to the original agent order).
     """
     hp.validate(), het.validate()
     acfg = (acfg or AsyncConfig()).validate()
     key = jax.random.key(cfg.seed)
     spec = flatten.spec_of(init_params)
     state = init_async_state(cfg, spec, init_params, key)
-    round_fn = make_async_global_round(cfg, hp, het, fed, spec, acfg,
-                                       loss_fn)
+    if topo is not None:
+        round_fn = make_sharded_async_global_round(cfg, hp, het, fed, spec,
+                                                   topo, acfg, loss_fn)
+    else:
+        round_fn = make_async_global_round(cfg, hp, het, fed, spec, acfg,
+                                           loss_fn)
     if eval_fn is None and x_test is not None:
         x_test, y_test = jnp.asarray(x_test), jnp.asarray(y_test)
         eval_fn = jax.jit(lambda p: mlp.accuracy(p, x_test, y_test))
 
-    accs, rounds, absorbed, pending = [], [], [], []
-    for r in range(n_rounds):
-        state, metrics = round_fn(state)
-        absorbed.append(float(jnp.sum(metrics["absorbed_mass"])))
-        pending.append(float(metrics["pending_mass"]))
-        if eval_fn is not None and (r % cfg.eval_every == 0
-                                    or r == n_rounds - 1):
-            accs.append(float(eval_fn(spec.unravel(state.cloud_flat))))
-            rounds.append(r + 1)
-    history = {"round": np.asarray(rounds), "acc": np.asarray(accs),
-               "absorbed_mass": np.asarray(absorbed),
-               "pending_mass": np.asarray(pending)}
+    def run_rounds(state):
+        accs, rounds, absorbed, pending = [], [], [], []
+        for r in range(n_rounds):
+            state, metrics = round_fn(state)
+            absorbed.append(float(jnp.sum(metrics["absorbed_mass"])))
+            pending.append(float(metrics["pending_mass"]))
+            if eval_fn is not None and (r % cfg.eval_every == 0
+                                        or r == n_rounds - 1):
+                accs.append(float(eval_fn(spec.unravel(state.cloud_flat))))
+                rounds.append(r + 1)
+        history = {"round": np.asarray(rounds), "acc": np.asarray(accs),
+                   "absorbed_mass": np.asarray(absorbed),
+                   "pending_mass": np.asarray(pending)}
+        return state, history
+
+    if topo is None:
+        return run_rounds(state)
+    with topo.mesh:
+        state = state._replace(
+            agent_flat=topo.permute_agents(state.agent_flat),
+            pending_x=topo.permute_agents(state.pending_x),
+            pending_w=topo.permute_agents(state.pending_w),
+            pending_t=topo.permute_agents(state.pending_t))
+        state, history = run_rounds(state)
+        state = state._replace(
+            agent_flat=topo.unpermute_agents(state.agent_flat),
+            pending_x=topo.unpermute_agents(state.pending_x),
+            pending_w=topo.unpermute_agents(state.pending_w),
+            pending_t=topo.unpermute_agents(state.pending_t))
     return state, history

@@ -2,42 +2,54 @@
 
 The flat engine (fedsim/simulator, DESIGN.md §3) already holds the fleet as
 an ``(A, N)`` buffer; this module partitions that agent axis over the
-``pod``/``data`` mesh axes from launch/mesh.py (DESIGN.md §2) so each device
-trains and aggregates only its ``A / n_shards`` agents:
+``pod``/``data`` mesh axes according to a ``core.topology.HierarchyTopology``
+(DESIGN.md §4), which owns all mesh/shard math.  Two modes:
 
+  replicated (default, the small-R fast path / equivalence anchor):
   * per-shard training is the same vmap'd flat dual-proximal scan,
   * the RSU layer becomes a *partial* ``(R, A_local) @ (A_local, N)``
     aggregation matmul per shard (the Pallas kernel via kernels/ops)
-    followed by ONE ``psum`` of the (R, N) partial sums + masses — the
-    weight-matrix formulation makes cross-shard cohorts exact,
+    followed by ONE ``psum`` over all agent axes of the (R, N) partial sums
+    + masses — the weight-matrix formulation makes cross-shard cohorts
+    exact,
   * RSU and cloud buffers stay replicated, so the cloud layer (Alg. 3) is
     collective-free replicated math.
 
+  rsu_sharded (``rsu_sharded=True``, large R): the topology co-locates every
+  agent with its RSU's pod (``HierarchyTopology.agent_perm``), making the
+  weight matrix block-diagonal over pods — so
+  * the RSU layer is one BLOCK-LOCAL ``(R_local, A_local) @ (A_local, N)``
+    matmul per shard (``kernels/ops.block_local_agg``) psum'd over the
+    within-pod ``data`` axis ONLY: the ``(R, N)`` buffer lives sharded over
+    the pod axis and never crosses pods,
+  * only the cloud layer pays ONE cross-pod collective per global round —
+    the paper's communication-avoidance insight made literal in the device
+    topology (``launch/hlo_analysis.collective_schedule`` pins: zero
+    cross-pod collectives inside the LAR scan).
+
 Stochastic draws (CSR/SCD/FSR) happen once per round on the replicated
-(A,)-sized state — identical key discipline to the single-device engines, so
-``run_sharded_simulation`` is numerically equivalent to ``run_simulation``
-(engine="flat") to fp32 tolerance on any device count that divides A
-(tests/test_sharded.py asserts this; CI's multi-device smoke runs it on 8
-forced host devices the way launch/dryrun.py does).
+(A,)-sized state in the ORIGINAL agent order — identical key discipline to
+the single-device engines, so both modes of ``run_sharded_simulation`` are
+numerically equivalent to ``run_simulation`` (engine="flat") to fp32
+tolerance on any admissible mesh (tests/test_sharded.py asserts this for
+pod counts 1/2/4 dividing R; CI's multi-device smoke runs it on forced host
+devices the way launch/dryrun.py does).
 """
 from __future__ import annotations
 
-from math import prod
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.core import flatten
-from repro.core.aggregation import (normalized_weights,
-                                    unnormalized_weight_matrix)
 from repro.core.h2fed import H2FedParams
 from repro.core.heterogeneity import HeterogeneityModel
+from repro.core.topology import HierarchyTopology, make_fleet_mesh  # noqa: F401 — re-export
 from repro.data.partition import FederatedData
 from repro.kernels import ops
-from repro.launch.mesh import agent_axes, make_mesh, shard_map
+from repro.launch.mesh import agent_axes, shard_map
 from repro.models import mlp
 from repro.fedsim.simulator import (FlatSimState, SimConfig,
                                     _fed_arrays, _local_train_flat,
@@ -46,44 +58,75 @@ from repro.fedsim.simulator import (FlatSimState, SimConfig,
 PyTree = Any
 
 
-def make_fleet_mesh(n_devices: Optional[int] = None):
-    """Lay the fleet out over the available devices.
-
-    >= 4 devices: a ('pod', 'data') mesh (2 x n/2) exercising both agent
-    axes of the production topology; fewer: a 1-D ('data',) mesh.  The
-    `model` axis is intentionally absent — fleet models are vmapped per
-    agent, not tensor-parallel (launch/h2fed_round handles that regime).
-    """
-    n = n_devices or len(jax.devices())
-    if n >= 4 and n % 2 == 0:
-        return make_mesh((2, n // 2), ("pod", "data"))
-    return make_mesh((n,), ("data",))
-
-
 def n_shards(mesh) -> int:
+    from math import prod
     return prod(mesh.shape[a] for a in agent_axes(mesh))
+
+
+def resolve_topology(cfg: SimConfig, fed: FederatedData, mesh, *,
+                     rsu_sharded: bool = False) -> HierarchyTopology:
+    """Bind the federated workload to a mesh; pass a ``HierarchyTopology``
+    through unchanged (single source of the mesh/shard math)."""
+    if isinstance(mesh, HierarchyTopology):
+        return mesh
+    return HierarchyTopology(cfg.n_agents, cfg.n_rsus, mesh,
+                             rsu_assign=np.asarray(fed.rsu_assign),
+                             rsu_sharded=rsu_sharded)
+
+
+def _make_train_agents(cfg: SimConfig, hp: H2FedParams, spec, n_steps,
+                       loss_fn):
+    return jax.vmap(
+        lambda x, y, w0, wr, wc, act: _local_train_flat(
+            loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
+        in_axes=(0, 0, 0, 0, None, 0))
+
+
+def _make_round_draws_scan(cfg: SimConfig, hp: H2FedParams,
+                           het: HeterogeneityModel, spe: int):
+    """One global round's stochastic realization on the replicated (A,)
+    state — same key discipline as the single-device engines (draws always
+    run in the ORIGINAL agent order; RSU-sharded callers permute after)."""
+
+    def draw(conn, key):
+        conn, mask, act = round_draws(key, conn, het, hp, cfg.n_agents, spe)
+        return conn, (mask.astype(jnp.float32), act)
+
+    return draw
 
 
 def make_sharded_global_round(cfg: SimConfig, hp: H2FedParams,
                               het: HeterogeneityModel, fed: FederatedData,
                               spec: flatten.FlatSpec, mesh,
-                              loss_fn: Callable = mlp.loss_fn):
-    """Build the jitted agent-sharded FlatSimState -> FlatSimState round."""
+                              loss_fn: Callable = mlp.loss_fn, *,
+                              rsu_sharded: bool = False):
+    """Build the jitted agent-sharded FlatSimState -> FlatSimState round.
+
+    ``mesh`` may be a mesh or a prebuilt ``HierarchyTopology``;
+    ``rsu_sharded=True`` selects the pod-sharded RSU buffer (DESIGN.md §4).
+    NOTE (rsu_sharded): the round consumes/produces ``agent_flat`` in the
+    topology's pod-block agent order — ``run_sharded_simulation`` converts
+    at the boundary.
+    """
+    topo = resolve_topology(cfg, fed, mesh, rsu_sharded=rsu_sharded)
+    if topo.rsu_sharded:
+        return _make_rsu_sharded_round(cfg, hp, het, fed, spec, topo,
+                                       loss_fn)
+    return _make_replicated_round(cfg, hp, het, fed, spec, topo, loss_fn)
+
+
+def _make_replicated_round(cfg: SimConfig, hp: H2FedParams,
+                           het: HeterogeneityModel, fed: FederatedData,
+                           spec: flatten.FlatSpec, topo: HierarchyTopology,
+                           loss_fn: Callable):
+    """Replicated-RSU mode: partial weight-matrix matmul + ONE psum over
+    all agent axes (DESIGN.md §4, the small-R fast path)."""
     x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
         _fed_arrays(cfg, hp, fed)
-    axes = agent_axes(mesh)
-    shards = n_shards(mesh)
-    if cfg.n_agents % shards:
-        raise ValueError(
-            f"n_agents={cfg.n_agents} must divide over {shards} shards "
-            f"(mesh {dict(mesh.shape)})")
     R, N = cfg.n_rsus, spec.n
-    ax = axes if len(axes) > 1 else axes[0]
+    ax = topo.shard_axes
 
-    train_agents = jax.vmap(
-        lambda x, y, w0, wr, wc, act: _local_train_flat(
-            loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
-        in_axes=(0, 0, 0, 0, None, 0))
+    train_agents = _make_train_agents(cfg, hp, spec, n_steps, loss_fn)
 
     def round_fn(cloud_flat, agent_flat, x, y, n_data, assign, masks, steps):
         """Shard-local view: leading agent axes are A_local-sized; cloud and
@@ -98,11 +141,10 @@ def make_sharded_global_round(cfg: SimConfig, hp: H2FedParams,
                                       cloud_flat, act_l)
 
             # Alg. 2 l.8: per-shard partial aggregation matmul, ONE psum
-            W_part = unnormalized_weight_matrix(
-                n_data, mask_l, assign, R)                # (R, A_local)
-            num = ops.weighted_agg_matmul(W_part, agent_flat)     # (R, N)
+            num, mass = ops.block_local_agg(
+                agent_flat, n_data * mask_l, assign, R)   # (R, N), (R,)
             num = jax.lax.psum(num, ax)
-            mass = jax.lax.psum(jnp.sum(W_part, axis=1), ax)      # (R,)
+            mass = jax.lax.psum(mass, ax)
             new_rsu = num / jnp.where(mass > 0, mass, 1.0)[:, None]
             rsu_flat = jnp.where((mass > 0)[:, None], new_rsu, rsu_flat)
             return (rsu_flat, agent_flat), mass
@@ -112,29 +154,25 @@ def make_sharded_global_round(cfg: SimConfig, hp: H2FedParams,
 
         # Alg. 3 l.6: replicated cloud math — no collective needed
         total = jnp.sum(masses, axis=0)                   # (R,)
-        wn, tsum = normalized_weights(total)
-        new_cloud = wn @ rsu_flat
-        cloud_flat = jnp.where(tsum > 0, new_cloud, cloud_flat)
+        num_c = total @ rsu_flat                          # (N,)
+        mass_c = jnp.sum(total)
+        new_cloud = num_c / jnp.where(mass_c > 0, mass_c, 1.0)
+        cloud_flat = jnp.where(mass_c > 0, new_cloud, cloud_flat)
         return cloud_flat, rsu_flat, agent_flat
 
     smapped = shard_map(
-        round_fn, mesh,
-        in_specs=(P(), P(ax), P(ax), P(ax), P(ax), P(ax),
-                  P(None, ax), P(None, ax)),
-        out_specs=(P(), P(), P(ax)),
-        axis_names=set(axes))
+        round_fn, topo.mesh,
+        in_specs=(topo.cloud_spec, topo.agent_spec, topo.agent_spec,
+                  topo.agent_spec, topo.agent_spec, topo.agent_spec,
+                  topo.stacked_spec(), topo.stacked_spec()),
+        out_specs=(topo.cloud_spec, topo.rsu_spec, topo.agent_spec),
+        axis_names=set(topo.agent_axes))
+
+    draw = _make_round_draws_scan(cfg, hp, het, spe)
 
     def global_round(state: FlatSimState) -> FlatSimState:
         rng, k_rounds = jax.random.split(state.rng)
         keys = jax.random.split(k_rounds, hp.lar)
-
-        # stochastic realization on the replicated (A,) state — same key
-        # discipline as the single-device engines
-        def draw(conn, key):
-            conn, mask, act = round_draws(key, conn, het, hp,
-                                          cfg.n_agents, spe)
-            return conn, (mask.astype(jnp.float32), act)
-
         conn, (masks, steps) = jax.lax.scan(draw, state.conn, keys)
         cloud_flat, rsu_flat, agent_flat = smapped(
             state.cloud_flat, state.agent_flat, x_all, y_all,
@@ -147,19 +185,102 @@ def make_sharded_global_round(cfg: SimConfig, hp: H2FedParams,
     return jax.jit(global_round, donate_argnums=(0,))
 
 
+def _make_rsu_sharded_round(cfg: SimConfig, hp: H2FedParams,
+                            het: HeterogeneityModel, fed: FederatedData,
+                            spec: flatten.FlatSpec, topo: HierarchyTopology,
+                            loss_fn: Callable):
+    """RSU-sharded mode: the (R, N) buffer lives sharded over the pod axis,
+    agents are permuted onto their RSU's pod, the RSU layer is block-local
+    (within-pod psum only) and the cloud layer pays the round's ONE
+    cross-pod collective (DESIGN.md §4)."""
+    x_all, y_all, n_per_agent, _, spe, n_steps = _fed_arrays(cfg, hp, fed)
+    perm = jnp.asarray(topo.agent_perm)
+    x_all = jnp.take(x_all, perm, axis=0)
+    y_all = jnp.take(y_all, perm, axis=0)
+    n_per_agent = jnp.take(n_per_agent, perm, axis=0)
+    local_assign = jnp.asarray(topo.local_assign)
+    R_loc, N = topo.rsu_per_pod, spec.n
+    data_ax = topo.data_shard_axes
+
+    train_agents = _make_train_agents(cfg, hp, spec, n_steps, loss_fn)
+
+    def round_fn(cloud_flat, agent_flat, x, y, n_data, assign, masks, steps):
+        """Shard-local view: this shard's agents all belong to this pod's
+        RSU block; ``rsu_flat`` is the pod's (R_local, N) slice of the
+        global buffer and ``assign`` holds pod-local RSU ids."""
+        rsu_flat = jnp.broadcast_to(cloud_flat, (R_loc, N))   # Alg. 2 l.2
+
+        def local_round(carry, inp):
+            rsu_flat, agent_flat = carry
+            mask_l, act_l = inp
+            w_start = jnp.take(rsu_flat, assign, axis=0)  # (A_local, N)
+            agent_flat = train_agents(x, y, w_start, w_start,
+                                      cloud_flat, act_l)
+
+            # Alg. 2 l.8: block-local matmul; psum over the WITHIN-POD data
+            # axis only — no cross-pod traffic in the RSU layer
+            num, mass = ops.block_local_agg(
+                agent_flat, n_data * mask_l, assign, R_loc)
+            if data_ax is not None:
+                num = jax.lax.psum(num, data_ax)
+                mass = jax.lax.psum(mass, data_ax)
+            new_rsu = num / jnp.where(mass > 0, mass, 1.0)[:, None]
+            rsu_flat = jnp.where((mass > 0)[:, None], new_rsu, rsu_flat)
+            return (rsu_flat, agent_flat), mass
+
+        (rsu_flat, agent_flat), masses = jax.lax.scan(
+            local_round, (rsu_flat, agent_flat), (masks, steps))
+
+        # Alg. 3 l.6: the cloud layer is the ONE cross-pod collective —
+        # mass-weighted partial sums reduced over the pod axis
+        total = jnp.sum(masses, axis=0)                   # (R_local,)
+        cloud_flat = topo.cloud_psum_mean(total, rsu_flat, cloud_flat)
+        return cloud_flat, rsu_flat, agent_flat
+
+    smapped = shard_map(
+        round_fn, topo.mesh,
+        in_specs=(topo.cloud_spec, topo.agent_spec, topo.agent_spec,
+                  topo.agent_spec, topo.agent_spec, topo.agent_spec,
+                  topo.stacked_spec(), topo.stacked_spec()),
+        out_specs=(topo.cloud_spec, topo.rsu_spec, topo.agent_spec),
+        axis_names=set(topo.agent_axes))
+
+    draw = _make_round_draws_scan(cfg, hp, het, spe)
+
+    def global_round(state: FlatSimState) -> FlatSimState:
+        rng, k_rounds = jax.random.split(state.rng)
+        keys = jax.random.split(k_rounds, hp.lar)
+        # draws in the ORIGINAL agent order (the flat-engine key
+        # discipline), then permuted onto the pod-block layout
+        conn, (masks, steps) = jax.lax.scan(draw, state.conn, keys)
+        masks = jnp.take(masks, perm, axis=1)
+        steps = jnp.take(steps, perm, axis=1)
+        cloud_flat, rsu_flat, agent_flat = smapped(
+            state.cloud_flat, state.agent_flat, x_all, y_all,
+            n_per_agent, local_assign, masks, steps)
+        return FlatSimState(agent_flat=agent_flat, rsu_flat=rsu_flat,
+                            cloud_flat=cloud_flat, conn=conn, rng=rng)
+
+    return jax.jit(global_round, donate_argnums=(0,))
+
+
 def run_sharded_simulation(cfg: SimConfig, hp: H2FedParams,
                            het: HeterogeneityModel, fed: FederatedData,
                            init_params: PyTree, n_rounds: int, *,
-                           mesh=None, x_test=None, y_test=None,
+                           mesh=None, rsu_sharded: bool = False,
+                           x_test=None, y_test=None,
                            loss_fn: Callable = mlp.loss_fn,
                            ) -> Tuple[FlatSimState, Dict[str, np.ndarray]]:
     """Sharded twin of ``run_simulation``: same rounds, agents partitioned
-    over the mesh; unravel happens only at the eval boundary."""
+    over the mesh; unravel happens only at the eval boundary.  The returned
+    state is in the ORIGINAL agent order in both modes (the RSU-sharded
+    rounds run pod-block-permuted internally)."""
     hp.validate(), het.validate()
     mesh = mesh if mesh is not None else make_fleet_mesh()
+    topo = resolve_topology(cfg, fed, mesh, rsu_sharded=rsu_sharded)
     spec = flatten.spec_of(init_params)
     state = init_flat_state(cfg, spec, init_params, jax.random.key(cfg.seed))
-    round_fn = make_sharded_global_round(cfg, hp, het, fed, spec, mesh,
+    round_fn = make_sharded_global_round(cfg, hp, het, fed, spec, topo,
                                          loss_fn)
     eval_fn = None
     if x_test is not None:
@@ -168,12 +289,18 @@ def run_sharded_simulation(cfg: SimConfig, hp: H2FedParams,
                                                  x_test, y_test))
 
     accs, rounds = [], []
-    with mesh:
+    with topo.mesh:
+        if topo.rsu_sharded:
+            state = state._replace(
+                agent_flat=topo.permute_agents(state.agent_flat))
         for r in range(n_rounds):
             state = round_fn(state)
             if eval_fn is not None and (r % cfg.eval_every == 0
                                         or r == n_rounds - 1):
                 accs.append(float(eval_fn(state.cloud_flat)))
                 rounds.append(r + 1)
+        if topo.rsu_sharded:
+            state = state._replace(
+                agent_flat=topo.unpermute_agents(state.agent_flat))
     history = {"round": np.asarray(rounds), "acc": np.asarray(accs)}
     return state, history

@@ -1,30 +1,8 @@
-"""C-ITS topology: agents ↔ RSUs ↔ cloud (paper Fig. 1).
-
-The simulator uses a static assignment (agent a → RSU a mod R, matching the
-partitioner); ``unbalanced_assignment`` models diverse average traffic flows
-(paper Sec. III: "unbalanced agent number at RSUs").
+"""Compat shim — the C-ITS topology grew into ``core/topology``
+(DESIGN.md §4): ``HierarchyTopology`` now owns the agent→RSU assignment,
+the pod ↔ RSU-group block structure, and the engines' PartitionSpecs.
+The original assignment helpers keep their import path here.
 """
-from __future__ import annotations
-
-import numpy as np
-
-
-def balanced_assignment(n_agents: int, n_rsus: int) -> np.ndarray:
-    return (np.arange(n_agents) % n_rsus).astype(np.int32)
-
-
-def unbalanced_assignment(n_agents: int, n_rsus: int, *, alpha: float = 1.0,
-                          seed: int = 0) -> np.ndarray:
-    """Dirichlet(alpha) cohort sizes; every RSU keeps >= 1 agent."""
-    rng = np.random.default_rng(seed)
-    props = rng.dirichlet([alpha] * n_rsus)
-    counts = np.maximum(np.round(props * n_agents).astype(int), 1)
-    while counts.sum() > n_agents:
-        counts[np.argmax(counts)] -= 1
-    while counts.sum() < n_agents:
-        counts[np.argmin(counts)] += 1
-    return np.repeat(np.arange(n_rsus), counts).astype(np.int32)
-
-
-def cohort_sizes(assign: np.ndarray, n_rsus: int) -> np.ndarray:
-    return np.bincount(assign, minlength=n_rsus).astype(np.int32)
+from repro.core.topology import (HierarchyTopology,  # noqa: F401
+                                 balanced_assignment, cohort_sizes,
+                                 make_fleet_mesh, unbalanced_assignment)

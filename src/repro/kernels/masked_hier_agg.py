@@ -88,25 +88,43 @@ def masked_hier_agg(stacked_flat: jax.Array, weights: jax.Array,
     return weighted_agg_matmul(W, stacked_flat, interpret=interpret), mass
 
 
-def scatter_accumulate(stacked_flat: jax.Array, weights: jax.Array,
-                       rsu_assign: jax.Array, n_rsus: int, *,
-                       interpret: bool = False):
-    """Unnormalized batched late-merge (semi-async engine, DESIGN.md §6):
+def block_local_agg(stacked_flat: jax.Array, weights: jax.Array,
+                    local_assign: jax.Array, n_rsus_local: int, *,
+                    interpret: bool = False):
+    """Block-local unnormalized aggregation (DESIGN.md §4, RSU-sharded mode):
 
         num[r, n] = Σ_{a: assign(a)=r}  w_a · X[a, n],   mass[r] = Σ w_a
 
-    On TPU this is the same MXU formulation as the normalized aggregation —
-    the cohort-masked *unnormalized* (R, A) weight matrix stays resident in
-    VMEM and the grid walks parameter-axis tiles; a GPU/CPU-native scatter-add
-    lives in ``core.aggregation.scatter_accumulate`` (the reference this is
-    pinned against) and is what ``kernels/ops`` routes to off-TPU.
+    with ``local_assign`` holding SHARD-LOCAL RSU ids in
+    ``[0, n_rsus_local)``.  When ``core.topology.HierarchyTopology``
+    co-locates agents with their RSU's pod, the global (R, A) weight matrix
+    is block-diagonal over pods and this is one pod's
+    ``(R_local, A_local) @ (A_local, N)`` diagonal block — the whole RSU
+    layer with no cross-pod traffic.  On TPU the small unnormalized weight
+    matrix stays resident in VMEM and the grid walks parameter-axis tiles
+    (same MXU formulation as the normalized aggregation); weights carry
+    mask x data-volume (x staleness decay) folded in, so zero-weight rows
+    contribute nothing.  The segment-sum oracle is
+    ``core.aggregation.scatter_accumulate`` — the global (replicated) call
+    is just this with global ids, and ``scatter_accumulate`` below
+    delegates here.
     """
     W = unnormalized_weight_matrix(weights, jnp.ones_like(weights),
-                                   rsu_assign, n_rsus)             # (R, A)
+                                   local_assign, n_rsus_local)  # (R_loc, A)
     mass = jnp.sum(W, axis=1)
     num = weighted_agg_matmul(W, stacked_flat.astype(jnp.float32),
                               interpret=interpret)
     return num, mass
+
+
+def scatter_accumulate(stacked_flat: jax.Array, weights: jax.Array,
+                       rsu_assign: jax.Array, n_rsus: int, *,
+                       interpret: bool = False):
+    """Unnormalized batched late-merge (semi-async engine, DESIGN.md §6) —
+    the global-ids case of ``block_local_agg`` (kept as the named entry the
+    async tests/ops facade pin)."""
+    return block_local_agg(stacked_flat, weights, rsu_assign, n_rsus,
+                           interpret=interpret)
 
 
 def cloud_agg(rsu_flat: jax.Array, rsu_weights: jax.Array, *,

@@ -70,6 +70,23 @@ def masked_hier_agg(stacked_flat, weights, mask, rsu_assign, n_rsus: int):
     return weighted_agg_matmul(W, stacked_flat), mass
 
 
+def block_local_agg(stacked_flat, weights, local_assign, n_rsus_local: int):
+    """Block-local unnormalized RSU aggregation for the RSU-sharded engines
+    (DESIGN.md §4): ``(num (R_local, N), mass (R_local,)) = Σ_a w_a·x_a``
+    grouped by SHARD-LOCAL RSU id — one pod's diagonal block of the global
+    weight matrix, so the RSU layer needs no cross-pod traffic.
+
+    TPU: the Pallas aggregation matmul with the local weight matrix
+    resident in VMEM; off-TPU: the XLA ``segment_sum`` reference from
+    ``core.aggregation`` (same contract, shard-local ids).
+    """
+    if _interpret():
+        return _scatter_ref(stacked_flat, weights, local_assign,
+                            n_rsus_local)
+    return _mha.block_local_agg(stacked_flat, weights, local_assign,
+                                n_rsus_local, interpret=False)
+
+
 def masked_scatter_accumulate(stacked_flat, weights, rsu_assign,
                               n_rsus: int):
     """Batched late-merge accumulate for the semi-async engine:

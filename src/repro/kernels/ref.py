@@ -100,6 +100,15 @@ def scatter_accumulate_ref(stacked_flat, weights, rsu_assign, n_rsus):
     return scatter_accumulate(stacked_flat, weights, rsu_assign, n_rsus)
 
 
+def block_local_agg_ref(stacked_flat, weights, local_assign, n_rsus_local):
+    """Reference for the block-local (R_local, A_local) aggregation: the
+    same segment-sum as ``scatter_accumulate_ref`` with shard-local RSU ids
+    (the block-diagonal slice of the global weight matrix, DESIGN.md §4)."""
+    from repro.core.aggregation import scatter_accumulate
+    return scatter_accumulate(stacked_flat, weights, local_assign,
+                              n_rsus_local)
+
+
 def cloud_agg_ref(rsu_flat, rsu_weights):
     w = rsu_weights.astype(jnp.float32)
     mass = jnp.sum(w)

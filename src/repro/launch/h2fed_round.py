@@ -38,16 +38,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import flatten
 from repro.core.aggregation import staleness_weights
 from repro.core.h2fed import H2FedParams
+from repro.core.topology import HierarchyTopology
 from repro.launch import sharding as shard
-from repro.launch.mesh import n_agents, shard_map
+from repro.launch.mesh import shard_map
 from repro.models import model as M
 from repro.models.config import ArchConfig
 
 PyTree = Any
-
-
-def _pod_axis(mesh) -> Optional[str]:
-    return "pod" if "pod" in mesh.axis_names else None
 
 
 def _wmean_over(axis: str, tree: PyTree, weight, old: PyTree) -> PyTree:
@@ -133,6 +130,14 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
     takes one extra input, ``delays`` — with all delays zero and
     buffer_keep=0 the program is the synchronous flat_agg round exactly.
 
+    ``staleness_decay`` may be a per-pod sequence (one RSU per pod in the
+    SPMD mapping — the per-RSU adaptive schedule of DESIGN.md §6); a scalar
+    keeps the uniform decay.
+
+    The mesh's agent-axis bookkeeping (pod axis, batch specs) comes from
+    ``core.topology.HierarchyTopology.from_mesh`` — the same object the
+    fedsim engines shard with (DESIGN.md §4).
+
     Inputs (global view):
       cloud_params — model-sharded, replicated over (pod, data)
       batch        — leaves (LAR, A, b, ...) with A over ('pod','data')
@@ -141,7 +146,16 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
       delays       — (LAR, A) int arrival latency (async_rounds > 0 only)
     Output: (new cloud_params, metrics)
     """
-    pod = _pod_axis(mesh)
+    topo = HierarchyTopology.from_mesh(mesh)
+    pod = topo.pod_axis
+    if isinstance(staleness_decay, (tuple, list)):
+        if len(staleness_decay) != topo.n_pods:
+            raise ValueError(
+                f"per-RSU staleness_decay needs one entry per pod "
+                f"({topo.n_pods}), got {len(staleness_decay)}")
+        decay_vec = jnp.asarray(staleness_decay, jnp.float32)
+    else:
+        decay_vec = None
     if flat_agg and quantize_cloud:
         raise ValueError(
             "flat_agg composes with the exact cloud reduction only")
@@ -234,6 +248,11 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
         my_delay = jnp.clip(delays.reshape((delays.shape[0],)),
                             0, async_rounds)
         cloud_vec = spec.ravel(cloud_params)
+        # per-RSU (== per-pod here) adaptive decay: this shard's rate
+        my_decay = (decay_vec[jax.lax.axis_index(pod)]
+                    if decay_vec is not None and pod is not None
+                    else (decay_vec[0] if decay_vec is not None
+                          else staleness_decay))
 
         def tick(carry, inp):
             w_k_vec, rsu_mass, pend_x, pend_w, pend_t, mass_acc = carry
@@ -267,7 +286,7 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
             enq = (m > 0) & free & (d > 0)
             pend_x = jnp.where(enq, x_new, pend_x)
             pend_w = jnp.where(
-                enq, my_n * m * staleness_weights(d, decay=staleness_decay),
+                enq, my_n * m * staleness_weights(d, decay=my_decay),
                 pend_w)
             pend_t = jnp.where(enq, d, pend_t)
             return (w_k_vec, total, pend_x, pend_w, pend_t,
@@ -290,14 +309,13 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
         metrics = {"surviving_mass": pod_mass, "lar_masses": masses}
         return spec.unravel(new_vec), metrics
 
-    axis_names = {"data"} | ({"pod"} if pod else set())
+    axis_names = set(topo.agent_axes)
 
     # manual-axes specs: params replicated over (pod,data); batch split on A
-    batch_axes = ("pod", "data") if pod else ("data",)
     p_rep = P()                                        # model axis stays auto
-    batch_spec = P(None, batch_axes)
-    mask_spec = P(None, batch_axes)
-    n_spec = P(batch_axes)
+    batch_spec = topo.stacked_spec()
+    mask_spec = topo.stacked_spec()
+    n_spec = topo.agent_spec
     out_mass = P()
 
     if async_rounds:
@@ -366,7 +384,8 @@ def round_input_specs(cfg: ArchConfig, shape_name: str, mesh,
     cfg = shape_adapted_config(cfg, shape_name)
     hp = hp or H2FedParams(local_epochs=1, lar=4)
 
-    A = n_agents(mesh)
+    topo = HierarchyTopology.from_mesh(mesh)
+    A = topo.n_agents
     b = max(info["batch"] // A, 1)
     seq = info["seq"]
     i32, f32 = jnp.int32, jnp.float32
@@ -384,8 +403,7 @@ def round_input_specs(cfg: ArchConfig, shape_name: str, mesh,
         batch_tree["memory"] = jax.ShapeDtypeStruct(
             (hp.lar, A, b, cfg.encoder.n_positions, cfg.encoder.d_embed), f32)
 
-    batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-    bspec = {k: NamedSharding(mesh, P(None, batch_axes))
+    bspec = {k: NamedSharding(mesh, topo.stacked_spec())
              for k in batch_tree}
     mask = jax.ShapeDtypeStruct((hp.lar, A), f32)
     n_data = jax.ShapeDtypeStruct((A,), f32)
@@ -396,8 +414,8 @@ def round_input_specs(cfg: ArchConfig, shape_name: str, mesh,
         fn=fn,
         args=(params_shapes, batch_tree, mask, n_data),
         in_shardings=(p_shard, bspec,
-                      NamedSharding(mesh, P(None, batch_axes)),
-                      NamedSharding(mesh, P(batch_axes))),
+                      NamedSharding(mesh, topo.stacked_spec()),
+                      NamedSharding(mesh, topo.agent_spec)),
         cfg=cfg,
         desc=f"h2fed_round LAR={hp.lar} E={hp.local_epochs} A={A} b={b} "
              f"S={seq}" + (" q8" if quantize_cloud else ""))

@@ -329,6 +329,98 @@ def analyze(text: str) -> Dict[str, float]:
             "collective_bytes": sum(colls.values()), "collectives": colls}
 
 
+_RG_LIST_RE = re.compile(r"replica_groups=\{((?:\{[0-9,\s]*\},?\s*)*)\}")
+_RG_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _parse_replica_groups(rest: str) -> Optional[List[List[int]]]:
+    """Replica groups of one collective op line.
+
+    Handles both HLO spellings: the explicit list form
+    ``replica_groups={{0,1},{2,3}}`` and the iota form
+    ``replica_groups=[G,S]<=[dims](T(perm))`` (flattened transposed iota
+    reshaped to (G, S)).  Returns None when no groups are spelled out
+    (= one group of all devices).
+    """
+    m = _RG_IOTA_RE.search(rest)
+    if m:
+        import numpy as np
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        v = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            v = np.transpose(v, [int(d) for d in m.group(4).split(",")])
+        return v.reshape(g, s).tolist()
+    m = _RG_LIST_RE.search(rest)
+    if m:
+        groups = [[int(x) for x in grp.split(",") if x.strip()]
+                  for grp in re.findall(r"\{([0-9,\s]*)\}", m.group(1))]
+        return [g for g in groups if g] or None
+    return None
+
+
+def collective_schedule(text: str) -> List[Dict]:
+    """Every collective reachable from the entry computation:
+    ``[{kind, bytes, groups, in_loop}]``.
+
+    ``in_loop`` marks collectives reached through a while body/cond — i.e.
+    executed inside a compiled ``lax.scan`` (for the hierarchical rounds:
+    the LAR loop, the RSU aggregation step).  Paired with
+    ``groups_within`` this pins the topology-first communication contract
+    (DESIGN.md §4): an RSU-sharded round must show NO cross-pod groups
+    in-loop — only the cloud layer's out-of-loop reduction crosses pods.
+    """
+    comps, entry = parse_module(text)
+    out: List[Dict] = []
+    seen = set()
+
+    def walk(cname: str, in_loop: bool):
+        if cname not in comps or (cname, in_loop) in seen:
+            return
+        seen.add((cname, in_loop))
+        for op in comps[cname].ops:
+            base = op.op.removesuffix("-start").removesuffix("-done")
+            if base in COLLECTIVE_KINDS and not op.op.endswith("-done"):
+                out.append({"kind": base,
+                            "bytes": float(_shape_bytes(op.out_type)),
+                            "groups": _parse_replica_groups(op.rest),
+                            "in_loop": in_loop})
+            if op.op == "while":
+                for m in (_BODY_RE.search(op.rest),
+                          _COND_RE.search(op.rest)):
+                    if m:
+                        walk(m.group(1), True)
+                continue
+            for cm in _CALLS_RE.finditer(op.rest):
+                walk(cm.group(1), in_loop)
+            # cadence-gated collectives live inside conditional branches
+            for cm in re.finditer(r"(?:true|false|branch\w*)_computation="
+                                  r"%?([\w\.\-]+)", op.rest):
+                walk(cm.group(1), in_loop)
+
+    if entry is not None:
+        walk(entry, False)
+    return out
+
+
+def groups_within(groups: Optional[List[List[int]]],
+                  partition: List[List[int]]) -> bool:
+    """True iff every replica group stays inside ONE cell of ``partition``
+    (e.g. partition = the per-pod device-id sets: a within-pod collective).
+    ``groups=None`` means one group of all devices — within only if the
+    partition has a single cell.
+    """
+    cells = [set(c) for c in partition]
+    if groups is None:
+        return len(cells) <= 1
+    for g in groups:
+        owners = {i for i, c in enumerate(cells) if c & set(g)}
+        if len(owners) > 1:
+            return False
+    return True
+
+
 _ALIAS_PAIR_RE = re.compile(r"\{([0-9 ,]*)\}:\s*\((\d+)")
 
 

@@ -15,6 +15,12 @@ import argparse
 import os
 
 
+def _decay_arg(s: str):
+    """float, or comma list -> tuple of per-pod/RSU decay rates."""
+    vals = tuple(float(x) for x in s.split(","))
+    return vals[0] if len(vals) == 1 else vals
+
+
 def _parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -43,8 +49,11 @@ def _parse_args():
                          "in-flight buffer: agents deliver up to D local "
                          "ticks late with staleness-decayed weight "
                          "(implies --flat-agg; 0 = synchronous)")
-    ap.add_argument("--staleness-decay", type=float, default=0.5,
-                    help="per-tick exponential decay of late deliveries")
+    ap.add_argument("--staleness-decay", type=_decay_arg, default=0.5,
+                    metavar="D[,D...]",
+                    help="per-tick exponential decay of late deliveries; a "
+                         "comma list gives one rate per pod/RSU (per-RSU "
+                         "adaptive staleness, DESIGN.md §6)")
     ap.add_argument("--buffer-keep", type=float, default=0.0,
                     help="RSU cohort mass retained across ticks [0, 1]")
     ap.add_argument("--adaptive-mu", action="store_true")
@@ -64,12 +73,13 @@ def main():
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding
 
     from repro.checkpoint import ckpt
     from repro.configs.registry import get_config, get_reduced_config
     from repro.core import orchestrator as orch
     from repro.core.h2fed import H2FedParams
+    from repro.core.topology import HierarchyTopology
     from repro.data.synthetic import lm_token_task
     from repro.launch import sharding as shard
     from repro.launch.h2fed_round import comm_model, make_h2fed_round
@@ -79,7 +89,8 @@ def main():
 
     mesh_shape = tuple(int(x) for x in args.mesh.split(","))
     mesh = make_mesh(mesh_shape, ("pod", "data", "model"))
-    A = mesh_shape[0] * mesh_shape[1]
+    topo = HierarchyTopology.from_mesh(mesh)
+    A = topo.n_agents
     if args.async_rounds and not args.flat_agg:
         print("[async] --async-rounds implies --flat-agg (raveled pending "
               "buffer); enabling it")
@@ -129,14 +140,14 @@ def main():
                                       async_rounds=args.async_rounds,
                                       staleness_decay=args.staleness_decay,
                                       buffer_keep=args.buffer_keep)
-                mask_sh = NamedSharding(mesh, P(None, ("pod", "data")))
+                mask_sh = NamedSharding(mesh, topo.stacked_spec())
                 in_sh = (
                     shard.param_shardings_model_only(
                         jax.eval_shape(lambda: params), mesh),
-                    {"tokens": NamedSharding(mesh, P(None, ("pod", "data"))),
-                     "labels": NamedSharding(mesh, P(None, ("pod", "data")))},
+                    {"tokens": NamedSharding(mesh, topo.stacked_spec()),
+                     "labels": NamedSharding(mesh, topo.stacked_spec())},
                     mask_sh,
-                    NamedSharding(mesh, P(("pod", "data"))))
+                    NamedSharding(mesh, topo.agent_spec))
                 if args.async_rounds:
                     in_sh = in_sh + (mask_sh,)
                 round_fns[key] = jax.jit(fn, in_shardings=in_sh)

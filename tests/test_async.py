@@ -248,6 +248,143 @@ class TestLateMerges:
         np.testing.assert_allclose(m_hard, m_soft * 0.25 ** 2, rtol=1e-5)
 
 
+class TestCloudCadence:
+    """Satellite: the cloud cadence is decoupled from the LAR scan — a
+    global tick counter carried in the state lets ``cloud_every`` span
+    global-round boundaries (cloud_every=0 keeps the per-round anchor)."""
+
+    def _round_fn(self, small_fed, acfg, het=None):
+        from repro.core.baselines import h2fed
+        from repro.fedsim.async_engine import (init_async_state,
+                                               make_async_global_round)
+        from repro.fedsim.simulator import SimConfig
+        fed, _, params = small_fed
+        cfg = SimConfig(n_agents=fed.n_agents, n_rsus=4, batch=16, seed=0)
+        hp = h2fed(mu1=0.01, mu2=0.005, lar=2, lr=0.1)
+        het = het or HeterogeneityModel(csr=0.8, lar=hp.lar,
+                                        max_delay=2, delay_p=0.5)
+        spec = flatten.spec_of(params)
+        rf = make_async_global_round(cfg, hp, het, fed, spec, acfg)
+        return rf, init_async_state(cfg, spec, params, jax.random.key(0)), hp
+
+    def test_tick_counter_advances(self, small_fed):
+        from repro.fedsim.async_engine import AsyncConfig
+        rf, state, hp = self._round_fn(small_fed, AsyncConfig(**SYNC_LIMIT))
+        for _ in range(3):
+            state, _ = rf(state)
+        assert int(state.tick) == 3 * hp.lar
+
+    def test_cadence_spans_rounds(self, small_fed):
+        """cloud_every beyond the total tick budget: the cloud model is
+        never aggregated (no forced round-end aggregation) and the mass
+        accumulator carries across rounds."""
+        from repro.fedsim.async_engine import AsyncConfig
+        rf, state, _ = self._round_fn(small_fed,
+                                      AsyncConfig(cloud_every=1000))
+        v0 = np.asarray(state.cloud_flat).copy()
+        for _ in range(2):
+            state, _ = rf(state)
+        np.testing.assert_array_equal(np.asarray(state.cloud_flat), v0)
+        assert float(jnp.sum(state.cloud_macc)) > 0
+
+    def test_cadence_fires_mid_round(self, small_fed):
+        """cloud_every=3 with LAR=2 fires at global tick 3 — inside the
+        SECOND round, impossible under the old round-bounded gate."""
+        from repro.fedsim.async_engine import AsyncConfig
+        rf, state, _ = self._round_fn(small_fed, AsyncConfig(cloud_every=3))
+        v0 = np.asarray(state.cloud_flat).copy()
+        state, _ = rf(state)                     # ticks 1, 2: no fire
+        np.testing.assert_array_equal(np.asarray(state.cloud_flat), v0)
+        state, _ = rf(state)                     # tick 3 fires
+        assert not np.array_equal(np.asarray(state.cloud_flat), v0)
+
+
+class TestPerRsuStaleness:
+    """Satellite: (R,)-vector decay/keep schedules (scalar broadcast keeps
+    the uniform behavior exactly)."""
+
+    def test_staleness_weights_vector_decay(self):
+        tau = jnp.asarray([0, 1, 2, 3])
+        dec = jnp.asarray([1.0, 0.5, 0.5, 0.25])
+        s = np.asarray(staleness_weights(tau, decay=dec, schedule="exp"))
+        np.testing.assert_allclose(s, [1.0, 0.5, 0.25, 0.25 ** 3])
+
+    def test_buffer_absorb_vector_keep(self):
+        rng = np.random.default_rng(0)
+        R, N = 3, 7
+        buf = jnp.asarray(rng.standard_normal((R, N)), F32)
+        M = jnp.asarray(rng.uniform(1, 3, R), F32)
+        num = jnp.asarray(rng.standard_normal((R, N)), F32)
+        m = jnp.asarray(rng.uniform(0.5, 2, R), F32)
+        keep = jnp.asarray([0.0, 0.5, 1.0], F32)
+        out_v, M_v = buffer_absorb(buf, M, num, m, keep=keep)
+        for r, k in enumerate([0.0, 0.5, 1.0]):
+            out_s, M_s = buffer_absorb(buf[r:r + 1], M[r:r + 1],
+                                       num[r:r + 1], m[r:r + 1], keep=k)
+            np.testing.assert_allclose(np.asarray(out_v)[r],
+                                       np.asarray(out_s)[0], rtol=1e-6)
+            np.testing.assert_allclose(np.asarray(M_v)[r],
+                                       np.asarray(M_s)[0], rtol=1e-6)
+
+    def test_uniform_vector_matches_scalar_engine(self, small_fed):
+        from repro.core.baselines import h2fed
+        from repro.fedsim.async_engine import AsyncConfig
+        from repro.fedsim.simulator import SimConfig, run_simulation
+        fed, test, params = small_fed
+        cfg = SimConfig(n_agents=fed.n_agents, n_rsus=4, batch=16, seed=0)
+        hp = h2fed(mu1=0.01, mu2=0.005, lar=2, lr=0.1)
+        het = HeterogeneityModel(csr=0.8, lar=hp.lar, max_delay=2,
+                                 delay_p=0.5)
+        _, h_s = run_simulation(cfg, hp, het, fed, params, 2,
+                                x_test=test.x, y_test=test.y,
+                                engine="async",
+                                async_cfg=AsyncConfig(staleness_decay=0.5))
+        _, h_v = run_simulation(cfg, hp, het, fed, params, 2,
+                                x_test=test.x, y_test=test.y,
+                                engine="async",
+                                async_cfg=AsyncConfig(
+                                    staleness_decay=(0.5,) * 4))
+        np.testing.assert_array_equal(h_s["acc"], h_v["acc"])
+        np.testing.assert_array_equal(h_s["absorbed_mass"],
+                                      h_v["absorbed_mass"])
+
+    def test_vector_decay_targets_one_rsu(self, small_fed):
+        """All-stale regime: halving one RSU's decay rate scales ONLY that
+        RSU's absorbed straggler mass (delays pinned at max_delay=2 →
+        factor decay^2)."""
+        from repro.core.baselines import h2fed
+        from repro.fedsim.async_engine import (AsyncConfig,
+                                               init_async_state,
+                                               make_async_global_round)
+        from repro.fedsim.simulator import SimConfig
+        fed, _, params = small_fed
+        cfg = SimConfig(n_agents=fed.n_agents, n_rsus=4, batch=16, seed=0)
+        hp = h2fed(mu1=0.01, mu2=0.005, lar=2, lr=0.1)
+        het = HeterogeneityModel(csr=1.0, max_delay=2, delay_p=1.0)
+        spec = flatten.spec_of(params)
+
+        def absorbed(decay):
+            rf = make_async_global_round(cfg, hp, het, fed, spec,
+                                         AsyncConfig(staleness_decay=decay))
+            state = init_async_state(cfg, spec, params, jax.random.key(0))
+            tot = np.zeros((4,))
+            for _ in range(3):
+                state, m = rf(state)
+                tot += np.asarray(m["absorbed_mass"]).sum(axis=0)
+            return tot
+
+        base = absorbed(1.0)
+        tgt = absorbed((0.5, 1.0, 1.0, 1.0))
+        np.testing.assert_allclose(tgt[0], base[0] * 0.25, rtol=1e-5)
+        np.testing.assert_allclose(tgt[1:], base[1:], rtol=1e-5)
+
+    def test_wrong_length_vector_raises(self, small_fed):
+        from repro.fedsim.async_engine import AsyncConfig
+        acfg = AsyncConfig(staleness_decay=(0.5, 0.5)).validate()
+        with pytest.raises(ValueError, match="one entry per RSU"):
+            acfg.agent_decay(jnp.zeros((8,), jnp.int32), n_rsus=4)
+
+
 class TestBufferDonation:
     """The ROADMAP donation item: FlatSimState buffers are donated through
     the round jit, so the (A, N) update is in-place — verified via the
@@ -371,7 +508,63 @@ with mesh:
     assert float(m_d['surviving_mass']) <= float(m_s['surviving_mass'])
     assert all(np.isfinite(np.asarray(l, np.float32)).all()
                for l in jax.tree.leaves(o_d))
+    # per-pod (== per-RSU) decay vector: uniform vector == scalar exactly
+    o_v, m_v = jax.jit(make_h2fed_round(cfg, hp, mesh, flat_agg=True,
+                                        async_rounds=2, buffer_keep=0.5,
+                                        staleness_decay=(0.5, 0.5)))(
+        params, batch, mask, n_data, delays)
+    for x, y in zip(jax.tree.leaves(o_d), jax.tree.leaves(o_v)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=1e-7)
 print("spmd-async-ok")
+"""
+
+
+CODE_RSU_SHARDED_ASYNC = """
+import jax, numpy as np
+from repro.configs.mnist_mlp import CONFIG as MLP_CFG
+from repro.core.baselines import h2fed
+from repro.core.heterogeneity import HeterogeneityModel
+from repro.data.partition import scenario_two
+from repro.data.synthetic import mnist_class_task
+from repro.fedsim.async_engine import AsyncConfig, run_async_simulation
+from repro.fedsim.sharded import make_fleet_mesh, resolve_topology
+from repro.fedsim.simulator import SimConfig, run_simulation
+from repro.models import mlp
+
+assert len(jax.devices()) == 8, len(jax.devices())
+train, test = mnist_class_task(n_train=1000, n_test=200, seed=0)
+fed = scenario_two(train, n_agents=8, n_rsus=4, seed=0)
+params = mlp.init_params(MLP_CFG, jax.random.key(0))
+cfg = SimConfig(n_agents=8, n_rsus=4, batch=16, seed=0)
+hp = h2fed(mu1=0.05, mu2=0.01, lar=2, lr=0.1)
+mesh = make_fleet_mesh(8, n_pods=2)
+topo = resolve_topology(cfg, fed, mesh, rsu_sharded=True)
+
+# sync-limit anchor: RSU-sharded async == flat
+het = HeterogeneityModel(csr=0.6, lar=hp.lar)
+_, hf = run_simulation(cfg, hp, het, fed, params, 2,
+                       x_test=test.x, y_test=test.y, engine="flat")
+_, hs = run_async_simulation(cfg, hp, het, fed, params, 2, topo=topo,
+                             acfg=AsyncConfig(staleness_decay=1.0,
+                                              buffer_keep=0.0),
+                             x_test=test.x, y_test=test.y)
+np.testing.assert_allclose(hf["acc"], hs["acc"], atol=2e-3)
+
+# delayed regime: RSU-sharded == replicated async (same draws, same
+# staleness algebra, block-local merge)
+het_d = HeterogeneityModel(csr=0.8, lar=hp.lar, max_delay=2, delay_p=0.5)
+acfg = AsyncConfig(staleness_decay=0.5, buffer_keep=0.4, cloud_every=3)
+_, hu = run_async_simulation(cfg, hp, het_d, fed, params, 2, acfg=acfg,
+                             x_test=test.x, y_test=test.y)
+_, hq = run_async_simulation(cfg, hp, het_d, fed, params, 2, topo=topo,
+                             acfg=acfg, x_test=test.x, y_test=test.y)
+np.testing.assert_allclose(hu["acc"], hq["acc"], atol=2e-3)
+np.testing.assert_allclose(hu["absorbed_mass"], hq["absorbed_mass"],
+                           rtol=1e-5)
+np.testing.assert_allclose(hu["pending_mass"], hq["pending_mass"],
+                           rtol=1e-5)
+print("rsu-sharded-async-ok")
 """
 
 
@@ -385,3 +578,11 @@ class TestMultiDevice:
         zero-delay limit equals the synchronous flat_agg program."""
         out = forced_devices_run(CODE_SPMD_ASYNC, devices=8, timeout=900)
         assert "spmd-async-ok" in out
+
+    def test_rsu_sharded_async_on_8_devices(self, forced_devices_run):
+        """The semi-async tick loop on an RSU-sharded 2x4 topology: the
+        buffer merge runs on the local (R_local, N) shard, yet matches the
+        flat sync anchor and the replicated async engine exactly."""
+        out = forced_devices_run(CODE_RSU_SHARDED_ASYNC, devices=8,
+                                 timeout=900)
+        assert "rsu-sharded-async-ok" in out

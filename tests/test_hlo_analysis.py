@@ -65,6 +65,70 @@ class TestInPlaceUpdates:
         assert an["collective_bytes"] == 0.0
 
 
+_SCHEDULE_HLO = """\
+HloModule m, input_output_alias={}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %p = (s32[], f32[4,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,8] get-tuple-element(%p), index=1
+  %ar = f32[4,8] all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[4,8]) tuple(%i2, %ar)
+}
+
+%cond (p: (s32[], f32[4,8])) -> pred[] {
+  %p = (s32[], f32[4,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(3)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[4,8]) -> f32[4,8] {
+  %x = f32[4,8] parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[4,8]) tuple(%zero, %x)
+  %w = (s32[], f32[4,8]) while(%t0), condition=%cond, body=%body
+  %y = f32[4,8] get-tuple-element(%w), index=1
+  ROOT %out = f32[4,8] all-reduce(%y), replica_groups=[4,2]<=[2,4]T(1,0), to_apply=%add
+}
+"""
+
+
+class TestCollectiveSchedule:
+    """The topology-first communication contract reader (DESIGN.md §4):
+    which collectives run inside the scanned RSU step vs once per round,
+    and which replica groups they use."""
+
+    PODS = [[0, 1, 2, 3], [4, 5, 6, 7]]
+
+    def test_in_loop_and_groups_parsed(self):
+        sched = H.collective_schedule(_SCHEDULE_HLO)
+        assert len(sched) == 2
+        in_loop = [c for c in sched if c["in_loop"]]
+        out_loop = [c for c in sched if not c["in_loop"]]
+        assert len(in_loop) == 1 and len(out_loop) == 1
+        # explicit list form: {{0..3},{4..7}} — within the pod partition
+        assert in_loop[0]["groups"] == [[0, 1, 2, 3], [4, 5, 6, 7]]
+        assert H.groups_within(in_loop[0]["groups"], self.PODS)
+        # iota form [4,2]<=[2,4]T(1,0): transposed pairs {0,4},{1,5},...
+        assert out_loop[0]["groups"] == [[0, 4], [1, 5], [2, 6], [3, 7]]
+        assert not H.groups_within(out_loop[0]["groups"], self.PODS)
+
+    def test_groups_within_edge_cases(self):
+        # no spelled-out groups == one group of everything
+        assert H.groups_within(None, [[0, 1, 2, 3]])
+        assert not H.groups_within(None, self.PODS)
+        assert H.groups_within([[0, 1], [2, 3]], [[0, 1, 2, 3]])
+
+
 class TestBreakdown:
     def test_breakdown_attribution_sums_sanely(self):
         w = jnp.ones((64, 64), jnp.float32)

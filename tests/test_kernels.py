@@ -174,6 +174,59 @@ def test_masked_hier_agg_sweep(A, R, N, dtype):
                                rtol=1e-6)
 
 
+@pytest.mark.parametrize("A,R,N,dtype", AGG_SWEEP)
+def test_block_local_agg_matches_ref(A, R, N, dtype):
+    """The block-local (unnormalized) variant vs its segment-sum oracle —
+    and against the global kernel restricted to one pod's RSU block."""
+    from repro.kernels.masked_hier_agg import block_local_agg
+    rng = np.random.default_rng(A * 13 + R)
+    x = jnp.asarray(rng.standard_normal((A, N))).astype(dtype)
+    w = jnp.asarray(rng.uniform(0, 4, A) * (rng.random(A) < 0.8),
+                    jnp.float32)
+    assign = jnp.asarray(rng.integers(0, R, A), jnp.int32)
+    num, mass = block_local_agg(x, w, assign, R, **INTERP)
+    num_e, mass_e = ref.block_local_agg_ref(x, w, assign, R)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(num, np.float32),
+                               np.asarray(num_e, np.float32),
+                               atol=atol, rtol=atol)
+    np.testing.assert_allclose(np.asarray(mass), np.asarray(mass_e),
+                               rtol=1e-6)
+
+
+def test_block_local_agg_is_weight_matrix_block():
+    """A pod's block-local call == the matching row-block of the global
+    unnormalized weight-matrix matmul (the block-diagonal structure the
+    RSU-sharded engine exploits, DESIGN.md §4)."""
+    from repro.core.aggregation import unnormalized_weight_matrix
+    from repro.core.topology import HierarchyTopology
+    from repro.kernels.masked_hier_agg import block_local_agg
+    rng = np.random.default_rng(3)
+    A, R, N, pods = 12, 4, 96, 2
+
+    class _Mesh:
+        shape = {"pod": pods, "data": 2}
+        axis_names = ("pod", "data")
+
+    topo = HierarchyTopology(A, R, _Mesh(), rsu_sharded=True)
+    x = jnp.asarray(rng.standard_normal((A, N)), jnp.float32)
+    w = jnp.asarray(rng.uniform(1, 2, A), jnp.float32)
+    W = unnormalized_weight_matrix(
+        w, jnp.ones((A,)), jnp.asarray(topo.rsu_assign), R)   # (R, A)
+    full = np.asarray(W @ x)
+    x_p = np.asarray(x)[topo.agent_perm]
+    w_p = np.asarray(w)[topo.agent_perm]
+    a_pp, r_pp = A // pods, topo.rsu_per_pod
+    for p in range(pods):
+        sl = slice(p * a_pp, (p + 1) * a_pp)
+        num, _ = block_local_agg(
+            jnp.asarray(x_p[sl]), jnp.asarray(w_p[sl]),
+            jnp.asarray(topo.local_assign[sl]), r_pp, **INTERP)
+        np.testing.assert_allclose(np.asarray(num),
+                                   full[p * r_pp:(p + 1) * r_pp],
+                                   atol=2e-5, rtol=2e-5)
+
+
 def test_cloud_agg_matches_ref():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((10, 333)), jnp.float32)

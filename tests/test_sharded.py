@@ -43,6 +43,60 @@ print("axes", agent_axes(mesh), "shards-ok")
 """
 
 
+RSU_EQUIV_CODE = """
+import jax, numpy as np
+from repro.configs.mnist_mlp import CONFIG as MLP_CFG
+from repro.core import flatten
+from repro.core.baselines import h2fed
+from repro.core.heterogeneity import HeterogeneityModel
+from repro.data.partition import scenario_two
+from repro.data.synthetic import mnist_class_task
+from repro.fedsim.simulator import SimConfig, init_flat_state, run_simulation
+from repro.fedsim.sharded import (make_fleet_mesh, make_sharded_global_round,
+                                  resolve_topology, run_sharded_simulation)
+from repro.launch import hlo_analysis as H
+from repro.models import mlp
+
+assert len(jax.devices()) == {devices}, len(jax.devices())
+train, test = mnist_class_task(n_train=1000, n_test=200, seed=0)
+fed = scenario_two(train, n_agents={agents}, n_rsus=4, seed=0)
+params = mlp.init_params(MLP_CFG, jax.random.key(0))
+cfg = SimConfig(n_agents={agents}, n_rsus=4, batch=16, seed=0)
+hp = h2fed(mu1=0.01, mu2=0.005, lar=2, lr=0.1)
+het = HeterogeneityModel(csr=0.6, lar=hp.lar)
+_, h_flat = run_simulation(cfg, hp, het, fed, params, 2,
+                           x_test=test.x, y_test=test.y, engine="flat")
+
+# acceptance: RSU-sharded == flat for every pod count dividing R
+for pods in {pod_counts}:
+    mesh = make_fleet_mesh({devices}, n_pods=pods)
+    _, h_rs = run_sharded_simulation(cfg, hp, het, fed, params, 2,
+                                     mesh=mesh, rsu_sharded=True,
+                                     x_test=test.x, y_test=test.y)
+    np.testing.assert_allclose(h_flat["acc"], h_rs["acc"], atol=2e-3)
+    print("pods", pods, "equiv-ok")
+
+# acceptance: zero cross-pod collectives in the RSU (in-loop) step
+mesh = make_fleet_mesh({devices}, n_pods=2)
+topo = resolve_topology(cfg, fed, mesh, rsu_sharded=True)
+spec = flatten.spec_of(params)
+rf = make_sharded_global_round(cfg, hp, het, fed, spec, topo)
+state = init_flat_state(cfg, spec, params, jax.random.key(0))
+with mesh:
+    txt = rf.lower(state).compile().as_text()
+pods_dev = [[d.id for d in row.ravel()] for row in mesh.devices]
+colls = H.collective_schedule(txt)
+assert colls, "no collectives found in the compiled round"
+in_loop_cross = [c for c in colls
+                 if c["in_loop"] and not H.groups_within(c["groups"], pods_dev)]
+out_cross = [c for c in colls
+             if not c["in_loop"] and not H.groups_within(c["groups"], pods_dev)]
+assert not in_loop_cross, in_loop_cross
+assert out_cross, colls            # the cloud layer does cross pods
+print("collectives-ok", len(colls), "total,", len(out_cross), "cloud-crossing")
+"""
+
+
 @pytest.fixture(scope="module")
 def small_fed(tiny_task, fed_small):
     from repro.configs.mnist_mlp import CONFIG as MLP_CFG
@@ -50,6 +104,71 @@ def small_fed(tiny_task, fed_small):
     train, test = tiny_task
     params = mlp.init_params(MLP_CFG, jax.random.key(0))
     return fed_small, test, params
+
+
+class _DuckMesh:
+    """Static mesh metadata stand-in: topology validation reads only
+    .shape/.axis_names and must fire before any device work."""
+
+    def __init__(self, shape, axes):
+        self.shape = dict(zip(axes, shape))
+        self.axis_names = tuple(axes)
+
+
+class TestTopology:
+    """HierarchyTopology edge cases (host-side, no devices touched)."""
+
+    def test_block_structure(self):
+        from repro.core.topology import HierarchyTopology
+        topo = HierarchyTopology(8, 4, _DuckMesh((2, 2), ("pod", "data")),
+                                 rsu_sharded=True)
+        assert topo.rsu_per_pod == 2
+        # pods own contiguous RSU blocks and every permuted agent's RSU
+        # lives on its own pod
+        pod_of_agent = topo.pod_of_rsu[topo.rsu_assign[topo.agent_perm]]
+        assert (pod_of_agent == np.repeat([0, 1], 4)).all()
+        assert set(topo.local_assign.tolist()) <= {0, 1}
+        # permute/unpermute round-trip
+        v = np.arange(8)
+        np.testing.assert_array_equal(
+            topo.unpermute_agents(topo.permute_agents(v)), v)
+
+    def test_r_not_divisible_by_pods_raises(self):
+        """Pinned error message for the R % pods != 0 case."""
+        from repro.core.topology import HierarchyTopology
+        with pytest.raises(ValueError,
+                           match="n_rsus=3 is not divisible by n_pods=2"):
+            HierarchyTopology(8, 3, _DuckMesh((2, 2), ("pod", "data")),
+                              rsu_sharded=True)
+
+    def test_unequal_pod_cohorts_raise(self):
+        from repro.core.topology import HierarchyTopology
+        assign = np.asarray([0, 0, 0, 0, 0, 1, 2, 3], np.int32)  # pod0: 6
+        with pytest.raises(ValueError, match="equal agents per pod"):
+            HierarchyTopology(8, 4, _DuckMesh((2, 2), ("pod", "data")),
+                              rsu_assign=assign, rsu_sharded=True)
+
+    def test_single_pod_degenerate_mesh(self):
+        """No pod axis: rsu_sharded collapses to one block — identity
+        permutation, replicated (R, N) spec."""
+        from jax.sharding import PartitionSpec as P
+        from repro.core.topology import HierarchyTopology
+        topo = HierarchyTopology(8, 4, _DuckMesh((2,), ("data",)),
+                                 rsu_sharded=True)
+        assert topo.n_pods == 1 and topo.rsu_per_pod == 4
+        np.testing.assert_array_equal(topo.agent_perm, np.arange(8))
+        np.testing.assert_array_equal(topo.local_assign, topo.rsu_assign)
+        assert topo.rsu_spec == P()
+
+    def test_spmd_flavor_from_mesh(self):
+        """launch/h2fed_round's mapping: one agent per (pod, data)
+        position, one RSU per pod, identity permutation."""
+        from repro.core.topology import HierarchyTopology
+        topo = HierarchyTopology.from_mesh(
+            _DuckMesh((2, 4, 1), ("pod", "data", "model")))
+        assert topo.n_agents == 8 and topo.n_rsus == 2
+        assert topo.rsu_per_pod == 1 and topo.pod_axis == "pod"
+        np.testing.assert_array_equal(topo.agent_perm, np.arange(8))
 
 
 class TestSingleDevice:
@@ -74,6 +193,52 @@ class TestSingleDevice:
                                          y_test=test.y)
         np.testing.assert_allclose(h_flat["acc"], h_sh["acc"], atol=2e-3)
 
+        # RSU-sharded on the degenerate single-pod mesh: same anchor
+        mesh1 = make_fleet_mesh(1, n_pods=1)
+        _, h_rs = run_sharded_simulation(cfg, hp, het, fed, params, 2,
+                                         mesh=mesh1, rsu_sharded=True,
+                                         x_test=test.x, y_test=test.y)
+        np.testing.assert_allclose(h_flat["acc"], h_rs["acc"], atol=2e-3)
+
+    def test_empty_rsu_keeps_anchor(self, small_fed):
+        """An RSU with no agents at all: the topology builds, the engine
+        runs, and the empty RSU's buffer row keeps the round's cloud
+        anchor (zero-mass blend semantics)."""
+        import dataclasses
+        from repro.core.baselines import h2fed
+        from repro.core.heterogeneity import HeterogeneityModel
+        from repro.fedsim.sharded import (make_fleet_mesh,
+                                          resolve_topology,
+                                          run_sharded_simulation)
+        from repro.fedsim.simulator import SimConfig, run_simulation
+        fed, test, params = small_fed
+        # re-home RSU 1's agents onto RSU 0: RSU 1 has an empty cohort
+        assign = np.asarray(fed.rsu_assign).copy()
+        assign[assign == 1] = 0
+        fed2 = dataclasses.replace(fed, rsu_assign=assign)
+        cfg = SimConfig(n_agents=fed.n_agents, n_rsus=4, batch=16, seed=0)
+        hp = h2fed(mu1=0.05, mu2=0.01, lar=2, lr=0.1)
+        het = HeterogeneityModel(csr=0.8, lar=hp.lar)
+        mesh = make_fleet_mesh(1, n_pods=1)
+        topo = resolve_topology(cfg, fed2, mesh, rsu_sharded=True)
+        assert (np.bincount(topo.rsu_assign, minlength=4) == 0).any()
+        s_flat, h_flat = run_simulation(cfg, hp, het, fed2, params, 2,
+                                        x_test=test.x, y_test=test.y,
+                                        engine="flat")
+        s_rs, h_rs = run_sharded_simulation(cfg, hp, het, fed2, params, 2,
+                                            mesh=topo, x_test=test.x,
+                                            y_test=test.y)
+        np.testing.assert_allclose(h_flat["acc"], h_rs["acc"], atol=2e-3)
+        # both engines carry the same (R, N) buffer — including the empty
+        # RSU's row, which keeps the round-start cloud anchor (zero-mass
+        # blend) rather than going to zero or NaN
+        from repro.core import flatten
+        spec = flatten.spec_of(params)
+        rsu_flat_ref = np.asarray(spec.ravel_stacked(s_flat.rsu_params))
+        np.testing.assert_allclose(np.asarray(s_rs.rsu_flat)[1],
+                                   rsu_flat_ref[1], atol=1e-4, rtol=1e-4)
+        assert np.isfinite(np.asarray(s_rs.rsu_flat)).all()
+
     def test_indivisible_agents_raise(self, small_fed):
         from repro.core import flatten
         from repro.core.baselines import h2fed
@@ -86,18 +251,19 @@ class TestSingleDevice:
 
         # a 2-shard mesh stand-in: the divisibility check reads only
         # .shape/.axis_names, and fires before any device work
-        class _Mesh:
-            shape = {"data": 2}
-            axis_names = ("data",)
-
         with pytest.raises(ValueError, match="must divide"):
             make_sharded_global_round(
-                cfg, h2fed(), HeterogeneityModel(), fed, spec, _Mesh())
+                cfg, h2fed(), HeterogeneityModel(), fed, spec,
+                _DuckMesh((2,), ("data",)))
 
     def test_fleet_mesh_shapes(self):
         from repro.fedsim.sharded import make_fleet_mesh, n_shards
         m1 = make_fleet_mesh(1)
         assert m1.axis_names == ("data",) and n_shards(m1) == 1
+        m2 = make_fleet_mesh(1, n_pods=1)
+        assert m2.axis_names == ("pod", "data") and n_shards(m2) == 1
+        with pytest.raises(ValueError, match="must divide the device"):
+            make_fleet_mesh(4, n_pods=3)
 
 
 class TestMultiDevice:
@@ -112,3 +278,25 @@ class TestMultiDevice:
         out = forced_devices_run(EQUIV_CODE.format(devices=2), devices=2,
                                  timeout=900)
         assert "shards-ok" in out
+
+    def test_rsu_sharded_8_devices(self, forced_devices_run):
+        """The acceptance sweep: RSU-sharded == flat for pod counts 1/2/4
+        dividing R, AND the compiled round's collective schedule keeps the
+        RSU (in-loop) step pod-local — only the cloud layer crosses pods
+        (hlo_analysis.collective_schedule)."""
+        out = forced_devices_run(
+            RSU_EQUIV_CODE.format(devices=8, agents=8,
+                                  pod_counts=(1, 2, 4)),
+            devices=8, timeout=900)
+        for pods in (1, 2, 4):
+            assert f"pods {pods} equiv-ok" in out
+        assert "collectives-ok" in out
+
+    def test_rsu_sharded_16_devices_2d(self, forced_devices_run):
+        """16-forced-host-device 2-D mesh: the 4x4 ('pod','data') layout
+        (R_local=1 — one RSU per pod, the production shape)."""
+        out = forced_devices_run(
+            RSU_EQUIV_CODE.format(devices=16, agents=16, pod_counts=(4,)),
+            devices=16, timeout=900)
+        assert "pods 4 equiv-ok" in out
+        assert "collectives-ok" in out
