@@ -1,6 +1,6 @@
 """Sync-vs-async engine benchmark (DESIGN.md §6) for the BENCH json flow.
 
-Two measurements on the SAME federated workload:
+Measurements on the SAME federated workload:
 
   * round latency — one compiled global round of engine="flat" (the
     synchronous barrier) vs engine="async" (staleness-weighted RSU buffers,
@@ -12,6 +12,12 @@ Two measurements on the SAME federated workload:
     majority late (staleness-decayed) instead of discarding their work.
     The record lands in the bench JSON artifact so the convergence
     trajectory is tracked per PR.
+  * one-pass round program (DESIGN.md §3): bytes-per-round of the compiled
+    async tick program via ``launch/hlo_analysis.round_cost`` — today's
+    multi-pass fp32 program (``fused=False``) vs the fused
+    aggregate-and-blend path vs fused + bf16 fleet storage — plus achieved
+    HBM GB/s next to the round latency, and the headline
+    ``fused_bf16_vs_unfused_f32_bytes`` reduction factor.
 
 Standalone:
   PYTHONPATH=src python -m benchmarks.async_round \
@@ -107,17 +113,86 @@ def run_cell(args) -> dict:
     # --- round latency: the barrier engine vs the semi-async engine ---
     # (fresh key per engine: the donated round jits consume their input
     # state, including the rng key buffer)
+    def fstate():
+        return init_flat_state(cfg, spec, params, jax.random.key(cfg.seed))
+
+    def astate(s=spec):
+        return init_async_state(cfg, s, params, jax.random.key(cfg.seed))
+
     flat_round = make_flat_global_round(cfg, hp, het_sync, fed, spec)
-    t_flat = _time_rounds(
-        flat_round,
-        init_flat_state(cfg, spec, params, jax.random.key(cfg.seed)),
-        args.rounds)
+    t_flat = _time_rounds(flat_round, fstate(), args.rounds)
     async_round = make_async_global_round(cfg, hp, het_async, fed, spec,
                                           acfg)
-    t_async = _time_rounds(
-        async_round,
-        init_async_state(cfg, spec, params, jax.random.key(cfg.seed)),
-        args.rounds, unpack=True)
+    t_async = _time_rounds(async_round, astate(), args.rounds, unpack=True)
+
+    # --- one-pass program A/B: fused vs the pre-fusion multi-pass round,
+    # and the bf16 fleet-storage mode (DESIGN.md §3 dtype policy) ---
+    spec16 = flatten.spec_of(params, storage_dtype="bfloat16")
+    async_unfused = make_async_global_round(cfg, hp, het_async, fed, spec,
+                                            acfg, fused=False)
+    async_bf16 = make_async_global_round(cfg, hp, het_async, fed, spec16,
+                                         acfg)
+    t_async_unfused = _time_rounds(async_unfused, astate(), args.rounds,
+                                   unpack=True)
+    t_async_bf16 = _time_rounds(async_bf16, astate(spec16), args.rounds,
+                                unpack=True)
+
+    # bytes-per-round of the compiled programs (per-device HBM traffic,
+    # trip counts applied) + achieved GB/s at the measured latency
+    from repro.launch.hlo_analysis import round_cost
+    costs = {
+        "flat": round_cost(flat_round, fstate(), latency_s=t_flat),
+        "async": round_cost(async_round, astate(), latency_s=t_async),
+        "async_unfused_f32": round_cost(async_unfused, astate(),
+                                        latency_s=t_async_unfused),
+        "async_fused_bf16": round_cost(async_bf16, astate(spec16),
+                                       latency_s=t_async_bf16),
+    }
+    bytes_ratio = (costs["async_unfused_f32"]["bytes"]
+                   / max(costs["async_fused_bf16"]["bytes"], 1.0))
+
+    # --- the tick's RSU layer in isolation (the part the fusion targets;
+    # the full round above is dominated by the training scan at this tiny
+    # model/steps ratio): today's multi-pass fp32 program — two
+    # scatter-accumulates, numerator add, buffer_absorb re-read — vs the
+    # fused one-pass aggregate-and-absorb on bf16 fleet buffers ---
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.aggregation import buffer_absorb
+    from repro.kernels import ops
+    rng_t = np.random.default_rng(0)
+    A, R, N = cfg.n_agents, cfg.n_rsus, spec.n
+    assign = jnp.asarray(fed.rsu_assign)
+
+    def tick_args(dtype):
+        return (jnp.asarray(rng_t.standard_normal((A, N)), dtype),
+                jnp.asarray(rng_t.standard_normal((A, N)), dtype),
+                jnp.asarray(rng_t.uniform(0, 2, A), jnp.float32),
+                jnp.asarray(rng_t.uniform(0, 2, A), jnp.float32),
+                jnp.asarray(rng_t.standard_normal((R, N)), dtype),
+                jnp.asarray(rng_t.uniform(0, 5, R), jnp.float32))
+
+    @jax.jit
+    def tick_unfused(agent_flat, pend_x, w_imm, w_due, rsu, rsu_mass):
+        num_i, m_i = ops.masked_scatter_accumulate(agent_flat, w_imm,
+                                                   assign, R)
+        num_d, m_d = ops.masked_scatter_accumulate(pend_x, w_due, assign, R)
+        return buffer_absorb(rsu, rsu_mass, num_i + num_d, m_i + m_d,
+                             keep=args.buffer_keep)
+
+    @jax.jit
+    def tick_fused(agent_flat, pend_x, w_imm, w_due, rsu, rsu_mass):
+        out, total, _ = ops.agg_absorb(
+            ((agent_flat, w_imm), (pend_x, w_due)), assign, R, rsu,
+            rsu_mass, keep=args.buffer_keep)
+        return out, total
+
+    tick_costs = {
+        "unfused_f32": round_cost(tick_unfused, *tick_args(jnp.float32)),
+        "fused_bf16": round_cost(tick_fused, *tick_args(jnp.bfloat16)),
+    }
+    tick_ratio = (tick_costs["unfused_f32"]["bytes"]
+                  / max(tick_costs["fused_bf16"]["bytes"], 1.0))
 
     # --- 90%-disconnect convergence record: sync barrier vs late merges ---
     _, h_sync = run_simulation(cfg, hp, het_sync, fed, params,
@@ -140,8 +215,17 @@ def run_cell(args) -> dict:
         "max_delay": args.max_delay,
         "staleness_decay": args.staleness_decay,
         "buffer_keep": args.buffer_keep,
-        "round_s": {"flat": t_flat, "async": t_async},
+        "round_s": {"flat": t_flat, "async": t_async,
+                    "async_unfused_f32": t_async_unfused,
+                    "async_fused_bf16": t_async_bf16},
         "async_vs_flat": t_flat / max(t_async, 1e-12),
+        "bytes_per_round": {k: c["bytes"] for k, c in costs.items()},
+        "collective_bytes_per_round":
+            {k: c["collective_bytes"] for k, c in costs.items()},
+        "hbm_gbps": {k: c["hbm_gbps"] for k, c in costs.items()},
+        "fused_bf16_vs_unfused_f32_bytes": bytes_ratio,
+        "tick_bytes": {k: c["bytes"] for k, c in tick_costs.items()},
+        "tick_fused_bf16_vs_unfused_f32_bytes": tick_ratio,
         "convergence": {
             "round": [int(r) for r in h_sync["round"]],
             "acc_sync": [float(a) for a in h_sync["acc"]],
@@ -159,6 +243,18 @@ def _csv_rows(rec: dict) -> List[str]:
     rows = [csv_row(f"async_round/{eng}", s * 1e6,
                     f"A{rec['n_agents']}xR{rec['n_rsus']}")
             for eng, s in rec["round_s"].items()]
+    rows += [csv_row(f"async_round/bytes/{eng}", b / 1e6,
+                     f"MB/round gbps={rec['hbm_gbps'][eng]:.2f}")
+             for eng, b in rec["bytes_per_round"].items()]
+    rows.append(csv_row(
+        "async_round/fused_bf16_vs_unfused_f32_bytes",
+        rec["fused_bf16_vs_unfused_f32_bytes"] * 1e6,
+        f"{rec['fused_bf16_vs_unfused_f32_bytes']:.2f}x fewer HBM bytes"))
+    rows.append(csv_row(
+        "async_round/tick_fused_bf16_vs_unfused_f32_bytes",
+        rec["tick_fused_bf16_vs_unfused_f32_bytes"] * 1e6,
+        f"{rec['tick_fused_bf16_vs_unfused_f32_bytes']:.2f}x fewer "
+        f"HBM bytes (tick RSU layer)"))
     conv = rec["convergence"]
     rows.append(csv_row("async_round/conv_final_sync",
                         conv["acc_sync"][-1] * 1e6,

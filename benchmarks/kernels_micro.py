@@ -67,6 +67,43 @@ def run() -> List[str]:
     rows.append(csv_row(f"kernels/masked_hier_agg/A{A}xD{D}", tr * 1e6,
                         f"interp_us={tk*1e6:.0f} maxerr={err:.2e}"))
 
+    # --- fused aggregate-and-blend (one-pass rounds, DESIGN.md §3) --------
+    from repro.launch.hlo_analysis import round_cost
+    prev = jax.random.normal(jax.random.key(7), (R, D), jnp.float32)
+    kern = jax.jit(lambda s, w, m, p: mha.agg_blend(s, w, m, assign, R, p,
+                                                    interpret=interp))
+    orac = jax.jit(lambda s, w, m, p: ref.agg_blend_ref(s, w, m, assign,
+                                                        R, p))
+    tk, yk = _timeit(kern, stacked, weights, mask, prev)
+    tr, yr = _timeit(orac, stacked, weights, mask, prev)
+    err = float(jnp.max(jnp.abs(yk[0] - yr[0])))
+    mb = round_cost(orac, stacked, weights, mask, prev)["bytes"] / 1e6
+    rows.append(csv_row(f"kernels/agg_blend/A{A}xD{D}", tr * 1e6,
+                        f"interp_us={tk*1e6:.0f} maxerr={err:.2e} "
+                        f"mb={mb:.1f}"))
+
+    # --- fused scatter-absorb: the semi-async tick's RSU layer ------------
+    ks2 = jax.random.split(jax.random.key(9), 3)
+    pend = jax.random.normal(ks2[0], (A, D), jnp.float32)
+    w_due = jax.random.uniform(ks2[1], (A,), jnp.float32) \
+        * (jax.random.uniform(ks2[2], (A,)) < 0.4)
+    bmass = jnp.abs(weights[:R]) * 3.0
+    w_imm = weights * mask
+    # operands passed as jit ARGUMENTS (not closed-over constants) so the
+    # compiled program matches what the engines run — nothing folds away
+    kern = jax.jit(lambda s, wi, p, wd, pr, bm: mha.agg_absorb(
+        ((s, wi), (p, wd)), assign, R, pr, bm, keep=0.5, interpret=interp))
+    orac = jax.jit(lambda s, wi, p, wd, pr, bm: ref.agg_absorb_ref(
+        ((s, wi), (p, wd)), assign, R, pr, bm, keep=0.5))
+    tk, yk = _timeit(kern, stacked, w_imm, pend, w_due, prev, bmass)
+    tr, yr = _timeit(orac, stacked, w_imm, pend, w_due, prev, bmass)
+    err = float(jnp.max(jnp.abs(yk[0] - yr[0])))
+    mb = round_cost(orac, stacked, w_imm, pend, w_due, prev,
+                    bmass)["bytes"] / 1e6
+    rows.append(csv_row(f"kernels/agg_absorb/A{A}x2xD{D}", tr * 1e6,
+                        f"interp_us={tk*1e6:.0f} maxerr={err:.2e} "
+                        f"mb={mb:.1f}"))
+
     # --- flash_attention: chunked online-softmax prefill -------------------
     B, H, S, P = 1, 4, 512, 64
     ks = jax.random.split(key, 3)

@@ -12,11 +12,15 @@ Prints ``name,us_per_call,derived`` CSV rows for:
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline]
                                                 [--json results/bench/bench.json]
+                                                [--summary BENCH_PR4.json]
 Env:    REPRO_BENCH_FULL=1 for the paper-scale (100 agents) runs.
 
 ``--json`` additionally writes every row (and any suite failures) to one
 JSON record — the artifact CI uploads per PR so the perf trajectory is
-tracked over time.
+tracked over time.  ``--summary`` distills the per-suite records under
+``results/bench/`` into one top-level perf summary (engine round
+latencies, bytes/round, achieved HBM GB/s, and the fused+bf16 byte
+reduction) so the trajectory is legible at a glance per PR.
 """
 from __future__ import annotations
 
@@ -85,13 +89,59 @@ SUITES = {
 }
 
 
+def write_summary(path: Path, bench_dir: Path, since: float) -> None:
+    """Distill results/bench/*.json into the top-level perf summary
+    (engine round latency, bytes/round, GB/s — the PR perf trajectory).
+
+    Only records (re)written by THIS invocation (mtime >= ``since``) are
+    merged — stale records from earlier runs or different configs must
+    not masquerade as current numbers."""
+    summary = {"latency_s": {}, "bytes_per_round": {}, "hbm_gbps": {}}
+
+    def merge(rec: dict, prefix: str):
+        for k, v in rec.get("round_s", {}).items():
+            summary["latency_s"][f"{prefix}/{k}"] = v
+        for k, v in rec.get("bytes_per_round", {}).items():
+            summary["bytes_per_round"][f"{prefix}/{k}"] = v
+        for k, v in rec.get("hbm_gbps", {}).items():
+            summary["hbm_gbps"][f"{prefix}/{k}"] = v
+
+    for f in sorted(bench_dir.glob("*.json")):
+        try:
+            if f.stat().st_mtime < since:
+                continue
+            rec = json.loads(f.read_text())
+        except (json.JSONDecodeError, OSError):
+            continue
+        name = rec.get("bench")
+        if name == "async_round":
+            merge(rec, "async_round")
+            summary["fused_bf16_vs_unfused_f32_bytes"] = \
+                rec.get("fused_bf16_vs_unfused_f32_bytes")
+            summary["tick_fused_bf16_vs_unfused_f32_bytes"] = \
+                rec.get("tick_fused_bf16_vs_unfused_f32_bytes")
+        elif name == "topology_round":
+            merge(rec, f"topology_round/d{rec.get('n_devices')}")
+            summary["flat_fused_vs_unfused_latency"] = \
+                rec.get("flat_fused_vs_unfused")
+        elif name == "sharded_round":
+            merge(rec, f"sharded_round/d{rec.get('n_devices')}")
+    path.write_text(json.dumps(summary, indent=1))
+    print(f"[summary] {path}", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SUITES))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + failures to one JSON record")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="write a top-level perf summary (e.g. "
+                         "BENCH_PR4.json) distilled from the bench "
+                         "records THIS run produced")
     args = ap.parse_args()
+    t_start = time.time()
     names = args.only.split(",") if args.only else list(SUITES)
 
     print("name,us_per_call,derived")
@@ -117,6 +167,12 @@ def main() -> None:
             {"suites": names, "rows": all_rows, "failures": errors},
             indent=1))
         print(f"[json] {path}", file=sys.stderr)
+    if args.summary:
+        import os
+        bench_dir = Path(os.environ.get("REPRO_RESULTS",
+                                        "results")) / "bench"
+        if bench_dir.exists():
+            write_summary(Path(args.summary), bench_dir, t_start)
     if errors:
         raise SystemExit(f"{len(errors)} benchmark suites failed")
 

@@ -94,19 +94,59 @@ def run_cell(args) -> dict:
     def key():
         return jax.random.key(cfg.seed)
 
-    timings = {}
+    from repro.fedsim.simulator import make_flat_global_round
+    from repro.launch.hlo_analysis import round_cost
+
+    timings, costs = {}, {}
     with mesh:
         for mode, rsu_sharded in (("replicated", False),
                                   ("rsu_sharded", True)):
             topo = resolve_topology(cfg, fed, mesh,
                                     rsu_sharded=rsu_sharded)
             rf = make_sharded_global_round(cfg, hp, het, fed, spec, topo)
-            state = init_flat_state(cfg, spec, params, key())
+
+            def state():
+                s = init_flat_state(cfg, spec, params, key())
+                if topo.rsu_sharded:
+                    s = s._replace(
+                        agent_flat=topo.permute_agents(s.agent_flat))
+                return s
+
             if topo.rsu_sharded:
-                state = state._replace(
-                    agent_flat=topo.permute_agents(state.agent_flat))
                 rsu_per_pod = topo.rsu_per_pod      # as actually executed
-            timings[mode] = _time_rounds(rf, state, args.rounds)
+            timings[mode] = _time_rounds(rf, state(), args.rounds)
+            costs[mode] = round_cost(rf, state(), latency_s=timings[mode])
+
+    # fused vs un-fused one-pass round (DESIGN.md §3) on this cell's flat
+    # engine — the A/B the CI bench-smoke asserts on (the fused program
+    # must not be slower; off-TPU both lower to the same XLA ops, so this
+    # guards against regressions rather than measuring a kernel win).
+    # Host-CPU wall time drifts by tens of percent over a cell, so the
+    # variants are timed in INTERLEAVED batches and each takes its best
+    # batch — per-variant drift cancels instead of biasing whichever ran
+    # second.
+    ab = {}
+    for mode, fused in (("flat_fused", True), ("flat_unfused", False)):
+        rf = make_flat_global_round(cfg, hp, het, fed, spec, fused=fused)
+        state = init_flat_state(cfg, spec, params, key())
+        state = rf(rf(state))                    # compile + warmup
+        ab[mode] = {"rf": rf, "state": state, "best": float("inf")}
+    batch = max(args.rounds, 4)
+    for _ in range(5):
+        for mode in ab:
+            v = ab[mode]
+            jax.block_until_ready(v["state"])
+            t0 = time.perf_counter()
+            for _ in range(batch):
+                v["state"] = v["rf"](v["state"])
+            jax.block_until_ready(v["state"])
+            v["best"] = min(v["best"],
+                            (time.perf_counter() - t0) / batch)
+    for mode, fused in (("flat_fused", True), ("flat_unfused", False)):
+        timings[mode] = ab[mode]["best"]
+        costs[mode] = round_cost(
+            ab[mode]["rf"], init_flat_state(cfg, spec, params, key()),
+            latency_s=timings[mode])
 
     return {
         "bench": "topology_round",
@@ -118,8 +158,14 @@ def run_cell(args) -> dict:
         "lar": args.lar,
         "n_params": spec.n,
         "round_s": timings,
+        "bytes_per_round": {m: c["bytes"] for m, c in costs.items()},
+        "collective_bytes_per_round":
+            {m: c["collective_bytes"] for m, c in costs.items()},
+        "hbm_gbps": {m: c["hbm_gbps"] for m, c in costs.items()},
         "rsu_sharded_vs_replicated":
             timings["replicated"] / max(timings["rsu_sharded"], 1e-12),
+        "flat_fused_vs_unfused":
+            timings["flat_unfused"] / max(timings["flat_fused"], 1e-12),
     }
 
 
@@ -129,11 +175,18 @@ def _csv_rows(rec: dict) -> List[str]:
     rows = [csv_row(f"topology_round/{mode}/d{d}", s * 1e6,
                     f"A{rec['n_agents']}xR{rec['n_rsus']}")
             for mode, s in rec["round_s"].items()]
+    rows += [csv_row(f"topology_round/bytes/{mode}/d{d}", b / 1e6,
+                     f"MB/round gbps={rec['hbm_gbps'][mode]:.2f}")
+             for mode, b in rec["bytes_per_round"].items()]
     rows.append(csv_row(
         f"topology_round/rsu_sharded_vs_replicated/d{d}",
         rec["round_s"]["rsu_sharded"] * 1e6,
         f"speedup={rec['rsu_sharded_vs_replicated']:.2f}x"
         f"@R{rec['n_rsus']}"))
+    rows.append(csv_row(
+        f"topology_round/flat_fused_vs_unfused/d{d}",
+        rec["round_s"]["flat_fused"] * 1e6,
+        f"speedup={rec['flat_fused_vs_unfused']:.2f}x"))
     return rows
 
 

@@ -49,11 +49,18 @@ def save(directory: str | Path, step: int, tree: PyTree) -> Path:
     arrays = {f"leaf_{i}": _to_storable(np.asarray(l))
               for i, l in enumerate(leaves)}
     np.savez(tmp / "arrays.npz", **arrays)
+    try:
+        structure = jax.tree_util.tree_structure(
+            tree).serialize_using_proto().hex()
+    except ValueError:
+        # user-defined pytree nodes (e.g. ConnState) cannot be
+        # proto-serialized — restore then needs ``like=``
+        structure = None
     manifest = {
         "step": step,
         "n_leaves": len(leaves),
         "treedef": str(treedef),
-        "structure": jax.tree_util.tree_structure(tree).serialize_using_proto().hex(),
+        "structure": structure,
         "dtypes": [str(np.asarray(l).dtype) for l in leaves],
         "shapes": [list(np.asarray(l).shape) for l in leaves],
     }
@@ -88,7 +95,11 @@ def restore(directory: str | Path, step: Optional[int] = None,
                   for i, dt in enumerate(manifest["dtypes"])]
     if like is not None:
         treedef = jax.tree_util.tree_structure(like)
-    else:
+    elif manifest.get("structure"):
         treedef = jax.tree_util.PyTreeDef.deserialize_using_proto(
             jax.tree_util.default_registry, bytes.fromhex(manifest["structure"]))
+    else:
+        raise ValueError(
+            f"checkpoint {path} holds user-defined pytree nodes; pass "
+            f"``like=`` with a matching template to restore")
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -126,6 +126,23 @@ def scatter_accumulate(stacked: jax.Array, weights: jax.Array,
     return num, mass
 
 
+def normalize_blend(num: jax.Array, mass: jax.Array,
+                    prev: jax.Array) -> jax.Array:
+    """Post-reduction half of the fused blend: normalize accumulated
+    numerators by their mass and keep ``prev`` rows where the mass is zero
+    (out dtype follows ``prev``).  The sharded engines run this AFTER the
+    cross-shard psum — the shared algebra the one-pass kernels
+    (``kernels/ops.agg_blend``) fold into their grid on a single device.
+
+        out[r] = where(mass[r] > 0, num[r] / mass[r], prev[r])
+    """
+    safe = jnp.where(mass > 0, mass, 1.0)[:, None]
+    out = jnp.where((mass > 0)[:, None],
+                    num.astype(jnp.float32) / safe,
+                    prev.astype(jnp.float32))
+    return out.astype(prev.dtype)
+
+
 def buffer_absorb(buf: jax.Array, buf_mass: jax.Array, num: jax.Array,
                   new_mass: jax.Array, *, keep=0.0,
                   ) -> Tuple[jax.Array, jax.Array]:

@@ -13,6 +13,15 @@ raveled gradient directly.
 A ``FlatSpec`` is static metadata (treedef + leaf shapes/dtypes/offsets)
 derived once per simulation from the parameter template; it never crosses a
 jit boundary as a traced value.
+
+Dtype policy (DESIGN.md §3): the spec carries a ``storage_dtype`` knob for
+the FLEET buffers — ``bfloat16`` storage halves the HBM bytes (and any
+collective bytes) of the dominant (A, N)/(R, N) traffic and doubles the
+agent count that fits a device.  ``ravel``/``unravel`` stay fp32 masters
+(the cloud buffer and all eval/checkpoint boundaries), kernels accumulate
+fp32 regardless of storage, and ``to_storage`` is the single cast point
+engines use when writing into fleet buffers.  The default keeps everything
+fp32 — bit-compatible with the pre-knob behavior.
 """
 from __future__ import annotations
 
@@ -27,6 +36,33 @@ PyTree = Any
 
 BUFFER_DTYPE = jnp.float32
 
+# accepted --fleet-dtype spellings -> storage dtype
+STORAGE_DTYPES = {
+    "float32": jnp.float32, "f32": jnp.float32, "fp32": jnp.float32,
+    "bfloat16": jnp.bfloat16, "bf16": jnp.bfloat16,
+}
+
+
+def resolve_storage_dtype(name) -> Any:
+    """Fleet-buffer storage dtype from a CLI/config spelling (or a dtype).
+
+    Only the dtypes the policy covers (fp32, bf16) are admitted — dtype
+    OBJECTS are held to the same allowlist as strings, so an fp16 fleet
+    (whose ±65k range can overflow weighted numerators) fails at
+    configuration time rather than producing inf buffers mid-run."""
+    if name is None:
+        return jnp.dtype(BUFFER_DTYPE)
+    if isinstance(name, str):
+        if name not in STORAGE_DTYPES:
+            raise ValueError(f"unknown fleet dtype {name!r} "
+                             f"(want one of {sorted(STORAGE_DTYPES)})")
+        return jnp.dtype(STORAGE_DTYPES[name])
+    dt = jnp.dtype(name)
+    if dt not in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16)):
+        raise ValueError(f"unsupported fleet dtype {dt} "
+                         f"(the dtype policy covers float32 | bfloat16)")
+    return dt
+
 
 @dataclasses.dataclass(frozen=True)
 class FlatSpec:
@@ -38,6 +74,12 @@ class FlatSpec:
     offsets: Tuple[int, ...]
     sizes: Tuple[int, ...]
     n: int                       # total flat length Σ sizes
+    storage_dtype: Any = BUFFER_DTYPE   # fleet-buffer dtype (DESIGN.md §3)
+
+    def to_storage(self, x: jax.Array) -> jax.Array:
+        """Cast into the fleet-buffer storage dtype (the ONE cast point for
+        writes into (A, N)/(R, N) buffers; no-op under the fp32 default)."""
+        return x.astype(self.storage_dtype)
 
     # -- single model: (N,) ------------------------------------------------
     def ravel(self, tree: PyTree) -> jax.Array:
@@ -68,7 +110,7 @@ class FlatSpec:
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
 
-def spec_of(tree: PyTree) -> FlatSpec:
+def spec_of(tree: PyTree, *, storage_dtype=BUFFER_DTYPE) -> FlatSpec:
     """Build the ravel plan from a parameter template (arrays or tracers —
     only static shape/dtype metadata is read)."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -77,10 +119,12 @@ def spec_of(tree: PyTree) -> FlatSpec:
     sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
     offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
     return FlatSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
-                    offsets=offsets, sizes=sizes, n=int(sum(sizes)))
+                    offsets=offsets, sizes=sizes, n=int(sum(sizes)),
+                    storage_dtype=resolve_storage_dtype(storage_dtype))
 
 
-def spec_of_stacked(stacked: PyTree) -> FlatSpec:
+def spec_of_stacked(stacked: PyTree, *,
+                    storage_dtype=BUFFER_DTYPE) -> FlatSpec:
     """Ravel plan from a fleet-stacked template (leading axis dropped)."""
     leaves, treedef = jax.tree_util.tree_flatten(stacked)
     shapes = tuple(tuple(l.shape[1:]) for l in leaves)
@@ -88,4 +132,5 @@ def spec_of_stacked(stacked: PyTree) -> FlatSpec:
     sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
     offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
     return FlatSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
-                    offsets=offsets, sizes=sizes, n=int(sum(sizes)))
+                    offsets=offsets, sizes=sizes, n=int(sum(sizes)),
+                    storage_dtype=resolve_storage_dtype(storage_dtype))

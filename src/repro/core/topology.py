@@ -251,17 +251,25 @@ class HierarchyTopology:
         agent axis sits after ``n_leading`` replicated axes."""
         return P(*([None] * n_leading), self.shard_axes)
 
-    def cloud_psum_mean(self, rsu_mass, rsu_flat, fallback):
+    def cloud_psum_mean(self, rsu_mass, rsu_flat, fallback, *,
+                        reduce_dtype=None):
         """Mass-weighted cloud mean of this shard's RSU block — in
         rsu_sharded mode the ONE cross-pod collective of a round
         (DESIGN.md §4).  rsu_mass: (R_local,); rsu_flat: (R_local, N);
-        returns (N,), ``fallback`` where the global mass is zero."""
+        returns (N,) fp32, ``fallback`` where the global mass is zero.
+
+        ``reduce_dtype`` (the fleet storage dtype, DESIGN.md §3) casts the
+        (N,) partial sum before the cross-pod psum — bf16 halves the DCI
+        bytes of the round's one expensive collective; None/fp32 keeps the
+        exact reduction."""
         import jax
         import jax.numpy as jnp
-        part = rsu_mass @ rsu_flat
+        part = rsu_mass @ rsu_flat.astype(jnp.float32)
         pmass = jnp.sum(rsu_mass)
         if self.rsu_sharded and self.pod_axis is not None:
-            part = jax.lax.psum(part, self.pod_axis)
+            if reduce_dtype is not None:
+                part = part.astype(reduce_dtype)
+            part = jax.lax.psum(part, self.pod_axis).astype(jnp.float32)
             pmass = jax.lax.psum(pmass, self.pod_axis)
         return jnp.where(pmass > 0,
                          part / jnp.where(pmass > 0, pmass, 1.0), fallback)

@@ -140,11 +140,15 @@ class AsyncConfig:
 
 
 class AsyncSimState(NamedTuple):
-    """Flat-buffer fleet state plus the in-flight (pending) buffers."""
-    agent_flat: jax.Array   # (A, N) latest local model per agent
-    rsu_flat: jax.Array     # (R, N) staleness-buffer models
+    """Flat-buffer fleet state plus the in-flight (pending) buffers.
+
+    The (A, N)/(R, N) fleet buffers (``agent_flat``/``rsu_flat``/
+    ``pending_x``) live in the spec's storage dtype (DESIGN.md §3 dtype
+    policy); ``cloud_flat`` is always the fp32 master."""
+    agent_flat: jax.Array   # (A, N) latest local model per agent (storage)
+    rsu_flat: jax.Array     # (R, N) staleness-buffer models (storage)
     rsu_mass: jax.Array     # (R,)   running absorbed cohort mass M
-    cloud_flat: jax.Array   # (N,)
+    cloud_flat: jax.Array   # (N,)   fp32 master
     pending_x: jax.Array    # (A, N) in-flight update (one per busy agent)
     pending_w: jax.Array    # (A,)   its decayed delivery weight n·m·s(d)
     pending_t: jax.Array    # (A,)   int32 ticks until delivery (0 = none)
@@ -158,13 +162,14 @@ class AsyncSimState(NamedTuple):
 def init_async_state(cfg: SimConfig, spec: flatten.FlatSpec,
                      init_params: PyTree, key) -> AsyncSimState:
     vec = spec.ravel(init_params)
+    sv = spec.to_storage(vec)
     a, n = cfg.n_agents, spec.n
     return AsyncSimState(
-        agent_flat=jnp.broadcast_to(vec, (a, n)),
-        rsu_flat=jnp.broadcast_to(vec, (cfg.n_rsus, n)),
+        agent_flat=jnp.broadcast_to(sv, (a, n)),
+        rsu_flat=jnp.broadcast_to(sv, (cfg.n_rsus, n)),
         rsu_mass=jnp.zeros((cfg.n_rsus,), jnp.float32),
         cloud_flat=vec,
-        pending_x=jnp.zeros((a, n), jnp.float32),
+        pending_x=jnp.zeros((a, n), spec.storage_dtype),
         pending_w=jnp.zeros((a,), jnp.float32),
         pending_t=jnp.zeros((a,), jnp.int32),
         conn=init_conn_state(a),
@@ -181,9 +186,17 @@ def pending_mass(state: AsyncSimState) -> jax.Array:
 def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
                            het: HeterogeneityModel, fed: FederatedData,
                            spec: flatten.FlatSpec, acfg: AsyncConfig,
-                           loss_fn: Callable = mlp.loss_fn):
+                           loss_fn: Callable = mlp.loss_fn, *,
+                           fused: bool = True):
     """The un-jitted semi-async global round:
-    AsyncSimState -> (AsyncSimState, metrics)."""
+    AsyncSimState -> (AsyncSimState, metrics).
+
+    ``fused=True`` (default) runs the tick's whole RSU layer — both
+    arrival scatter-accumulates, the numerator add and the
+    ``buffer_absorb`` merge — as ONE pass over the parameter axis
+    (``ops.agg_absorb``); ``fused=False`` keeps the multi-pass program for
+    A/B benchmarking (off-TPU both are the same XLA ops, fp32
+    bit-compatible)."""
     x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
         _fed_arrays(cfg, hp, fed)
     A, R, N = cfg.n_agents, cfg.n_rsus, spec.n
@@ -221,23 +234,31 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
         #    current RSU buffer model (busy agents keep their row).
         act = jnp.where(busy, 0, active_steps)
         w_start = jnp.take(rsu_flat, rsu_assign, axis=0)       # (A, N)
-        trained = train_agents(x_all, y_all, w_start, w_start,
-                               cloud_flat, act)
+        trained = spec.to_storage(
+            train_agents(x_all, y_all, w_start, w_start, cloud_flat, act))
         agent_flat = jnp.where(busy[:, None], agent_flat, trained)
 
-        # 4. arrivals: the zero-latency cohort (s(0) == 1) plus due
-        #    stragglers — two masked scatter-accumulates on (A, N).
+        # 4.+5. arrivals + staleness-buffer merge: the zero-latency cohort
+        #    (s(0) == 1) plus due stragglers, absorbed with running
+        #    cohort-mass accounting.  Fused: ONE pass over (A, N)/(R, N)
+        #    (ops.agg_absorb); unfused: two scatter-accumulates, an add
+        #    and the buffer_absorb re-read (the pre-fusion program).
         w_imm = (n_per_agent * maskf * free
                  * (delays == 0).astype(jnp.float32))          # (A,)
         w_due = jnp.where(due, pend_w, 0.0)
-        num_i, m_i = ops.masked_scatter_accumulate(
-            agent_flat, w_imm, rsu_assign, R)
-        num_d, m_d = ops.masked_scatter_accumulate(
-            pend_x, w_due, rsu_assign, R)
-
-        # 5. staleness-buffer merge with running cohort-mass accounting
-        rsu_flat, rsu_mass = buffer_absorb(
-            rsu_flat, rsu_mass, num_i + num_d, m_i + m_d, keep=keep)
+        m_i = jax.ops.segment_sum(w_imm, rsu_assign, num_segments=R)
+        m_d = jax.ops.segment_sum(w_due, rsu_assign, num_segments=R)
+        if fused:
+            rsu_flat, rsu_mass, _ = ops.agg_absorb(
+                ((agent_flat, w_imm), (pend_x, w_due)), rsu_assign, R,
+                rsu_flat, rsu_mass, keep=keep)
+        else:
+            num_i, _ = ops.masked_scatter_accumulate(
+                agent_flat, w_imm, rsu_assign, R)
+            num_d, _ = ops.masked_scatter_accumulate(
+                pend_x, w_due, rsu_assign, R)
+            rsu_flat, rsu_mass = buffer_absorb(
+                rsu_flat, rsu_mass, num_i + num_d, m_i + m_d, keep=keep)
         cloud_macc = cloud_macc + m_i + m_d
 
         # 6. enqueue new in-flight work (connected, trained, delayed);
@@ -257,8 +278,12 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
         if ce:
             def _fire(args):
                 rsu, macc, cloud = args
-                new_cloud = ops.cloud_agg(rsu, macc)
-                cloud = jnp.where(jnp.sum(macc) > 0, new_cloud, cloud)
+                if fused:
+                    cloud = ops.cloud_blend(rsu, macc, cloud)
+                else:
+                    new_cloud = ops.cloud_agg(rsu, macc)
+                    cloud = jnp.where(jnp.sum(macc) > 0,
+                                      new_cloud.astype(jnp.float32), cloud)
                 return cloud, jnp.zeros_like(macc)
 
             def _hold(args):
@@ -294,7 +319,8 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
             rsu0, rmass0, macc0 = (state.rsu_flat, state.rsu_mass,
                                    state.cloud_macc)
         else:
-            rsu0 = jnp.broadcast_to(state.cloud_flat, (R, N))
+            rsu0 = jnp.broadcast_to(spec.to_storage(state.cloud_flat),
+                                    (R, N))
             rmass0 = jnp.zeros((R,), jnp.float32)
             macc0 = jnp.zeros((R,), jnp.float32)
         carry = (rsu0, rmass0, state.cloud_flat,
@@ -307,9 +333,14 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
         if not ce:
             # per-round cadence: round-end cloud aggregation over the
             # not-yet-aggregated mass (exactly the sync Alg. 3 line 6).
-            new_cloud = ops.cloud_agg(rsu_flat, cloud_macc)
-            cloud_flat = jnp.where(jnp.sum(cloud_macc) > 0, new_cloud,
-                                   cloud_flat)
+            if fused:
+                cloud_flat = ops.cloud_blend(rsu_flat, cloud_macc,
+                                             cloud_flat)
+            else:
+                new_cloud = ops.cloud_agg(rsu_flat, cloud_macc)
+                cloud_flat = jnp.where(jnp.sum(cloud_macc) > 0,
+                                       new_cloud.astype(jnp.float32),
+                                       cloud_flat)
             cloud_macc = jnp.zeros((R,), jnp.float32)
 
         out = AsyncSimState(agent_flat=agent_flat, rsu_flat=rsu_flat,
@@ -328,15 +359,18 @@ def make_async_global_round(cfg: SimConfig, hp: H2FedParams,
                             het: HeterogeneityModel, fed: FederatedData,
                             spec: flatten.FlatSpec,
                             acfg: Optional[AsyncConfig] = None,
-                            loss_fn: Callable = mlp.loss_fn):
+                            loss_fn: Callable = mlp.loss_fn, *,
+                            fused: bool = True):
     """Build the jitted semi-async round: AsyncSimState -> (state, metrics).
 
     The input state's buffers are DONATED (updated in place at scale) —
     callers must rebind, ``state, m = round_fn(state)``, and never reuse the
-    consumed input.
+    consumed input.  ``fused=False`` keeps the multi-pass tick program for
+    A/B benchmarking (benchmarks/async_round).
     """
     acfg = (acfg or AsyncConfig()).validate()
-    body = _make_async_round_body(cfg, hp, het, fed, spec, acfg, loss_fn)
+    body = _make_async_round_body(cfg, hp, het, fed, spec, acfg, loss_fn,
+                                  fused=fused)
     return jax.jit(body, donate_argnums=(0,))
 
 
@@ -390,8 +424,21 @@ def make_sharded_async_global_round(cfg: SimConfig, hp: H2FedParams,
             loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
         in_axes=(0, 0, 0, 0, None, 0))
 
+    storage = spec.storage_dtype
+    # cross-pod (DCI) cloud reduction dtype: bf16 storage halves its bytes
+    cloud_reduce = None if storage == jnp.dtype(jnp.float32) else storage
+
     def _pod_sum(v):
         return jax.lax.psum(v, data_ax) if data_ax is not None else v
+
+    def _pod_sum_num(v):
+        """Within-pod psum of an (R_local, N) numerator — reduced in the
+        fleet storage dtype (halves ICI bytes at bf16; fp32 default is
+        exact/no-op), widened back to fp32 for the merge."""
+        if data_ax is None:
+            return v
+        return jax.lax.psum(v.astype(storage),
+                            data_ax).astype(jnp.float32)
 
     def round_fn(cloud_flat, agent_flat, rsu_flat0, rsu_mass0, pend_x,
                  pend_w, pend_t, cloud_macc, gtick0, x, y, n_data, assign,
@@ -403,7 +450,8 @@ def make_sharded_async_global_round(cfg: SimConfig, hp: H2FedParams,
             # twin's global_round for the rationale)
             rsu_flat, rsu_mass = rsu_flat0, rsu_mass0
         else:
-            rsu_flat = jnp.broadcast_to(cloud_flat, (R_loc, N))
+            rsu_flat = jnp.broadcast_to(cloud_flat.astype(storage),
+                                        (R_loc, N))
             rsu_mass = jnp.zeros((R_loc,), jnp.float32)
 
         def tick(carry, inp):
@@ -419,7 +467,8 @@ def make_sharded_async_global_round(cfg: SimConfig, hp: H2FedParams,
 
             act = jnp.where(busy, 0, act_steps)
             w_start = jnp.take(rsu_flat, assign, axis=0)
-            trained = train_agents(x, y, w_start, w_start, cloud_flat, act)
+            trained = train_agents(x, y, w_start, w_start, cloud_flat,
+                                   act).astype(storage)
             agent_flat = jnp.where(busy[:, None], agent_flat, trained)
 
             # block-local arrivals; psum over the data axis only
@@ -429,7 +478,7 @@ def make_sharded_async_global_round(cfg: SimConfig, hp: H2FedParams,
             num_i, m_i = ops.block_local_agg(agent_flat, w_imm, assign,
                                              R_loc)
             num_d, m_d = ops.block_local_agg(pend_x, w_due, assign, R_loc)
-            num = _pod_sum(num_i + num_d)
+            num = _pod_sum_num(num_i + num_d)
             m_new = _pod_sum(m_i + m_d)
             rsu_flat, rsu_mass = buffer_absorb(rsu_flat, rsu_mass, num,
                                                m_new, keep=keep_l)
@@ -450,7 +499,8 @@ def make_sharded_async_global_round(cfg: SimConfig, hp: H2FedParams,
                 # the tick clock is replicated)
                 def _fire(args):
                     rsu, macc, cloud = args
-                    cloud = topo.cloud_psum_mean(macc, rsu, cloud)
+                    cloud = topo.cloud_psum_mean(
+                        macc, rsu, cloud, reduce_dtype=cloud_reduce)
                     return cloud, jnp.zeros_like(macc)
 
                 def _hold(args):
@@ -485,7 +535,8 @@ def make_sharded_async_global_round(cfg: SimConfig, hp: H2FedParams,
             # per-round cadence: the round-end cloud aggregation is the
             # round's ONE cross-pod collective
             cloud_flat = topo.cloud_psum_mean(cloud_macc, rsu_flat,
-                                              cloud_flat)
+                                              cloud_flat,
+                                              reduce_dtype=cloud_reduce)
             cloud_macc = jnp.zeros_like(cloud_macc)
 
         return (cloud_flat, agent_flat, rsu_flat, rsu_mass,
@@ -553,6 +604,8 @@ def run_async_simulation(cfg: SimConfig, hp: H2FedParams,
                          x_test=None, y_test=None,
                          loss_fn: Callable = mlp.loss_fn,
                          eval_fn: Optional[Callable] = None,
+                         fleet_dtype=None,
+                         fused: bool = True,
                          ) -> Tuple[AsyncSimState, Dict[str, np.ndarray]]:
     """Run ``n_rounds`` semi-async global rounds; returns final state +
     history (accuracy curve plus per-round absorbed/pending mass so the
@@ -560,18 +613,22 @@ def run_async_simulation(cfg: SimConfig, hp: H2FedParams,
     dispatches here for ``engine="async"``.  Passing an ``rsu_sharded``
     ``HierarchyTopology`` runs the tick loop RSU-sharded over its mesh
     (the returned state is converted back to the original agent order).
+    ``fleet_dtype`` sets the (A, N)/(R, N) storage dtype (DESIGN.md §3);
+    ``fused=False`` keeps the multi-pass tick program (replicated engine
+    only) for A/B benchmarking.
     """
     hp.validate(), het.validate()
     acfg = (acfg or AsyncConfig()).validate()
     key = jax.random.key(cfg.seed)
-    spec = flatten.spec_of(init_params)
+    spec = flatten.spec_of(
+        init_params, storage_dtype=flatten.resolve_storage_dtype(fleet_dtype))
     state = init_async_state(cfg, spec, init_params, key)
     if topo is not None:
         round_fn = make_sharded_async_global_round(cfg, hp, het, fed, spec,
                                                    topo, acfg, loss_fn)
     else:
         round_fn = make_async_global_round(cfg, hp, het, fed, spec, acfg,
-                                           loss_fn)
+                                           loss_fn, fused=fused)
     if eval_fn is None and x_test is not None:
         x_test, y_test = jnp.asarray(x_test), jnp.asarray(y_test)
         eval_fn = jax.jit(lambda p: mlp.accuracy(p, x_test, y_test))

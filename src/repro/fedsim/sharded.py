@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import flatten
+from repro.core.aggregation import normalize_blend
 from repro.core.h2fed import H2FedParams
 from repro.core.heterogeneity import HeterogeneityModel
 from repro.core.topology import HierarchyTopology, make_fleet_mesh  # noqa: F401 — re-export
@@ -80,6 +81,20 @@ def _make_train_agents(cfg: SimConfig, hp: H2FedParams, spec, n_steps,
         lambda x, y, w0, wr, wc, act: _local_train_flat(
             loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
         in_axes=(0, 0, 0, 0, None, 0))
+
+
+def _make_psum_num(storage, ax):
+    """Cross-shard psum of an (R, N) numerator, reduced in the fleet
+    storage dtype (DESIGN.md §3: bf16 halves the collective bytes of the
+    RSU layer; the fp32 default is the exact reduction, a no-op cast)."""
+    exact = storage == jnp.dtype(jnp.float32)
+
+    def psum_num(v):
+        if exact:
+            return jax.lax.psum(v, ax)
+        return jax.lax.psum(v.astype(storage), ax).astype(jnp.float32)
+
+    return psum_num
 
 
 def _make_round_draws_scan(cfg: SimConfig, hp: H2FedParams,
@@ -125,28 +140,32 @@ def _make_replicated_round(cfg: SimConfig, hp: H2FedParams,
         _fed_arrays(cfg, hp, fed)
     R, N = cfg.n_rsus, spec.n
     ax = topo.shard_axes
+    storage = spec.storage_dtype
+    psum_num = _make_psum_num(storage, ax)
 
     train_agents = _make_train_agents(cfg, hp, spec, n_steps, loss_fn)
 
     def round_fn(cloud_flat, agent_flat, x, y, n_data, assign, masks, steps):
         """Shard-local view: leading agent axes are A_local-sized; cloud and
         RSU state replicated.  masks/steps: (LAR, A_local)."""
-        rsu_flat = jnp.broadcast_to(cloud_flat, (R, N))   # Alg. 2 l.2
+        rsu_flat = jnp.broadcast_to(cloud_flat.astype(storage),
+                                    (R, N))               # Alg. 2 l.2
 
         def local_round(carry, inp):
             rsu_flat, agent_flat = carry
             mask_l, act_l = inp
             w_start = jnp.take(rsu_flat, assign, axis=0)  # (A_local, N)
             agent_flat = train_agents(x, y, w_start, w_start,
-                                      cloud_flat, act_l)
+                                      cloud_flat, act_l).astype(storage)
 
-            # Alg. 2 l.8: per-shard partial aggregation matmul, ONE psum
+            # Alg. 2 l.8: per-shard partial aggregation matmul, ONE psum,
+            # then the shared normalize-and-blend algebra (the post-psum
+            # half of the fused single-device kernels, DESIGN.md §3)
             num, mass = ops.block_local_agg(
                 agent_flat, n_data * mask_l, assign, R)   # (R, N), (R,)
-            num = jax.lax.psum(num, ax)
+            num = psum_num(num)
             mass = jax.lax.psum(mass, ax)
-            new_rsu = num / jnp.where(mass > 0, mass, 1.0)[:, None]
-            rsu_flat = jnp.where((mass > 0)[:, None], new_rsu, rsu_flat)
+            rsu_flat = normalize_blend(num, mass, rsu_flat)
             return (rsu_flat, agent_flat), mass
 
         (rsu_flat, agent_flat), masses = jax.lax.scan(
@@ -154,7 +173,7 @@ def _make_replicated_round(cfg: SimConfig, hp: H2FedParams,
 
         # Alg. 3 l.6: replicated cloud math — no collective needed
         total = jnp.sum(masses, axis=0)                   # (R,)
-        num_c = total @ rsu_flat                          # (N,)
+        num_c = total @ rsu_flat.astype(jnp.float32)      # (N,)
         mass_c = jnp.sum(total)
         new_cloud = num_c / jnp.where(mass_c > 0, mass_c, 1.0)
         cloud_flat = jnp.where(mass_c > 0, new_cloud, cloud_flat)
@@ -201,6 +220,10 @@ def _make_rsu_sharded_round(cfg: SimConfig, hp: H2FedParams,
     local_assign = jnp.asarray(topo.local_assign)
     R_loc, N = topo.rsu_per_pod, spec.n
     data_ax = topo.data_shard_axes
+    storage = spec.storage_dtype
+    cloud_reduce = None if storage == jnp.dtype(jnp.float32) else storage
+    psum_num = (None if data_ax is None
+                else _make_psum_num(storage, data_ax))
 
     train_agents = _make_train_agents(cfg, hp, spec, n_steps, loss_fn)
 
@@ -208,24 +231,24 @@ def _make_rsu_sharded_round(cfg: SimConfig, hp: H2FedParams,
         """Shard-local view: this shard's agents all belong to this pod's
         RSU block; ``rsu_flat`` is the pod's (R_local, N) slice of the
         global buffer and ``assign`` holds pod-local RSU ids."""
-        rsu_flat = jnp.broadcast_to(cloud_flat, (R_loc, N))   # Alg. 2 l.2
+        rsu_flat = jnp.broadcast_to(cloud_flat.astype(storage),
+                                    (R_loc, N))           # Alg. 2 l.2
 
         def local_round(carry, inp):
             rsu_flat, agent_flat = carry
             mask_l, act_l = inp
             w_start = jnp.take(rsu_flat, assign, axis=0)  # (A_local, N)
             agent_flat = train_agents(x, y, w_start, w_start,
-                                      cloud_flat, act_l)
+                                      cloud_flat, act_l).astype(storage)
 
             # Alg. 2 l.8: block-local matmul; psum over the WITHIN-POD data
             # axis only — no cross-pod traffic in the RSU layer
             num, mass = ops.block_local_agg(
                 agent_flat, n_data * mask_l, assign, R_loc)
             if data_ax is not None:
-                num = jax.lax.psum(num, data_ax)
+                num = psum_num(num)
                 mass = jax.lax.psum(mass, data_ax)
-            new_rsu = num / jnp.where(mass > 0, mass, 1.0)[:, None]
-            rsu_flat = jnp.where((mass > 0)[:, None], new_rsu, rsu_flat)
+            rsu_flat = normalize_blend(num, mass, rsu_flat)
             return (rsu_flat, agent_flat), mass
 
         (rsu_flat, agent_flat), masses = jax.lax.scan(
@@ -234,7 +257,8 @@ def _make_rsu_sharded_round(cfg: SimConfig, hp: H2FedParams,
         # Alg. 3 l.6: the cloud layer is the ONE cross-pod collective —
         # mass-weighted partial sums reduced over the pod axis
         total = jnp.sum(masses, axis=0)                   # (R_local,)
-        cloud_flat = topo.cloud_psum_mean(total, rsu_flat, cloud_flat)
+        cloud_flat = topo.cloud_psum_mean(total, rsu_flat, cloud_flat,
+                                          reduce_dtype=cloud_reduce)
         return cloud_flat, rsu_flat, agent_flat
 
     smapped = shard_map(
@@ -270,15 +294,19 @@ def run_sharded_simulation(cfg: SimConfig, hp: H2FedParams,
                            mesh=None, rsu_sharded: bool = False,
                            x_test=None, y_test=None,
                            loss_fn: Callable = mlp.loss_fn,
+                           fleet_dtype=None,
                            ) -> Tuple[FlatSimState, Dict[str, np.ndarray]]:
     """Sharded twin of ``run_simulation``: same rounds, agents partitioned
     over the mesh; unravel happens only at the eval boundary.  The returned
     state is in the ORIGINAL agent order in both modes (the RSU-sharded
-    rounds run pod-block-permuted internally)."""
+    rounds run pod-block-permuted internally).  ``fleet_dtype`` sets the
+    fleet-buffer storage dtype — bf16 also halves the psum'd numerator /
+    cross-pod cloud collective bytes (DESIGN.md §3)."""
     hp.validate(), het.validate()
     mesh = mesh if mesh is not None else make_fleet_mesh()
     topo = resolve_topology(cfg, fed, mesh, rsu_sharded=rsu_sharded)
-    spec = flatten.spec_of(init_params)
+    spec = flatten.spec_of(
+        init_params, storage_dtype=flatten.resolve_storage_dtype(fleet_dtype))
     state = init_flat_state(cfg, spec, init_params, jax.random.key(cfg.seed))
     round_fn = make_sharded_global_round(cfg, hp, het, fed, spec, topo,
                                          loss_fn)

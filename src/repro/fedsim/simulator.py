@@ -81,10 +81,14 @@ class SimState(NamedTuple):
 
 
 class FlatSimState(NamedTuple):
-    """Flat-buffer state: the whole fleet as three contiguous fp32 buffers."""
-    agent_flat: jax.Array   # (A, N)
-    rsu_flat: jax.Array     # (R, N)
-    cloud_flat: jax.Array   # (N,)
+    """Flat-buffer state: the whole fleet as three contiguous buffers.
+
+    agent_flat/rsu_flat live in the spec's STORAGE dtype (fp32 default;
+    bf16 halves fleet HBM + collective bytes, DESIGN.md §3); cloud_flat is
+    always the fp32 master."""
+    agent_flat: jax.Array   # (A, N)  storage dtype
+    rsu_flat: jax.Array     # (R, N)  storage dtype
+    cloud_flat: jax.Array   # (N,)    fp32 master
     conn: ConnState
     rng: jax.Array
 
@@ -101,19 +105,21 @@ def init_state(cfg: SimConfig, init_params: PyTree, key) -> SimState:
 def init_flat_state(cfg: SimConfig, spec: flatten.FlatSpec,
                     init_params: PyTree, key) -> FlatSimState:
     vec = spec.ravel(init_params)
+    sv = spec.to_storage(vec)
     return FlatSimState(
-        agent_flat=jnp.broadcast_to(vec, (cfg.n_agents, spec.n)),
-        rsu_flat=jnp.broadcast_to(vec, (cfg.n_rsus, spec.n)),
+        agent_flat=jnp.broadcast_to(sv, (cfg.n_agents, spec.n)),
+        rsu_flat=jnp.broadcast_to(sv, (cfg.n_rsus, spec.n)),
         cloud_flat=vec,
         conn=init_conn_state(cfg.n_agents),
         rng=key)
 
 
 def to_flat_state(spec: flatten.FlatSpec, state: SimState) -> FlatSimState:
-    return FlatSimState(agent_flat=spec.ravel_stacked(state.agent_params),
-                        rsu_flat=spec.ravel_stacked(state.rsu_params),
-                        cloud_flat=spec.ravel(state.cloud_params),
-                        conn=state.conn, rng=state.rng)
+    return FlatSimState(
+        agent_flat=spec.to_storage(spec.ravel_stacked(state.agent_params)),
+        rsu_flat=spec.to_storage(spec.ravel_stacked(state.rsu_params)),
+        cloud_flat=spec.ravel(state.cloud_params),
+        conn=state.conn, rng=state.rng)
 
 
 def from_flat_state(spec: flatten.FlatSpec, state: FlatSimState) -> SimState:
@@ -178,9 +184,16 @@ def _local_train_flat(loss_fn: Callable, spec: flatten.FlatSpec, x, y,
                       active_steps: jax.Array, batch: int) -> jax.Array:
     """Flat-buffer twin of ``_local_train``: the whole model is one (N,)
     fp32 vector, so the dual-proximal update (Alg. 1, Eq. 6) is a single
-    fused expression — no per-leaf tree traffic in the inner loop."""
+    fused expression — no per-leaf tree traffic in the inner loop.
+
+    Compute is always fp32: storage-dtype (bf16) inputs are widened at
+    entry (a no-op under the fp32 default), so training precision is
+    independent of the fleet-buffer storage dtype; the caller casts the
+    returned fp32 vector back into storage when writing the buffer."""
 
     grad_fn = jax.grad(lambda wf, xb, yb: loss_fn(spec.unravel(wf), xb, yb))
+    w_rsu = w_rsu.astype(jnp.float32)
+    w_cloud = w_cloud.astype(jnp.float32)
 
     def body(w, step):
         xb, yb = agent_minibatch(x, y, step, batch)
@@ -190,7 +203,7 @@ def _local_train_flat(loss_fn: Callable, spec: flatten.FlatSpec, x, y,
                                 + hp.mu2 * (w - w_cloud))
         return w, None
 
-    w, _ = jax.lax.scan(body, w0, jnp.arange(n_steps))
+    w, _ = jax.lax.scan(body, w0.astype(jnp.float32), jnp.arange(n_steps))
     return w
 
 
@@ -207,13 +220,19 @@ def _fed_arrays(cfg: SimConfig, hp: H2FedParams, fed: FederatedData):
 def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
                           het: HeterogeneityModel, fed: FederatedData,
                           spec: flatten.FlatSpec,
-                          loss_fn: Callable = mlp.loss_fn):
+                          loss_fn: Callable = mlp.loss_fn, *,
+                          fused: bool = True):
     """The flat-buffer global round body: FlatSimState -> FlatSimState
     (un-jitted — callers compose and jit it).
 
-    Both aggregation layers are single Pallas matmuls on the (A, N) buffer
-    (``ops.masked_hier_agg`` / ``ops.cloud_agg``); nothing is unraveled
-    inside the round except the per-minibatch loss evaluation.
+    ``fused=True`` (default) runs the ONE-PASS round: both aggregation
+    layers go through the fused aggregate-and-blend entry points
+    (``ops.agg_blend`` / ``ops.cloud_blend``), so each (R, N) tile is read
+    once and written once — no fresh numerator re-read by a separate
+    mass-guard pass.  ``fused=False`` keeps the two-step program
+    (aggregation matmul, then the blend) for A/B benchmarking; off-TPU
+    both lower to the same XLA ops and are fp32 bit-compatible.  Fleet
+    buffers live in ``spec.storage_dtype``; the cloud stays fp32.
     """
     x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
         _fed_arrays(cfg, hp, fed)
@@ -226,7 +245,8 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
     def global_round(state: FlatSimState) -> FlatSimState:
         rng, k_rounds = jax.random.split(state.rng)
         # Alg. 2 line 2: RSUs replace w_k with the current cloud model
-        rsu_flat = jnp.broadcast_to(state.cloud_flat, (cfg.n_rsus, spec.n))
+        rsu_flat = jnp.broadcast_to(spec.to_storage(state.cloud_flat),
+                                    (cfg.n_rsus, spec.n))
         keys = jax.random.split(k_rounds, hp.lar)
 
         def local_round(carry, key):
@@ -236,14 +256,21 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
 
             # Alg. 2 l.5 / Alg. 1 l.1: every agent starts from its RSU row
             w_start = jnp.take(rsu_flat, rsu_assign, axis=0)     # (A, N)
-            agent_flat = train_agents(x_all, y_all, w_start, w_start,
-                                      state.cloud_flat, active_steps)
+            agent_flat = spec.to_storage(
+                train_agents(x_all, y_all, w_start, w_start,
+                             state.cloud_flat, active_steps))
 
-            # Alg. 2 line 8: one (R, A) @ (A, N) Pallas matmul
-            new_rsu, mass = ops.masked_hier_agg(
-                agent_flat, n_per_agent, mask.astype(jnp.float32),
-                rsu_assign, cfg.n_rsus)
-            rsu_flat = jnp.where((mass > 0)[:, None], new_rsu, rsu_flat)
+            # Alg. 2 line 8: one (R, A) @ (A, N) pass over the fleet
+            if fused:
+                rsu_flat, mass = ops.agg_blend(
+                    agent_flat, n_per_agent, mask.astype(jnp.float32),
+                    rsu_assign, cfg.n_rsus, rsu_flat)
+            else:
+                new_rsu, mass = ops.masked_hier_agg(
+                    agent_flat, n_per_agent, mask.astype(jnp.float32),
+                    rsu_assign, cfg.n_rsus)
+                rsu_flat = jnp.where((mass > 0)[:, None], new_rsu,
+                                     rsu_flat).astype(rsu_flat.dtype)
             return (rsu_flat, conn, agent_flat), mass
 
         (rsu_flat, conn, agent_flat), masses = jax.lax.scan(
@@ -252,9 +279,14 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
 
         # Alg. 3 line 6: cloud aggregation — the (1, R) @ (R, N) matmul
         total_mass = jnp.sum(masses, axis=0)                     # (R,)
-        new_cloud = ops.cloud_agg(rsu_flat, total_mass)
-        cloud_flat = jnp.where(jnp.sum(total_mass) > 0, new_cloud,
-                               state.cloud_flat)
+        if fused:
+            cloud_flat = ops.cloud_blend(rsu_flat, total_mass,
+                                         state.cloud_flat)
+        else:
+            new_cloud = ops.cloud_agg(rsu_flat, total_mass)
+            cloud_flat = jnp.where(jnp.sum(total_mass) > 0,
+                                   new_cloud.astype(jnp.float32),
+                                   state.cloud_flat)
         return FlatSimState(agent_flat=agent_flat, rsu_flat=rsu_flat,
                             cloud_flat=cloud_flat, conn=conn, rng=rng)
 
@@ -264,16 +296,19 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
 def make_flat_global_round(cfg: SimConfig, hp: H2FedParams,
                            het: HeterogeneityModel, fed: FederatedData,
                            spec: flatten.FlatSpec,
-                           loss_fn: Callable = mlp.loss_fn):
+                           loss_fn: Callable = mlp.loss_fn, *,
+                           fused: bool = True):
     """The flat-buffer global round: FlatSimState -> FlatSimState, jitted.
 
     The input state's buffers are DONATED: the (A, N)/(R, N)/(N,) update is
     in-place at scale (no copy of the fleet per round; verified via the
     dry-run HLO alias analysis, launch/hlo_analysis.donated_params).
     Callers must rebind — ``state = round_fn(state)`` — and never touch the
-    consumed input again.
+    consumed input again.  ``fused=False`` keeps the two-pass aggregation
+    program for A/B benchmarking (benchmarks/async_round, topology_round).
     """
-    return jax.jit(_make_flat_round_body(cfg, hp, het, fed, spec, loss_fn),
+    return jax.jit(_make_flat_round_body(cfg, hp, het, fed, spec, loss_fn,
+                                         fused=fused),
                    donate_argnums=(0,))
 
 
@@ -366,6 +401,8 @@ def run_simulation(cfg: SimConfig, hp: H2FedParams, het: HeterogeneityModel,
                    eval_fn: Optional[Callable] = None,
                    engine: str = "flat",
                    async_cfg=None,
+                   fleet_dtype=None,
+                   fused: bool = True,
                    ) -> Tuple[SimState, Dict[str, np.ndarray]]:
     """Run ``n_rounds`` global rounds; returns final state + history.
 
@@ -374,12 +411,18 @@ def run_simulation(cfg: SimConfig, hp: H2FedParams, het: HeterogeneityModel,
     per-round eval and for the returned final state.  ``engine="async"``
     dispatches to the semi-asynchronous engine (fedsim/async_engine,
     configured by ``async_cfg``) and returns its AsyncSimState.
+
+    ``fleet_dtype`` ("float32" default | "bfloat16") sets the fleet-buffer
+    storage dtype (flat/async engines; DESIGN.md §3 dtype policy);
+    ``fused=False`` keeps the two-pass aggregation program for A/B
+    benchmarking.
     """
     if engine == "async":
         from repro.fedsim import async_engine
         return async_engine.run_async_simulation(
             cfg, hp, het, fed, init_params, n_rounds, acfg=async_cfg,
-            x_test=x_test, y_test=y_test, loss_fn=loss_fn, eval_fn=eval_fn)
+            x_test=x_test, y_test=y_test, loss_fn=loss_fn, eval_fn=eval_fn,
+            fleet_dtype=fleet_dtype, fused=fused)
     hp.validate(), het.validate()
     key = jax.random.key(cfg.seed)
     if eval_fn is None and x_test is not None:
@@ -387,9 +430,12 @@ def run_simulation(cfg: SimConfig, hp: H2FedParams, het: HeterogeneityModel,
         eval_fn = jax.jit(lambda p: mlp.accuracy(p, x_test, y_test))
 
     if engine == "flat":
-        spec = flatten.spec_of(init_params)
+        spec = flatten.spec_of(
+            init_params,
+            storage_dtype=flatten.resolve_storage_dtype(fleet_dtype))
         state = init_flat_state(cfg, spec, init_params, key)
-        round_fn = make_flat_global_round(cfg, hp, het, fed, spec, loss_fn)
+        round_fn = make_flat_global_round(cfg, hp, het, fed, spec, loss_fn,
+                                          fused=fused)
         # eval_fn is called eagerly (unravel is cheap outside jit) so
         # user-supplied non-traceable metrics keep working; the built-in
         # accuracy eval_fn above is already jitted.

@@ -18,6 +18,27 @@ Tiling: A and R are small (≤ a few hundred agents), so W stays fully
 resident in VMEM; the grid walks column blocks of X (the parameter axis,
 potentially billions of elements) and each program computes a
 (R, block_n) = (R, A) @ (A, block_n) tile on the MXU.
+
+One-pass rounds (DESIGN.md §3): the engines' round programs are
+bandwidth-bound on streaming the (A, N)/(R, N) buffers through HBM, so the
+consumers of the aggregation output — the mass-guard blend
+(``jnp.where(mass>0, new, old)``), the cloud keep-guard, and the semi-async
+``buffer_absorb`` renormalizing merge — are folded INTO the grid here:
+``agg_blend`` / ``agg_absorb`` / ``cloud_blend`` read each N-tile once
+(inputs + previous buffer) and write it once, instead of materializing a
+fresh (R, N) numerator that a separate elementwise pass re-reads.  All
+three are one shared kernel, ``_fused_agg_blend``:
+
+    out[r, n] = where(guard[r],
+                      (retained[r]·buf[r, n] + Σ_i W_i[r, :] @ X_i[:, n])
+                        / safe[r],
+                      buf[r, n])
+
+with per-row coefficients prepared by the (cheap, O(R)/O(A)) host-side
+weighting algebra.  The synchronous blend is the ``retained=0, safe=1,
+W`` row-normalized case; the async absorb passes the unnormalized weight
+matrices of both arrival cohorts (fresh + due) so ONE grid pass replaces
+two scatter-accumulates, a numerator add and the buffer merge.
 """
 from __future__ import annotations
 
@@ -37,6 +58,22 @@ from repro.core.aggregation import (build_weight_matrix, cohort_mass,  # noqa: F
 LANE = 128
 
 
+def _tile_plan(n: int, block_n: int):
+    """Lane-aligned N-axis tiling: pad N up to the next LANE multiple and
+    clamp the tile to a LANE multiple that divides the padded width.  Every
+    tile is a full-lane tile (no degrade-to-tiny-tiles fallback for awkward
+    N) and the pad waste is bounded by one tile."""
+    lane_n = -(-n // LANE) * LANE
+    bn = max(min(block_n, lane_n) // LANE * LANE, LANE)
+    n_pad = -(-lane_n // bn) * bn
+    return n_pad, bn
+
+
+def _pad_cols(x: jax.Array, n_pad: int) -> jax.Array:
+    pad = n_pad - x.shape[1]
+    return jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+
+
 def _agg_kernel(w_ref, x_ref, o_ref):
     w = w_ref[...].astype(jnp.float32)            # (R, A)
     x = x_ref[...].astype(jnp.float32)            # (A, BN)
@@ -54,12 +91,8 @@ def weighted_agg_matmul(weight_matrix: jax.Array, stacked: jax.Array, *,
     R, A = weight_matrix.shape
     A2, N = stacked.shape
     assert A == A2, (A, A2)
-    pad_n = (-N) % min(block_n, max(N, LANE))
-    block_n = min(block_n, N + pad_n)
-    xs = jnp.pad(stacked, ((0, 0), (0, pad_n))) if pad_n else stacked
-    n_pad = xs.shape[1]
-    while n_pad % block_n:
-        block_n //= 2
+    n_pad, block_n = _tile_plan(N, block_n)
+    xs = _pad_cols(stacked, n_pad)
     grid = (n_pad // block_n,)
 
     out = pl.pallas_call(
@@ -72,7 +105,7 @@ def weighted_agg_matmul(weight_matrix: jax.Array, stacked: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((R, n_pad), stacked.dtype),
         interpret=interpret,
     )(weight_matrix, xs)
-    return out[:, :N] if pad_n else out
+    return out[:, :N] if n_pad != N else out
 
 
 def masked_hier_agg(stacked_flat: jax.Array, weights: jax.Array,
@@ -133,3 +166,131 @@ def cloud_agg(rsu_flat: jax.Array, rsu_weights: jax.Array, *,
     wn, _ = normalized_weights(rsu_weights)
     return weighted_agg_matmul(wn[None, :], rsu_flat,
                                interpret=interpret)[0]
+
+
+# --------------------------------------------------------------------------
+# fused aggregate-and-blend (the one-pass round entry points)
+# --------------------------------------------------------------------------
+
+def _make_fused_kernel(n_pairs: int):
+    """Kernel for ``_fused_agg_blend`` with ``n_pairs`` (W, X) inputs.
+
+    refs layout: coef (R, 3) [retained | safe | guard], then W_i (R, A_i) /
+    X_i (A_i, BN) interleaved, then buf (R, BN), then the output tile."""
+
+    def kernel(*refs):
+        coef = refs[0][...].astype(jnp.float32)            # (R, 3)
+        buf = refs[1 + 2 * n_pairs][...].astype(jnp.float32)
+        o_ref = refs[2 + 2 * n_pairs]
+        acc = coef[:, 0:1] * buf                           # retained·buf
+        for i in range(n_pairs):
+            w = refs[1 + 2 * i][...].astype(jnp.float32)   # (R, A_i)
+            x = refs[2 + 2 * i][...].astype(jnp.float32)   # (A_i, BN)
+            acc += jax.lax.dot_general(
+                w, x, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        merged = acc / coef[:, 1:2]                        # / safe
+        o_ref[...] = jnp.where(coef[:, 2:3] > 0, merged,
+                               buf).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _fused_agg_blend(coef: jax.Array, weight_mats, stackeds,
+                     buf: jax.Array, *, block_n: int = 2048,
+                     interpret: bool = False) -> jax.Array:
+    """One grid pass of ``out = where(guard, (retained·buf + Σ W_i@X_i)
+    / safe, buf)``: each N-tile of every input (and of the previous
+    buffer) is read once and the output tile written once.  coef: (R, 3)
+    rows of [retained, safe, guard]; out dtype == buf dtype."""
+    R, N = buf.shape
+    n_pad, block_n = _tile_plan(N, block_n)
+    kernel = _make_fused_kernel(len(weight_mats))
+
+    in_specs = [pl.BlockSpec((R, 3), lambda i: (0, 0))]    # coef resident
+    args = [coef]
+    for w, x in zip(weight_mats, stackeds):
+        a = w.shape[1]
+        assert x.shape == (a, N), (w.shape, x.shape, buf.shape)
+        in_specs.append(pl.BlockSpec((R, a), lambda i: (0, 0)))
+        in_specs.append(pl.BlockSpec((a, block_n), lambda i: (0, i)))
+        args += [w, _pad_cols(x, n_pad)]
+    in_specs.append(pl.BlockSpec((R, block_n), lambda i: (0, i)))
+    args.append(_pad_cols(buf, n_pad))
+
+    out = pl.pallas_call(
+        kernel, grid=(n_pad // block_n,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((R, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((R, n_pad), buf.dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:, :N] if n_pad != N else out
+
+
+def agg_blend(stacked_flat: jax.Array, weights: jax.Array, mask: jax.Array,
+              rsu_assign: jax.Array, n_rsus: int, prev: jax.Array, *,
+              interpret: bool = False):
+    """Fused ``masked_hier_agg`` + mass-guard blend (DESIGN.md §3):
+
+        out[r] = where(mass[r] > 0, W_norm[r] @ X, prev[r])
+
+    in ONE pass over the parameter axis.  Returns (rsu' (R, N) in
+    ``prev``'s dtype, mass (R,)).  Oracle: ``kernels/ref.agg_blend_ref``.
+    """
+    W = build_weight_matrix(weights, mask, rsu_assign, n_rsus)
+    mass = cohort_mass(weights, mask, rsu_assign, n_rsus)
+    coef = jnp.stack([jnp.zeros_like(mass), jnp.ones_like(mass),
+                      (mass > 0).astype(jnp.float32)], axis=1)
+    out = _fused_agg_blend(coef, (W,), (stacked_flat,), prev,
+                           interpret=interpret)
+    return out, mass
+
+
+def agg_absorb(arrivals, rsu_assign: jax.Array, n_rsus: int,
+               buf: jax.Array, buf_mass: jax.Array, *, keep=0.0,
+               interpret: bool = False):
+    """Fused multi-cohort scatter-accumulate + staleness-buffer merge
+    (DESIGN.md §6): for ``arrivals`` = sequence of (x (A, N), w (A,))
+    cohorts,
+
+        out[r] = (keep·M[r]·buf[r] + Σ_cohorts Σ_{a∈r} w_a·x_a)
+                   / (keep·M[r] + m_new[r])        [buf[r] if zero mass]
+
+    in ONE pass — the semi-async tick's two scatter-accumulates, the
+    numerator add and the ``buffer_absorb`` renormalization share each
+    N-tile.  Returns (buf' in buf's dtype, total_mass (R,), new_mass (R,)).
+    Oracle: ``kernels/ref.agg_absorb_ref``."""
+    mats, xs = [], []
+    new_mass = jnp.zeros((n_rsus,), jnp.float32)
+    for x, w in arrivals:
+        wm = unnormalized_weight_matrix(w, jnp.ones_like(w), rsu_assign,
+                                        n_rsus)
+        mats.append(wm)
+        xs.append(x)
+        new_mass = new_mass + jnp.sum(wm, axis=1)
+    retained = jnp.asarray(keep, jnp.float32) * buf_mass.astype(jnp.float32)
+    retained = jnp.broadcast_to(retained, new_mass.shape)
+    total = retained + new_mass
+    coef = jnp.stack([retained, jnp.where(total > 0, total, 1.0),
+                      (total > 0).astype(jnp.float32)], axis=1)
+    out = _fused_agg_blend(coef, tuple(mats), tuple(xs), buf,
+                           interpret=interpret)
+    return out, total, new_mass
+
+
+def cloud_blend(rsu_flat: jax.Array, rsu_weights: jax.Array,
+                prev: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Fused cloud aggregation + keep-guard (Alg. 3 l.6): ``where(Σ mass >
+    0, wn @ rsu_flat, prev)`` in one pass; out dtype == prev dtype (the
+    fp32 cloud master).  Oracle: ``kernels/ref.cloud_blend_ref``."""
+    w = rsu_weights.astype(jnp.float32)
+    total = jnp.sum(w)
+    wn = jnp.where(total > 0, w / jnp.where(total > 0, total, 1.0),
+                   jnp.zeros_like(w))
+    guard = (total > 0).astype(jnp.float32)
+    coef = jnp.stack([jnp.zeros((1,), jnp.float32),
+                      jnp.ones((1,), jnp.float32), guard[None]], axis=1)
+    return _fused_agg_blend(coef, (wn[None, :],), (rsu_flat,),
+                            prev[None, :], interpret=interpret)[0]

@@ -11,29 +11,58 @@ round.  Tests pin both lowerings against kernels/ref.py.
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import (build_weight_matrix, cohort_mass,
-                                    normalized_weights,
+from repro.core.aggregation import (build_weight_matrix, buffer_absorb,
+                                    cohort_mass, normalized_weights,
                                     scatter_accumulate as _scatter_ref)
 from repro.kernels import dual_proximal_sgd as _dps
 from repro.kernels import flash_attention as _fa
 from repro.kernels import masked_hier_agg as _mha
 
+# explicit backend-route override (None = auto-detect).  Set via
+# ``set_interpret`` or the REPRO_INTERPRET env var ("1"/"0"); tests that
+# force platforms call ``set_interpret(None)`` to drop back to detection.
+_FORCE_INTERPRET: Optional[bool] = None
+
 
 @functools.lru_cache(maxsize=1)
-def _interpret() -> bool:
+def _backend_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def set_interpret(value: Optional[bool]) -> None:
+    """Override the Pallas-vs-XLA route: True forces interpret/XLA
+    fallbacks, False forces the compiled Pallas route, None restores
+    backend auto-detection (and re-reads the backend, so tests that
+    switch ``jax.default_backend`` mid-process stay correct)."""
+    global _FORCE_INTERPRET
+    _FORCE_INTERPRET = value
+    _backend_interpret.cache_clear()
+
+
+def _interpret() -> bool:
+    if _FORCE_INTERPRET is not None:
+        return _FORCE_INTERPRET
+    env = os.environ.get("REPRO_INTERPRET")
+    if env not in (None, ""):
+        return env.lower() not in ("0", "false", "no")
+    return _backend_interpret()
 
 
 def _xla_agg_matmul(weight_matrix, stacked):
     """The aggregation matmul as one XLA dot — same contract as
     ``masked_hier_agg.weighted_agg_matmul`` (fp32 accumulate, param dtype
-    out)."""
+    out).  The small (R, A) weight matrix is cast to the FLEET dtype
+    instead of widening the dominant (A, N) buffer to fp32 (which would
+    materialize a full-precision copy and forfeit the bf16 storage
+    policy's HBM savings); fp32 fleets are unchanged bit-for-bit."""
     out = jax.lax.dot_general(
-        weight_matrix.astype(jnp.float32), stacked.astype(jnp.float32),
+        weight_matrix.astype(stacked.dtype), stacked,
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     return out.astype(stacked.dtype)
 
@@ -106,6 +135,87 @@ def masked_scatter_accumulate(stacked_flat, weights, rsu_assign,
 def cloud_agg(rsu_flat, rsu_weights):
     wn, _ = normalized_weights(rsu_weights)
     return weighted_agg_matmul(wn[None, :], rsu_flat)[0]
+
+
+# --------------------------------------------------------------------------
+# fused aggregate-and-blend entry points (one-pass rounds, DESIGN.md §3/§6)
+# --------------------------------------------------------------------------
+
+def agg_blend(stacked_flat, weights, mask, rsu_assign, n_rsus: int, prev):
+    """Fused RSU aggregation + mass-guard blend:
+    ``out[r] = where(mass[r] > 0, W_norm[r] @ X, prev[r])`` with each
+    N-tile read/written once.  Returns (rsu' in prev's dtype, mass (R,)).
+
+    TPU: one Pallas grid pass (``masked_hier_agg.agg_blend``); off-TPU the
+    exact un-fused XLA composition the flat engine ran before (dot +
+    where), so fp32 results are bit-compatible with the two-step path.
+    """
+    if _interpret():
+        W = build_weight_matrix(weights, mask, rsu_assign, n_rsus)
+        mass = cohort_mass(weights, mask, rsu_assign, n_rsus)
+        new = _xla_agg_matmul(W, stacked_flat)
+        out = jnp.where((mass > 0)[:, None], new.astype(jnp.float32),
+                        prev.astype(jnp.float32))
+        return out.astype(prev.dtype), mass
+    return _mha.agg_blend(stacked_flat, weights, mask, rsu_assign, n_rsus,
+                          prev, interpret=False)
+
+
+def agg_absorb(arrivals, rsu_assign, n_rsus: int, buf, buf_mass, *,
+               keep=0.0):
+    """Fused multi-cohort scatter-accumulate + staleness-buffer merge
+    (the semi-async tick's whole RSU layer in one pass).  ``arrivals`` is
+    a sequence of (x (A, N), w (A,)) cohorts; returns (buf' in buf's
+    dtype, total_mass (R,), new_mass (R,)).
+
+    TPU: one Pallas grid pass; off-TPU: fp32 fleets run the exact
+    segment-sum + ``buffer_absorb`` chain the async engine ran before
+    (bit-compatible with today), storage-dtype (bf16) fleets run the
+    weight-matrix dot formulation instead — the segment-sum route would
+    materialize a full fp32 copy of the (A, N) buffer, forfeiting the
+    dtype policy's HBM savings; the dot reads the fleet in storage dtype
+    and accumulates fp32.
+    """
+    if _interpret():
+        from repro.core.aggregation import unnormalized_weight_matrix
+        f32_fleet = all(jnp.dtype(x.dtype) == jnp.dtype(jnp.float32)
+                        for x, _ in arrivals)
+        num = jnp.zeros(buf.shape, jnp.float32)
+        new_mass = jnp.zeros((n_rsus,), jnp.float32)
+        for x, w in arrivals:
+            if f32_fleet:
+                n, m = _scatter_ref(x, w, rsu_assign, n_rsus)
+            else:
+                wm = unnormalized_weight_matrix(
+                    w, jnp.ones_like(w), rsu_assign, n_rsus)
+                n = jax.lax.dot_general(
+                    wm.astype(x.dtype), x, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                m = jnp.sum(wm, axis=1)
+            num = num + n
+            new_mass = new_mass + m
+        out, total = buffer_absorb(buf, buf_mass, num, new_mass, keep=keep)
+        return out, total, new_mass
+    return _mha.agg_absorb(arrivals, rsu_assign, n_rsus, buf, buf_mass,
+                           keep=keep, interpret=False)
+
+
+def cloud_blend(rsu_flat, rsu_weights, prev):
+    """Fused cloud aggregation + keep-guard:
+    ``where(Σ mass > 0, wn @ rsu_flat, prev)`` in one pass; out dtype
+    follows ``prev`` (the fp32 cloud master, independent of the fleet
+    storage dtype)."""
+    if _interpret():
+        w = rsu_weights.astype(jnp.float32)
+        total = jnp.sum(w)
+        wn, _ = normalized_weights(rsu_weights)
+        new = jax.lax.dot_general(
+            wn[None, :], rsu_flat.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[0]
+        return jnp.where(total > 0, new,
+                         prev.astype(jnp.float32)).astype(prev.dtype)
+    return _mha.cloud_blend(rsu_flat, rsu_weights, prev, interpret=False)
 
 
 def slstm_scan(wx, r_gates, b_gates, *, block_s: int = 256):

@@ -109,6 +109,41 @@ def block_local_agg_ref(stacked_flat, weights, local_assign, n_rsus_local):
                               n_rsus_local)
 
 
+def agg_blend_ref(stacked_flat, weights, mask, rsu_assign, n_rsus, prev):
+    """Reference for the fused aggregate-and-blend: the un-fused two-pass
+    composition (normalized aggregation, then the mass-guard blend) the
+    one-pass kernel must reproduce.  Out dtype follows ``prev``."""
+    new, mass = masked_hier_agg_ref(stacked_flat, weights, mask, rsu_assign,
+                                    n_rsus)
+    out = jnp.where((mass > 0)[:, None], new.astype(jnp.float32),
+                    prev.astype(jnp.float32))
+    return out.astype(prev.dtype), mass
+
+
+def agg_absorb_ref(arrivals, rsu_assign, n_rsus, buf, buf_mass, *,
+                   keep=0.0):
+    """Reference for the fused multi-cohort absorb: per-cohort
+    ``scatter_accumulate``, numerator add, then ``buffer_absorb`` — the
+    exact consumer chain the one-pass kernel folds together."""
+    from repro.core.aggregation import buffer_absorb, scatter_accumulate
+    num = jnp.zeros(buf.shape, jnp.float32)
+    new_mass = jnp.zeros((n_rsus,), jnp.float32)
+    for x, w in arrivals:
+        n, m = scatter_accumulate(x, w, rsu_assign, n_rsus)
+        num = num + n
+        new_mass = new_mass + m
+    out, total = buffer_absorb(buf, buf_mass, num, new_mass, keep=keep)
+    return out, total, new_mass
+
+
+def cloud_blend_ref(rsu_flat, rsu_weights, prev):
+    """Reference for the fused cloud aggregation + keep-guard."""
+    new = cloud_agg_ref(rsu_flat, rsu_weights)
+    total = jnp.sum(rsu_weights.astype(jnp.float32))
+    return jnp.where(total > 0, new.astype(jnp.float32),
+                     prev.astype(jnp.float32)).astype(prev.dtype)
+
+
 def cloud_agg_ref(rsu_flat, rsu_weights):
     w = rsu_weights.astype(jnp.float32)
     mass = jnp.sum(w)

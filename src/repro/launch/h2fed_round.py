@@ -61,11 +61,17 @@ def _wmean_over(axis: str, tree: PyTree, weight, old: PyTree) -> PyTree:
     return jax.tree.map(agg, tree, old), mass
 
 
-def _wmean_over_flat(axis: str, tree: PyTree, weight, old: PyTree) -> PyTree:
+def _wmean_over_flat(axis: str, tree: PyTree, weight, old: PyTree, *,
+                     storage=jnp.float32) -> PyTree:
     """``_wmean_over`` on the raveled (N,) buffer (DESIGN.md §3): ONE psum
-    of one contiguous fp32 vector per aggregation layer instead of an
+    of one contiguous vector per aggregation layer instead of an
     O(leaves) collective schedule.  Semantics identical to the per-leaf
-    path.
+    path under the fp32 default.
+
+    ``storage`` is the fleet dtype (``--fleet-dtype``): the weighted
+    contribution is cast to it before the psum — bf16 halves the ICI/DCI
+    bytes of both hierarchy reductions at a documented looser tolerance;
+    normalization happens in fp32 after the reduction either way.
 
     Model-axis-replicated fleets only: raveling a tensor-parallel-sharded
     tree would force an all-gather over `model` before the psum, inflating
@@ -75,7 +81,8 @@ def _wmean_over_flat(axis: str, tree: PyTree, weight, old: PyTree) -> PyTree:
     vec = spec.ravel(tree)
     mass = jax.lax.psum(weight, axis)
     safe = jnp.where(mass > 0, mass, 1.0)
-    s = jax.lax.psum(vec * weight, axis)
+    s = jax.lax.psum((vec * weight).astype(storage),
+                     axis).astype(jnp.float32)
     out = jnp.where(mass > 0, s / safe, spec.ravel(old))
     return spec.unravel(out), mass
 
@@ -113,13 +120,20 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
                      microbatch: int = 0,
                      async_rounds: int = 0,
                      staleness_decay: float = 0.5,
-                     buffer_keep: float = 0.0):
+                     buffer_keep: float = 0.0,
+                     fleet_dtype: str = "float32"):
     """Build the hierarchical round function (to be jit'd by the caller).
 
     flat_agg=True runs both aggregation layers on the raveled parameter
     buffer (one fused collective each — the flat-buffer engine's formulation
     threaded into the SPMD program); incompatible with quantize_cloud,
     which keeps its own per-leaf scale handling.
+
+    fleet_dtype ("float32" | "bfloat16", ``--fleet-dtype``) is the
+    DESIGN.md §3 dtype-policy knob for the SPMD path: the raveled
+    aggregation contributions are reduced in this dtype (halving ICI/DCI
+    collective bytes at bf16; fp32 accumulation of the normalization stays
+    exact).  Requires flat_agg when not fp32.
 
     async_rounds=D > 0 runs the semi-async tick model (DESIGN.md §6) inside
     the SPMD program: each agent keeps a staleness-bounded (one-slot, delay
@@ -168,7 +182,13 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
         raise ValueError(
             "async_rounds requires flat_agg: the staleness-bounded in-flight "
             "buffer lives on the raveled (N,) vector")
-    wmean = _wmean_over_flat if flat_agg else _wmean_over
+    storage = flatten.resolve_storage_dtype(fleet_dtype)
+    if storage != jnp.dtype(jnp.float32) and not flat_agg:
+        raise ValueError(
+            "fleet_dtype != float32 requires flat_agg: the storage-dtype "
+            "reduction runs on the raveled buffer")
+    wmean = (functools.partial(_wmean_over_flat, storage=storage)
+             if flat_agg else _wmean_over)
     aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
 
     def agent_loss(w, local_batch):
@@ -269,7 +289,11 @@ def make_h2fed_round(cfg: ArchConfig, hp: H2FedParams, mesh,
             freef = free.astype(jnp.float32)
             w_imm = my_n * m * freef * (d == 0).astype(jnp.float32)
             w_due = jnp.where(due, pend_w, 0.0)
-            num = jax.lax.psum(w_imm * x_new + w_due * pend_x, "data")
+            # fleet-dtype reduction (bf16 halves the per-tick ICI bytes;
+            # fp32 default is the exact psum, a no-op cast)
+            num = jax.lax.psum(
+                (w_imm * x_new + w_due * pend_x).astype(storage),
+                "data").astype(jnp.float32)
             m_new = jax.lax.psum(w_imm + w_due, "data")
 
             retained = buffer_keep * rsu_mass

@@ -329,6 +329,28 @@ def analyze(text: str) -> Dict[str, float]:
             "collective_bytes": sum(colls.values()), "collectives": colls}
 
 
+def round_cost(fn, *args, latency_s: Optional[float] = None
+               ) -> Dict[str, float]:
+    """Per-round bytes-moved estimate of one compiled round program.
+
+    Lowers + compiles ``fn(*args)`` (``fn`` may already be jitted; args are
+    only traced, never executed — donation-safe) and runs ``analyze`` on
+    the post-optimization HLO, so while-loop trip counts (the LAR scan,
+    the training step scan) are multiplied through and fusion boundaries
+    are respected: the returned ``bytes`` is the program's per-device HBM
+    traffic for ONE round.  Keys: ``flops``, ``bytes``,
+    ``collective_bytes``, ``collectives``, plus — when ``latency_s`` is
+    given — ``hbm_gbps``, the achieved HBM bandwidth the benchmarks record
+    next to round latency (benchmarks/topology_round, async_round).
+    """
+    import jax
+    jfn = fn if hasattr(fn, "lower") else jax.jit(fn)
+    res = analyze(jfn.lower(*args).compile().as_text())
+    if latency_s is not None:
+        res["hbm_gbps"] = res["bytes"] / max(latency_s, 1e-12) / 1e9
+    return res
+
+
 _RG_LIST_RE = re.compile(r"replica_groups=\{((?:\{[0-9,\s]*\},?\s*)*)\}")
 _RG_IOTA_RE = re.compile(
     r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")

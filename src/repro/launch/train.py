@@ -56,6 +56,11 @@ def _parse_args():
                          "adaptive staleness, DESIGN.md §6)")
     ap.add_argument("--buffer-keep", type=float, default=0.0,
                     help="RSU cohort mass retained across ticks [0, 1]")
+    ap.add_argument("--fleet-dtype", default="float32",
+                    choices=("float32", "bfloat16"),
+                    help="fleet-buffer / aggregation-reduction dtype "
+                         "(DESIGN.md §3 dtype policy): bfloat16 halves "
+                         "ICI/DCI collective bytes (requires --flat-agg)")
     ap.add_argument("--adaptive-mu", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=2)
@@ -94,6 +99,10 @@ def main():
     if args.async_rounds and not args.flat_agg:
         print("[async] --async-rounds implies --flat-agg (raveled pending "
               "buffer); enabling it")
+        args.flat_agg = True
+    if args.fleet_dtype != "float32" and not args.flat_agg:
+        print("[dtype] --fleet-dtype implies --flat-agg (storage-dtype "
+              "reduction on the raveled buffer); enabling it")
         args.flat_agg = True
     cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
     if cfg.encoder.kind != "none":
@@ -139,7 +148,8 @@ def main():
                                       flat_agg=args.flat_agg,
                                       async_rounds=args.async_rounds,
                                       staleness_decay=args.staleness_decay,
-                                      buffer_keep=args.buffer_keep)
+                                      buffer_keep=args.buffer_keep,
+                                      fleet_dtype=args.fleet_dtype)
                 mask_sh = NamedSharding(mesh, topo.stacked_spec())
                 in_sh = (
                     shard.param_shardings_model_only(

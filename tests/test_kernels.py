@@ -227,6 +227,173 @@ def test_block_local_agg_is_weight_matrix_block():
                                    atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.parametrize("N", [96, 130, 333, 1100, 3333])
+def test_weighted_agg_matmul_ragged_n(N):
+    """Non-multiple-of-128 N must stay full-lane tiled (pad-up plan, no
+    degrade-to-tiny-tiles fallback) on BOTH routes: the Pallas kernel
+    (interpret) and the XLA dot the ops facade uses off-TPU."""
+    from repro.kernels.masked_hier_agg import _tile_plan
+    from repro.kernels import ops
+    rng = np.random.default_rng(N)
+    R, A = 5, 23
+    W = jnp.asarray(rng.standard_normal((R, A)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((A, N)), jnp.float32)
+    exp = np.asarray(W) @ np.asarray(x)
+    got_pl = weighted_agg_matmul(W, x, **INTERP)
+    np.testing.assert_allclose(np.asarray(got_pl), exp, atol=2e-5,
+                               rtol=2e-5)
+    got_ops = ops.weighted_agg_matmul(W, x)        # XLA route on CPU
+    np.testing.assert_allclose(np.asarray(got_ops), exp, atol=2e-5,
+                               rtol=2e-5)
+    n_pad, bn = _tile_plan(N, 2048)
+    assert bn % 128 == 0 and n_pad % bn == 0 and n_pad >= N
+    assert n_pad - N < bn + 128                    # bounded pad waste
+
+
+# --------------------------------------------------------------------------
+# fused aggregate-and-blend (one-pass rounds)
+# --------------------------------------------------------------------------
+
+FUSED_SWEEP = [
+    (4, 1, 64, jnp.float32),
+    (100, 10, 2000, jnp.float32),
+    (32, 4, 777, jnp.float32),          # ragged N
+    (16, 4, 512, jnp.bfloat16),         # bf16 fleet storage
+    (7, 7, 130, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("A,R,N,dtype", FUSED_SWEEP)
+def test_agg_blend_matches_ref(A, R, N, dtype):
+    """Fused aggregate+blend == the un-fused two-pass oracle on both the
+    Pallas (interpret) and the ops XLA routes, incl. kept (zero-mass)
+    rows."""
+    from repro.kernels import ops
+    from repro.kernels.masked_hier_agg import agg_blend
+    rng = np.random.default_rng(A + R + N)
+    x = jnp.asarray(rng.standard_normal((A, N))).astype(dtype)
+    w = jnp.asarray(rng.uniform(1, 5, A), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, A), jnp.float32)
+    assign = jnp.asarray(rng.integers(0, R, A), jnp.int32)
+    prev = jnp.asarray(rng.standard_normal((R, N))).astype(dtype)
+    exp, mass_e = ref.agg_blend_ref(x, w, mask, assign, R, prev)
+    atol = 2e-5 if dtype == jnp.float32 else 5e-2
+    for got, mass in (agg_blend(x, w, mask, assign, R, prev, **INTERP),
+                      ops.agg_blend(x, w, mask, assign, R, prev)):
+        assert got.dtype == prev.dtype
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(exp, np.float32),
+                                   atol=atol, rtol=atol)
+        np.testing.assert_allclose(np.asarray(mass), np.asarray(mass_e),
+                                   rtol=1e-6)
+    # zero-mass rows keep prev EXACTLY (no arithmetic touches them)
+    dead = np.asarray(mass_e) == 0
+    got_pl, _ = agg_blend(x, w, mask, assign, R, prev, **INTERP)
+    np.testing.assert_array_equal(np.asarray(got_pl)[dead],
+                                  np.asarray(prev)[dead])
+
+
+@pytest.mark.parametrize("A,R,N,dtype", FUSED_SWEEP)
+@pytest.mark.parametrize("keep", [0.0, 0.6])
+def test_agg_absorb_matches_ref(A, R, N, dtype, keep):
+    """Fused two-cohort scatter-absorb == scatter+scatter+add+absorb
+    oracle on both routes (the semi-async tick's RSU layer)."""
+    from repro.kernels import ops
+    from repro.kernels.masked_hier_agg import agg_absorb
+    rng = np.random.default_rng(A * 3 + R + N + int(keep * 10))
+    x1 = jnp.asarray(rng.standard_normal((A, N))).astype(dtype)
+    x2 = jnp.asarray(rng.standard_normal((A, N))).astype(dtype)
+    w1 = jnp.asarray(rng.uniform(0, 4, A) * (rng.random(A) < 0.7),
+                     jnp.float32)
+    w2 = jnp.asarray(rng.uniform(0, 2, A) * (rng.random(A) < 0.4),
+                     jnp.float32)
+    assign = jnp.asarray(rng.integers(0, R, A), jnp.int32)
+    buf = jnp.asarray(rng.standard_normal((R, N))).astype(dtype)
+    bmass = jnp.asarray(rng.uniform(0, 5, R), jnp.float32)
+    arr = ((x1, w1), (x2, w2))
+    exp, total_e, new_e = ref.agg_absorb_ref(arr, assign, R, buf, bmass,
+                                             keep=keep)
+    atol = 2e-5 if dtype == jnp.float32 else 6e-2
+    for got, total, new in (
+            agg_absorb(arr, assign, R, buf, bmass, keep=keep, **INTERP),
+            ops.agg_absorb(arr, assign, R, buf, bmass, keep=keep)):
+        assert got.dtype == buf.dtype
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(exp, np.float32),
+                                   atol=atol, rtol=atol)
+        np.testing.assert_allclose(np.asarray(total), np.asarray(total_e),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(new), np.asarray(new_e),
+                                   rtol=1e-5)
+
+
+def test_agg_absorb_per_rsu_keep_vector():
+    """(R,)-vector keep (per-RSU adaptive retention) matches the oracle."""
+    from repro.kernels.masked_hier_agg import agg_absorb
+    rng = np.random.default_rng(5)
+    A, R, N = 12, 3, 200
+    x = jnp.asarray(rng.standard_normal((A, N)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 2, A), jnp.float32)
+    assign = jnp.asarray(rng.integers(0, R, A), jnp.int32)
+    buf = jnp.asarray(rng.standard_normal((R, N)), jnp.float32)
+    bmass = jnp.asarray(rng.uniform(1, 4, R), jnp.float32)
+    keep = jnp.asarray([0.0, 0.5, 1.0], jnp.float32)
+    got, total, _ = agg_absorb(((x, w),), assign, R, buf, bmass,
+                               keep=keep, **INTERP)
+    exp, total_e, _ = ref.agg_absorb_ref(((x, w),), assign, R, buf, bmass,
+                                         keep=keep)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(total), np.asarray(total_e),
+                               rtol=1e-6)
+
+
+def test_cloud_blend_matches_ref():
+    from repro.kernels import ops
+    from repro.kernels.masked_hier_agg import cloud_blend
+    rng = np.random.default_rng(6)
+    R, N = 6, 777
+    x = jnp.asarray(rng.standard_normal((R, N)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 3, R), jnp.float32)
+    prev = jnp.asarray(rng.standard_normal((N,)), jnp.float32)
+    exp = ref.cloud_blend_ref(x, w, prev)
+    for got in (cloud_blend(x, w, prev, **INTERP),
+                ops.cloud_blend(x, w, prev)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                                   atol=2e-5, rtol=2e-5)
+    # dead fleet: the cloud master is kept bit-exactly, even from a bf16
+    # RSU buffer (the fp32-master dtype policy)
+    xb = x.astype(jnp.bfloat16)
+    got0 = cloud_blend(xb, jnp.zeros((R,)), prev, **INTERP)
+    assert got0.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got0), np.asarray(prev))
+
+
+def test_ops_interpret_override(monkeypatch):
+    """ops._interpret: explicit override > env var > backend detection,
+    and reset-safe for tests that force platforms."""
+    from repro.kernels import ops
+    try:
+        ops.set_interpret(True)
+        assert ops._interpret() is True
+        ops.set_interpret(False)
+        assert ops._interpret() is False
+        ops.set_interpret(None)                       # back to detection
+        auto = ops._interpret()
+        assert auto == (jax.default_backend() != "tpu")
+        monkeypatch.setenv("REPRO_INTERPRET", "0")
+        assert ops._interpret() is False
+        monkeypatch.setenv("REPRO_INTERPRET", "1")
+        assert ops._interpret() is True
+        monkeypatch.delenv("REPRO_INTERPRET")
+        assert ops._interpret() == auto
+        # explicit override beats the env var
+        monkeypatch.setenv("REPRO_INTERPRET", "0")
+        ops.set_interpret(True)
+        assert ops._interpret() is True
+    finally:
+        ops.set_interpret(None)
+
+
 def test_cloud_agg_matches_ref():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((10, 333)), jnp.float32)
