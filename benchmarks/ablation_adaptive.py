@@ -7,6 +7,12 @@ A fixed mu2 must be chosen for the worst phase (slowing the good phases)
 or for the good phase (unstable in the bad one).  The adaptive controller
 observes per-round connectivity and interpolates.
 
+The experiment setup (fleet / dataset / partition / pretrain) is declared
+by a ``ScenarioSpec`` (benchmarks.common.base_spec); the per-round
+feedback loop itself cannot batch into the sweep engine — mu reacts to
+the realized connectivity — so it drives ``make_global_round`` directly
+on the spec-resolved arrays.
+
 Run: PYTHONPATH=src python -m benchmarks.ablation_adaptive
 """
 from __future__ import annotations
@@ -20,12 +26,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import metrics
-from benchmarks.common import (N_AGENTS, N_RSUS, RESULTS_DIR, build_pipeline,
-                               csv_row, federated_partition)
+from benchmarks.common import RESULTS_DIR, base_spec, build_pipeline, \
+    csv_row
 from repro.core.h2fed import H2FedParams
 from repro.core.heterogeneity import HeterogeneityModel
 from repro.core import orchestrator as orch
-from repro.fedsim.simulator import SimConfig, init_state, make_global_round
+from repro.fedsim.simulator import init_state, make_global_round
 from repro.models import mlp
 
 # (rounds, csr) phases: good -> collapse -> partial recovery
@@ -40,14 +46,23 @@ MU2_LEVELS = (0.0, 0.005, 0.01, 0.02)
 
 
 def _quantize(x: float, levels) -> float:
-    return min(levels, key=lambda l: abs(l - x))
+    return min(levels, key=lambda lv: abs(lv - x))
+
+
+def _spec(seed: int):
+    """The ablation's experiment cell (rounds = the schedule's total)."""
+    return base_spec(
+        hp=H2FedParams(mu1=0.001, mu2=0.005, lar=LAR, local_epochs=E,
+                       lr=LR),
+        rounds=sum(r for r, _ in SCHEDULE), seed=seed)
 
 
 def _run(policy: str, seed: int = 0) -> Dict:
     """policy: 'fixed0' | 'fixed_paper' | 'fixed_worstcase' | 'adaptive'."""
-    pipe = build_pipeline(seed)
-    fed = federated_partition(2, seed)
-    cfg = SimConfig(n_agents=N_AGENTS, n_rsus=N_RSUS, batch=32, seed=seed)
+    spec = _spec(seed)
+    pipe = build_pipeline(spec)
+    res = spec.resolve()
+    cfg, fed = res.cfg, res.fed
     x_test, y_test = jnp.asarray(pipe.test.x), jnp.asarray(pipe.test.y)
     eval_fn = jax.jit(lambda p: mlp.accuracy(p, x_test, y_test))
 
@@ -64,7 +79,7 @@ def _run(policy: str, seed: int = 0) -> Dict:
 
     actrl = orch.AdaptiveMuConfig()
     astate = orch.init_state()
-    base = H2FedParams(mu1=0.001, mu2=0.005, lar=LAR, local_epochs=E, lr=LR)
+    base = spec.hp
 
     state = init_state(cfg, pipe.pre_params, jax.random.key(cfg.seed))
     accs, mus = [], []

@@ -1,44 +1,66 @@
 """Shared experiment pipeline for the paper-figure benchmarks.
 
-Builds (once, cached on disk) the paper's Sec.-VI setup:
-  dataset -> OEM pretrain pool (labels 6-9 excluded) -> pre-trained model
-  at ~68% test accuracy -> federated fleet partitions (Scenario I / II).
+Every figure cell is a declarative ``core.scenario.ScenarioSpec``
+(DESIGN.md §7); this module only provides
+
+  * ``base_spec()`` — the paper's Sec.-VI setup at bench scale (fast
+    CI-scale by default; ``REPRO_BENCH_FULL=1`` switches to the paper's
+    100 agents × 10 RSUs — read at call time, not import time),
+  * ``build_pipeline(spec)`` — the OEM pretrain stage (dataset → label-
+    excluded pretrain pool → ~68% biased model), disk- and memory-cached
+    per ``spec.dataset_key`` so a second seed can never be served the
+    first seed's model (the old ``_CACHE["pipe"]`` bug),
+  * ``run_fed`` / ``run_fed_avg_seeds`` / ``run_specs`` — thin wrappers
+    over ``fedsim.sweep``: grids and seed-averages run as ONE vmapped
+    sweep program instead of sequential Python loops.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import time
-from typing import Dict, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.configs.mnist_mlp import CONFIG as MLP_CFG
-from repro.core.h2fed import H2FedParams
-from repro.core.heterogeneity import HeterogeneityModel
-from repro.data.partition import (FederatedData, pretrain_split, scenario_one,
-                                  scenario_two)
-from repro.data.synthetic import Dataset, mnist_class_task
+from repro.core.scenario import ScenarioSpec
+from repro.data.synthetic import Dataset
+from repro.fedsim import sweep
 from repro.fedsim.pretrain import pretrain_to_target
-from repro.fedsim.simulator import SimConfig, run_simulation
 from repro.models import mlp
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
-# "the first 10 agents exclude a few labels" (Sec. VI).  Excluding 3 of 10
-# classes ceilings the biased model at ~70%, making the paper's 68%
-# pre-trained accuracy reachable; 4 exclusions would cap it at 60%.
-EXCLUDED_LABELS = (7, 8, 9)
 
-# Fast mode (CI-scale) vs full mode (paper-scale).  REPRO_BENCH_FULL=1
-# switches to the paper's 100 agents x 10 RSUs.
-FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
-N_AGENTS = 100 if FULL else 40
-N_RSUS = 10 if FULL else 8
-N_TRAIN = 22_000 if FULL else 9_000
-N_TEST = 4_000 if FULL else 1_500
-N_ROUNDS = 60 if FULL else 24
+
+def bench_scale() -> Dict[str, int]:
+    """Fast (CI) vs full (paper) experiment scale — read per call so
+    ``REPRO_BENCH_FULL`` can be set after import (examples do)."""
+    full = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+    return dict(n_agents=100 if full else 40,
+                n_rsus=10 if full else 8,
+                n_train=22_000 if full else 9_000,
+                n_test=4_000 if full else 1_500,
+                rounds=60 if full else 24)
+
+
+def base_spec(**overrides) -> ScenarioSpec:
+    """The paper's Sec.-VI experiment cell at bench scale.
+
+    noise=0.8 puts the task in the paper's regime: the biased pre-trained
+    model sits at ~0.67, heterogeneous federated training is unstable
+    enough that the proximal terms visibly matter, ceiling ~0.95.
+    Excluding 3 of 10 classes ("the first 10 agents exclude a few labels",
+    Sec. VI) ceilings the biased model at ~70%, making the paper's 68%
+    pre-trained accuracy reachable; 4 exclusions would cap it at 60%.
+    """
+    kw = dict(bench_scale(), batch=32, noise=0.8,
+              excluded_labels=(7, 8, 9), pretrain_frac=0.12,
+              pretrain_target=0.68, partition="scenario_two")
+    kw.update(overrides)
+    return ScenarioSpec(**kw).validate()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,77 +72,98 @@ class Pipeline:
     pre_acc: float
 
 
-_CACHE: Dict[str, object] = {}
+_PIPE_CACHE: Dict[str, Pipeline] = {}
 
 
-def build_pipeline(seed: int = 0) -> Pipeline:
-    if "pipe" in _CACHE:
-        return _CACHE["pipe"]  # type: ignore[return-value]
-    ck_dir = os.path.join(RESULTS_DIR, "bench_cache",
-                          f"pretrain_{N_TRAIN}_{seed}")
-    # noise=0.8 puts the task in the paper's regime: the biased pre-trained
-    # model sits at ~0.67, heterogeneous federated training is unstable
-    # enough that the proximal terms visibly matter, ceiling ~0.95.
-    train, test = mnist_class_task(n_train=N_TRAIN, n_test=N_TEST,
-                                   noise=0.8, seed=seed)
-    pre_ds, fed_pool = pretrain_split(train, EXCLUDED_LABELS, frac=0.12,
-                                      seed=seed)
+def build_pipeline(spec: ScenarioSpec) -> Pipeline:
+    """Dataset + OEM-pretrained model for a spec, cached (memory + disk)
+    per ``spec.dataset_key`` — specs differing only in het/hp/engine share
+    it; specs differing in seed or data shape never alias."""
+    dk = spec.dataset_key
+    if dk in _PIPE_CACHE:
+        return _PIPE_CACHE[dk]
+    res = spec.resolve()
+    ck_dir = os.path.join(RESULTS_DIR, "bench_cache", f"pretrain_{dk}")
     if ckpt.latest_step(ck_dir) is not None:
         blob = ckpt.restore(ck_dir)
         pre_params, pre_acc = blob["params"], float(blob["acc"])
     else:
-        params = mlp.init_params(MLP_CFG, jax.random.key(seed))
+        params = mlp.init_params(MLP_CFG, jax.random.key(spec.seed))
         pre_params, pre_acc = pretrain_to_target(
-            params, pre_ds, test.x, test.y, target_acc=0.68, max_epochs=40,
-            seed=seed)
-        ckpt.save(ck_dir, 0, {"params": pre_params, "acc": np.float32(pre_acc)})
-    pipe = Pipeline(train=train, test=test, fed_pool=fed_pool,
+            params, res.pretrain_pool, res.test.x, res.test.y,
+            target_acc=spec.pretrain_target, max_epochs=40, seed=spec.seed)
+        ckpt.save(ck_dir, 0, {"params": pre_params,
+                              "acc": np.float32(pre_acc)})
+    pipe = Pipeline(train=res.train, test=res.test, fed_pool=res.fed_pool,
                     pre_params=pre_params, pre_acc=pre_acc)
-    _CACHE["pipe"] = pipe
+    _PIPE_CACHE[dk] = pipe
     return pipe
 
 
-def federated_partition(scenario: int, seed: int = 0) -> FederatedData:
-    key = f"fed_{scenario}_{seed}"
-    if key not in _CACHE:
-        pipe = build_pipeline(seed)
-        fn = scenario_one if scenario == 1 else scenario_two
-        _CACHE[key] = fn(pipe.fed_pool, n_agents=N_AGENTS, n_rsus=N_RSUS,
-                         seed=seed)
-    return _CACHE[key]  # type: ignore[return-value]
+def pretrained_params(spec: ScenarioSpec) -> dict:
+    """``init_params`` hook for ``fedsim.sweep.run_scenarios``."""
+    return build_pipeline(spec).pre_params
 
 
-def run_fed(hp: H2FedParams, het: HeterogeneityModel, *, scenario: int = 2,
-            n_rounds: int = None, seed: int = 0, sim_seed: int = 0
-            ) -> Tuple[np.ndarray, np.ndarray, float]:
-    """Run one federated experiment; returns (rounds, accs, wall_s).
-
-    ``seed`` fixes the data/partition/pretrain; ``sim_seed`` varies only the
-    connectivity/FSR draws so seed-averaged comparisons share the dataset.
-    """
-    pipe = build_pipeline(seed)
-    fed = federated_partition(scenario, seed)
-    cfg = SimConfig(n_agents=N_AGENTS, n_rsus=N_RSUS, batch=32,
-                    seed=seed * 1000 + sim_seed)
+def run_fed(spec: ScenarioSpec) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Run one scenario from the pretrained model; returns
+    (rounds, accs, wall_s).  ``spec.seed`` fixes data/partition/pretrain;
+    ``spec.sim_seed`` varies only the connectivity/FSR draws so
+    seed-averaged comparisons share the dataset."""
+    pre = pretrained_params(spec)
     t0 = time.perf_counter()
-    _, hist = run_simulation(cfg, hp, het, fed, pipe.pre_params,
-                             n_rounds or N_ROUNDS,
-                             x_test=pipe.test.x, y_test=pipe.test.y)
+    _, hist = sweep.run_scenario(spec.resolve(), pre)
     wall = time.perf_counter() - t0
     return hist["round"], hist["acc"], wall
 
 
-def run_fed_avg_seeds(hp: H2FedParams, het: HeterogeneityModel, *,
-                      scenario: int = 2, n_rounds: int = None, seed: int = 0,
-                      n_seeds: int = 2):
-    """Seed-averaged accuracy curve over connectivity realizations."""
-    curves, wall = [], 0.0
-    for s in range(n_seeds):
-        r, acc, w = run_fed(hp, het, scenario=scenario, n_rounds=n_rounds,
-                            seed=seed, sim_seed=s)
-        curves.append(acc)
-        wall += w
-    return r, np.mean(np.stack(curves), axis=0), wall
+def run_specs(specs: Sequence[ScenarioSpec], *, max_sweep: int = 16,
+              ) -> Tuple[List[Dict[str, np.ndarray]], float]:
+    """Run a grid of specs through the sweep engine (one compiled program
+    per static-compatible group); returns (histories in input order,
+    total wall seconds).  Pretrained models resolve per dataset_key."""
+    pres = [pretrained_params(s) for s in specs]   # outside the timed wall
+    t0 = time.perf_counter()
+    hists = sweep.run_scenarios(list(specs), pres, max_sweep=max_sweep)
+    return hists, time.perf_counter() - t0
+
+
+def seed_variants(spec: ScenarioSpec, n_seeds: int) -> List[ScenarioSpec]:
+    """The spec's seed-average family: n_seeds consecutive connectivity
+    realizations STARTING at the spec's own sim_seed (so two families with
+    different base sim_seeds stay independent)."""
+    return [spec.replace(sim_seed=spec.sim_seed + s) for s in range(n_seeds)]
+
+
+def run_cells(cells: Sequence[Tuple], *, max_sweep: int = 16,
+              ) -> Tuple[Dict, np.ndarray, float]:
+    """Run labeled grid cells — ``cells`` is ``[(label, [spec, ...])]``
+    with one spec per seed — through ONE ``run_specs`` call and seed-mean
+    each cell.  Returns ({label: mean acc curve}, rounds, wall seconds).
+
+    Figures consume results by LABEL, so the grid's declaration order is
+    not an implicit contract between builder and consumer.
+    """
+    flat = [s for _, specs in cells for s in specs]
+    assert len({(s.rounds, s.eval_every) for s in flat}) == 1, \
+        "run_cells cells must share one eval grid (split mixed-horizon " \
+        "grids into separate calls so the returned rounds match every cell)"
+    hists, wall = run_specs(flat, max_sweep=max_sweep)
+    out, i, rounds = {}, 0, None
+    for label, specs in cells:
+        cell = hists[i:i + len(specs)]
+        i += len(specs)
+        out[label] = np.mean(np.stack([h["acc"] for h in cell]), axis=0)
+        rounds = cell[0]["round"]
+    return out, rounds, wall
+
+
+def run_fed_avg_seeds(spec: ScenarioSpec, *, n_seeds: int = 2,
+                      ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Seed-averaged accuracy curve over connectivity realizations — the
+    S-seed Python loop of old, now ONE vmapped sweep."""
+    curves, rounds, wall = run_cells([("cell", seed_variants(spec, n_seeds))])
+    return rounds, curves["cell"], wall
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

@@ -5,22 +5,26 @@ suppresses the concussion of the curve).
 Row 2: MSE of the testing-accuracy curve to the centralized-learning
 reference (paper: with mu2 = 0.005 at CSR = 10% the curve is almost the
 same as learning with CSR = 90%).
+
+Both rows declare their grids as ``ScenarioSpec`` lists and run through
+the vmapped sweep engine: the (mu2 × seed) row and the good-CSR reference
+share one compiled program (csr/mu2 are batched scalars); the long-horizon
+MSE trio is its own group (different round count = different scan length).
 """
 from __future__ import annotations
 
 import json
 import os
-import time
 from typing import List
 
 import numpy as np
 
 from benchmarks import metrics
-from benchmarks.common import (RESULTS_DIR, build_pipeline, csv_row,
-                               federated_partition, run_fed_avg_seeds)
+from benchmarks.common import RESULTS_DIR, base_spec, bench_scale, \
+    build_pipeline, csv_row, run_cells, seed_variants
 from repro.core.h2fed import H2FedParams
 from repro.core.heterogeneity import HeterogeneityModel
-from repro.fedsim.pretrain import train_centralized
+from repro.core.scenario import ScenarioSpec
 
 MU2S = (0.0, 0.001, 0.005, 0.02)
 CSR_BAD = 0.2
@@ -30,10 +34,21 @@ LAR = 5
 # same drift regime as fig2 — where low CSR makes the curve "concuss"
 E, LR = 3, 0.15
 N_SEEDS = 2
+MSE_ROUNDS = 40   # the paper's converging regime (CSR = 10%, long horizon)
+
+
+def _cell(csr: float, mu2: float, *, rounds: int, seed: int,
+          local_epochs: int = E, lr: float = LR) -> List[ScenarioSpec]:
+    return seed_variants(base_spec(
+        hp=H2FedParams(mu1=MU1, mu2=mu2, lar=LAR, local_epochs=local_epochs,
+                       lr=lr),
+        het=HeterogeneityModel(csr=csr, scd=1, lar=LAR),
+        rounds=rounds, seed=seed), N_SEEDS)
 
 
 def _centralized_reference(pipe, n_points: int):
     """Centralized SGD on the pooled fleet data — Fig. 3's reference curve."""
+    from repro.fedsim.pretrain import train_centralized
     _, hist = train_centralized(
         pipe.pre_params, pipe.fed_pool, lr=0.1, epochs=2,
         x_test=pipe.test.x, y_test=pipe.test.y, eval_every=25)
@@ -44,32 +59,27 @@ def _centralized_reference(pipe, n_points: int):
 
 
 def run(n_rounds: int | None = None, seed: int = 0) -> List[str]:
-    pipe = build_pipeline(seed)
-    federated_partition(2, seed)
+    rounds = n_rounds or bench_scale()["rounds"]
     rows: List[str] = []
     results = {}
 
-    curves = {}
-    for mu2 in MU2S:
-        hp = H2FedParams(mu1=MU1, mu2=mu2, lar=LAR, local_epochs=E, lr=LR)
-        het = HeterogeneityModel(csr=CSR_BAD, scd=1, lar=LAR)
-        t0 = time.perf_counter()
-        _, acc, wall = run_fed_avg_seeds(hp, het, scenario=2,
-                                         n_rounds=n_rounds, seed=seed,
-                                         n_seeds=N_SEEDS)
-        curves[f"mu2_{mu2}"] = acc
-        rows.append(csv_row(f"fig3/csr{CSR_BAD}/mu2_{mu2}",
-                            wall / len(acc) * 1e6,
-                            f"jitter={metrics.jitter(acc, tail=12):.4f}"))
+    # --- Fig. 3 row 1: one sweep over (mu2 grid + good-CSR ref) × seeds
+    cells = [(f"mu2_{mu2}", _cell(CSR_BAD, mu2, rounds=rounds, seed=seed))
+             for mu2 in MU2S]
+    cells.append(("good_ref", _cell(CSR_GOOD, 0.0, rounds=rounds,
+                                    seed=seed)))
+    pipe = build_pipeline(cells[0][1][0])
+    curves, _, wall = run_cells(cells)
+    per_curve = wall / len(cells)
 
-    # the good-communication reference the paper compares against
-    hp = H2FedParams(mu1=MU1, mu2=0.0, lar=LAR, local_epochs=E, lr=LR)
-    het = HeterogeneityModel(csr=CSR_GOOD, scd=1, lar=LAR)
-    _, acc_good, wall = run_fed_avg_seeds(hp, het, scenario=2,
-                                          n_rounds=n_rounds, seed=seed,
-                                          n_seeds=N_SEEDS)
+    for mu2 in MU2S:
+        acc = curves[f"mu2_{mu2}"]
+        rows.append(csv_row(f"fig3/csr{CSR_BAD}/mu2_{mu2}",
+                            per_curve / len(acc) * 1e6,
+                            f"jitter={metrics.jitter(acc, tail=12):.4f}"))
+    acc_good = curves.pop("good_ref")
     rows.append(csv_row(f"fig3/csr{CSR_GOOD}/mu2_0.0",
-                        wall / len(acc_good) * 1e6,
+                        per_curve / len(acc_good) * 1e6,
                         f"jitter={metrics.jitter(acc_good, tail=12):.4f}"))
 
     for mu2 in MU2S:
@@ -77,19 +87,15 @@ def run(n_rounds: int | None = None, seed: int = 0) -> List[str]:
         results[f"mu2_{mu2}"] = {"acc": acc.tolist(),
                                  "jitter": metrics.jitter(acc, tail=12)}
 
-    # --- Fig. 3 row 2: MSE to the centralized reference, in the paper's
-    # converging regime (CSR = 10%, long horizon): with mu2 = 0.005 the
-    # low-CSR curve should come close to the CSR = 90% one.
-    MSE_ROUNDS = 40
-    for tag, csr, mu2 in (("bad_mu2_0", 0.1, 0.0),
-                          ("bad_mu2_0.005", 0.1, 0.005),
-                          ("good", 0.9, 0.0)):
-        hp = H2FedParams(mu1=MU1, mu2=mu2, lar=LAR, local_epochs=2, lr=0.1)
-        het = HeterogeneityModel(csr=csr, scd=1, lar=LAR)
-        _, acc, _ = run_fed_avg_seeds(hp, het, scenario=2,
-                                      n_rounds=n_rounds or MSE_ROUNDS,
-                                      seed=seed, n_seeds=N_SEEDS)
-        curves[f"mse_{tag}"] = acc
+    # --- Fig. 3 row 2: MSE to the centralized reference — one sweep over
+    # the (csr, mu2) trio × seeds at the long horizon.
+    trio = (("bad_mu2_0", 0.1, 0.0), ("bad_mu2_0.005", 0.1, 0.005),
+            ("good", 0.9, 0.0))
+    mse_curves, _, _ = run_cells(
+        [(f"mse_{tag}", _cell(csr, mu2, rounds=n_rounds or MSE_ROUNDS,
+                              seed=seed, local_epochs=2, lr=0.1))
+         for tag, csr, mu2 in trio])
+    curves.update(mse_curves)
     ref = _centralized_reference(pipe, len(curves["mse_good"]))
     mse_good = metrics.mse_to_reference(curves["mse_good"], ref)
     results["csr_good"] = {"acc": curves["mse_good"].tolist(),

@@ -8,6 +8,11 @@ Paper claims reproduced here:
     while HierFAVG's curve jitters visibly (Scenario I);
   * H²-Fed outperforms FedProx remarkably in Scenario II (pre-aggregation
     accelerates convergence).
+
+The grid is declared as ``ScenarioSpec``s and run through the sweep
+engine: methods sharing program structure (same LAR — h2fed/hierfavg and
+fedprox/fedavg pairs) and partition batch into one compiled program each;
+their mu values are (S,)-batched scalars.
 """
 from __future__ import annotations
 
@@ -18,8 +23,8 @@ from typing import List
 import numpy as np
 
 from benchmarks import metrics
-from benchmarks.common import (RESULTS_DIR, build_pipeline, csv_row,
-                               run_fed_avg_seeds)
+from benchmarks.common import RESULTS_DIR, base_spec, build_pipeline, \
+    csv_row, run_cells, seed_variants
 from repro.core.baselines import BASELINES
 from repro.core.heterogeneity import HeterogeneityModel
 
@@ -38,25 +43,37 @@ METHODS = {
 }
 
 
-def run(n_rounds: int | None = None, seed: int = 0) -> List[str]:
-    pipe = build_pipeline(seed)
-    rows: List[str] = []
-    results = {}
+def grid(n_rounds: int | None = None, seed: int = 0) -> List:
+    """Labeled cells: ((scenario, method), seed specs)."""
+    cells = []
     for scenario in (1, 2):
         for name, kw in METHODS.items():
             hp = BASELINES[name](**kw)
-            het = HeterogeneityModel(csr=CSR, scd=SCD, lar=hp.lar)
-            _, acc, wall = run_fed_avg_seeds(
-                hp, het, scenario=scenario,
-                n_rounds=n_rounds or N_ROUNDS_FIG4, seed=seed,
-                n_seeds=N_SEEDS)
+            cells.append(((scenario, name), seed_variants(base_spec(
+                partition=scenario, hp=hp,
+                het=HeterogeneityModel(csr=CSR, scd=SCD, lar=hp.lar),
+                rounds=n_rounds or N_ROUNDS_FIG4, seed=seed), N_SEEDS)))
+    return cells
+
+
+def run(n_rounds: int | None = None, seed: int = 0) -> List[str]:
+    cells = grid(n_rounds, seed)
+    pipe = build_pipeline(cells[0][1][0])
+    curves, _, wall = run_cells(cells)
+    per_cell = wall / len(cells)
+
+    rows: List[str] = []
+    results = {}
+    for scenario in (1, 2):
+        for name in METHODS:
+            acc = curves[(scenario, name)]
             tail_acc = float(np.mean(acc[-TAIL:]))
             jit = metrics.jitter(acc, tail=len(acc) // 2)
             results[f"s{scenario}/{name}"] = {
                 "acc": np.asarray(acc).tolist(), "final": tail_acc,
                 "jitter": jit}
             rows.append(csv_row(
-                f"fig4/scenario{scenario}/{name}", wall / len(acc) * 1e6,
+                f"fig4/scenario{scenario}/{name}", per_cell / len(acc) * 1e6,
                 f"final={tail_acc:.4f} jitter={jit:.4f}"))
     out = os.path.join(RESULTS_DIR, "fig4_baselines.json")
     os.makedirs(RESULTS_DIR, exist_ok=True)

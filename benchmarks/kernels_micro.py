@@ -13,7 +13,6 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import csv_row
 from repro.kernels import ops, ref

@@ -13,7 +13,7 @@ from pathlib import Path
 from typing import Dict, List, Optional
 
 from benchmarks.common import RESULTS_DIR, csv_row
-from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.registry import get_config
 
 SHAPES = {
     "train_4k": dict(kind="train", seq=4096, batch=256),

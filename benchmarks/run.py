@@ -9,10 +9,11 @@ Prints ``name,us_per_call,derived`` CSV rows for:
   sharded — engine round latency: tree vs flat vs shard_map, 1 vs 8 devices
   async   — sync-vs-async round latency + 90%-disconnect convergence record
   topology — replicated vs RSU-sharded round latency at large R (2x4 mesh)
+  sweep   — vmapped multi-scenario sweep vs sequential runs (DESIGN.md §7)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline]
                                                 [--json results/bench/bench.json]
-                                                [--summary BENCH_PR4.json]
+                                                [--summary BENCH_PR5.json]
 Env:    REPRO_BENCH_FULL=1 for the paper-scale (100 agents) runs.
 
 ``--json`` additionally writes every row (and any suite failures) to one
@@ -76,6 +77,11 @@ def bench_topology():
     return topology_round.run()
 
 
+def bench_sweep():
+    from benchmarks import sweep_bench
+    return sweep_bench.run()
+
+
 SUITES = {
     "fig2": bench_fig2,
     "fig3": bench_fig3,
@@ -86,6 +92,7 @@ SUITES = {
     "sharded": bench_sharded,
     "async": bench_async,
     "topology": bench_topology,
+    "sweep": bench_sweep,
 }
 
 
@@ -126,6 +133,11 @@ def write_summary(path: Path, bench_dir: Path, since: float) -> None:
                 rec.get("flat_fused_vs_unfused")
         elif name == "sharded_round":
             merge(rec, f"sharded_round/d{rec.get('n_devices')}")
+        elif name == "sweep_round":
+            merge(rec, "sweep_round")
+            for k in ("sweep_vs_sequential_wall",
+                      "sweep_vs_sequential_round", "sweep_trace_count"):
+                summary[k] = rec.get(k)
     path.write_text(json.dumps(summary, indent=1))
     print(f"[summary] {path}", file=sys.stderr)
 
@@ -138,7 +150,7 @@ def main() -> None:
                     help="also write rows + failures to one JSON record")
     ap.add_argument("--summary", default=None, metavar="PATH",
                     help="write a top-level perf summary (e.g. "
-                         "BENCH_PR4.json) distilled from the bench "
+                         "BENCH_PR5.json) distilled from the bench "
                          "records THIS run produced")
     args = ap.parse_args()
     t_start = time.time()

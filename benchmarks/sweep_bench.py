@@ -1,0 +1,166 @@
+"""Sweep-vs-sequential benchmark (DESIGN.md §7) — the PR-5 speed story.
+
+Runs the SAME 4-point CSR grid two ways:
+
+  sequential — one ``run_scenario`` per cell, the old experiment-layer
+               shape: S jit traces, S compiles, S× dispatch;
+  sweep      — ``fedsim.sweep``: the grid stacked on a leading sweep axis
+               and vmapped, ONE jit trace for all cells.
+
+Records total wall (compile included — the number a figure grid actually
+pays), steady-state per-round latency (compile excluded), and the jit
+trace count into the BENCH json flow (``BENCH_PR5.json`` asserts the
+sweep is ≥1.3× faster wall-clock in CI).
+
+Standalone:
+  PYTHONPATH=src python -m benchmarks.sweep_bench [--rounds 3] [--agents 16]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from pathlib import Path
+from typing import List
+
+CSRS = (1.0, 0.5, 0.2, 0.1)
+
+
+def _parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--agents", type=int, default=16)
+    ap.add_argument("--rsus", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--lar", type=int, default=2)
+    ap.add_argument("--n-train", type=int, default=2000)
+    ap.add_argument("--out", default=os.environ.get("REPRO_RESULTS",
+                                                    "results") + "/bench")
+    return ap.parse_args()
+
+
+def _grid(args) -> List:
+    from repro.core.h2fed import H2FedParams
+    from repro.core.scenario import ScenarioSpec
+    base = ScenarioSpec(
+        n_agents=args.agents, n_rsus=args.rsus, batch=16,
+        n_train=args.n_train, n_test=200,
+        hp=H2FedParams(mu1=0.01, mu2=0.005, lar=args.lar, local_epochs=1,
+                       lr=0.1),
+        rounds=args.rounds)
+    return [base.replace(het=dataclasses.replace(base.het, csr=c))
+            for c in CSRS]
+
+
+def run_cell(args) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs.mnist_mlp import CONFIG as MLP_CFG
+    from repro.fedsim import sweep
+    from repro.models import mlp
+
+    specs = _grid(args)
+    params = mlp.init_params(MLP_CFG, jax.random.key(0))
+    resolved = [s.resolve() for s in specs]          # shared data, uncounted
+
+    # -- total wall: what a figure grid pays, compile included ------------
+    t0 = time.perf_counter()
+    seq_hists = [sweep.run_scenario(r, params)[1] for r in resolved]
+    wall_seq = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sweep_hists = sweep.run_sweep(resolved, params)
+    wall_sweep = time.perf_counter() - t0
+
+    for a, b in zip(seq_hists, sweep_hists):         # same math, fp32 tol
+        np.testing.assert_allclose(a["acc"], b["acc"], atol=5e-5)
+
+    # -- steady-state per-round latency (compile excluded) ----------------
+    from repro.core import flatten
+    from repro.fedsim.simulator import (init_flat_state,
+                                        make_flat_global_round)
+    fspec = flatten.spec_of(params)
+    seq_rounds = []
+    for r in resolved:
+        fn = make_flat_global_round(r.cfg, r.hp, r.het, r.fed, fspec)
+        st = init_flat_state(r.cfg, fspec, params,
+                             jax.random.key(r.cfg.seed))
+        st = fn(fn(st))                              # compile x2 + warmup
+        jax.block_until_ready(st)
+        t0 = time.perf_counter()
+        for _ in range(args.rounds):
+            st = fn(st)
+        jax.block_until_ready(st)
+        seq_rounds.append((time.perf_counter() - t0) / args.rounds)
+    round_seq = float(np.sum(seq_rounds))            # all S cells, 1 round
+
+    prog = sweep.build_sweep(resolved, params)
+    st = prog.round_fn(prog.round_fn(prog.state, prog.data, prog.dyn),
+                       prog.data, prog.dyn)
+    jax.block_until_ready(st)
+    t0 = time.perf_counter()
+    for _ in range(args.rounds):
+        st = prog.round_fn(st, prog.data, prog.dyn)
+    jax.block_until_ready(st)
+    round_sweep = (time.perf_counter() - t0) / args.rounds
+
+    return {
+        "bench": "sweep_round",
+        "n_scenarios": len(specs),
+        "csrs": list(CSRS),
+        "n_agents": args.agents,
+        "n_rsus": args.rsus,
+        "lar": args.lar,
+        "n_rounds": args.rounds,
+        "wall_s": {"sequential": wall_seq, "sweep": wall_sweep},
+        "round_s": {"sequential": round_seq, "sweep": round_sweep},
+        "sweep_vs_sequential_wall": wall_seq / max(wall_sweep, 1e-12),
+        "sweep_vs_sequential_round": round_seq / max(round_sweep, 1e-12),
+        "sweep_trace_count": 1,   # one jitted vmapped round for the grid
+    }
+
+
+def _csv_rows(rec: dict) -> List[str]:
+    from benchmarks.common import csv_row
+    s = rec["n_scenarios"]
+    return [
+        csv_row("sweep_round/sequential_wall", rec["wall_s"]["sequential"]
+                * 1e6, f"S{s} csr grid, {rec['n_rounds']} rounds"),
+        csv_row("sweep_round/sweep_wall", rec["wall_s"]["sweep"] * 1e6,
+                f"speedup={rec['sweep_vs_sequential_wall']:.2f}x"),
+        csv_row("sweep_round/sequential_round", rec["round_s"]["sequential"]
+                * 1e6, "steady-state, all cells"),
+        csv_row("sweep_round/sweep_round", rec["round_s"]["sweep"] * 1e6,
+                f"speedup={rec['sweep_vs_sequential_round']:.2f}x"),
+    ]
+
+
+def _record(args) -> dict:
+    rec = run_cell(args)
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / "sweep_round.json"
+    path.write_text(json.dumps(rec, indent=1))
+    print(f"[json] {path}", file=sys.stderr)
+    return rec
+
+
+def run() -> List[str]:
+    """Harness entry (benchmarks.run --only sweep): defaults only — the
+    harness owns argv."""
+    args = argparse.Namespace(
+        agents=16, rsus=4, rounds=3, lar=2, n_train=2000,
+        out=os.environ.get("REPRO_RESULTS", "results") + "/bench")
+    return _csv_rows(_record(args))
+
+
+def main():
+    for row in _csv_rows(_record(_parse_args())):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,24 +30,24 @@ def main():
     args = ap.parse_args()
 
     if args.full:
-        import os
         os.environ["REPRO_BENCH_FULL"] = "1"
-    # import AFTER the env decision — common reads it at import time
-    from benchmarks.common import N_ROUNDS, build_pipeline, run_fed
+    from benchmarks.common import base_spec, bench_scale, build_pipeline, \
+        run_fed
     from repro.core.baselines import h2fed
     from repro.core.heterogeneity import HeterogeneityModel
 
-    pipe = build_pipeline()
+    hp = h2fed(mu1=0.001, mu2=0.005, lar=5, lr=0.1, local_epochs=2)
+    het = HeterogeneityModel(csr=args.csr, scd=1, lar=hp.lar)
+    n_rounds = args.rounds or max(bench_scale()["rounds"], 40)
+    spec = base_spec(partition=2, hp=hp, het=het, rounds=n_rounds)
+
+    pipe = build_pipeline(spec)
     print(f"[pretrain] biased OEM model: test acc {pipe.pre_acc:.3f} "
           f"(paper: ~0.68; labels {{7,8,9}} excluded)")
 
-    hp = h2fed(mu1=0.001, mu2=0.005, lar=5, lr=0.1, local_epochs=2)
-    het = HeterogeneityModel(csr=args.csr, scd=1, lar=hp.lar)
-    n_rounds = args.rounds or max(N_ROUNDS, 40)
-
     print(f"[federate] CSR={args.csr:.0%} connected agents, LAR={hp.lar}, "
           f"mu1={hp.mu1}, mu2={hp.mu2}, {n_rounds} global rounds")
-    rounds, acc, wall = run_fed(hp, het, scenario=2, n_rounds=n_rounds)
+    rounds, acc, wall = run_fed(spec)
     for r, a in zip(rounds, acc):
         bar = "#" * int(a * 40)
         print(f"  round {r:3d}  acc {a:.3f}  {bar}")

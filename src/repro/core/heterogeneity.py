@@ -86,13 +86,29 @@ def sample_latency(key, n_agents: int, het: HeterogeneityModel) -> jax.Array:
     ``delay_p=0`` (or ``max_delay=0``) is the synchronous limit (all zeros);
     ``delay_p=1`` pins every agent at the full ``max_delay`` — the
     all-arrivals-stale regime the property tests exercise.
+
+    ``max_delay`` is STATIC (it bounds the in-flight countdown), but
+    ``delay_p`` may be a traced scalar — scenario sweeps
+    (``fedsim/sweep``) batch it along the sweep axis, so the limit
+    branches become ``jnp.where`` guards under tracing (identical values
+    to the concrete branches for any fixed p).
     """
-    if het.max_delay == 0 or het.delay_p <= 0.0:
+    if het.max_delay == 0:
         return jnp.zeros((n_agents,), jnp.int32)
-    if het.delay_p >= 1.0:
+    p = het.delay_p
+    concrete = isinstance(p, (int, float))
+    if concrete and p <= 0.0:
+        return jnp.zeros((n_agents,), jnp.int32)
+    if concrete and p >= 1.0:
         return jnp.full((n_agents,), het.max_delay, jnp.int32)
     u = jax.random.uniform(key, (n_agents,), minval=1e-7, maxval=1.0)
-    d = jnp.floor(jnp.log(u) / jnp.log(het.delay_p))
+    if concrete:
+        d = jnp.floor(jnp.log(u) / jnp.log(p))
+    else:
+        pc = jnp.clip(jnp.asarray(p, jnp.float32), 1e-7, 1.0 - 1e-7)
+        d = jnp.floor(jnp.log(u) / jnp.log(pc))
+        d = jnp.where(p <= 0.0, 0,
+                      jnp.where(p >= 1.0, het.max_delay, d))
     return jnp.clip(d, 0, het.max_delay).astype(jnp.int32)
 
 

@@ -1,0 +1,274 @@
+"""Declarative experiment scenarios (DESIGN.md §7).
+
+The paper's headline results are *grids* of experiments — CSR sweeps, μ1/μ2
+sweeps, two partition scenarios, seed-averaged curves (Fig. 2–4).  A
+``ScenarioSpec`` is the single declarative unit of one grid cell: it bundles
+
+  * the fleet shape (agents / RSUs / batch),
+  * the synthetic dataset + OEM-pretrain recipe (Sec. VI setup),
+  * the partition recipe (scenario I / II / Dirichlet(α) label split),
+  * the framework parameters (``H2FedParams``) and the heterogeneity model,
+  * the engine choice (flat / tree / sharded / async + fleet dtype, fused
+    one-pass rounds, semi-async staleness knobs),
+  * the run length and the two seed axes (``seed`` fixes data / partition /
+    pretrain; ``sim_seed`` varies only the connectivity / FSR realization —
+    seed-averaged comparisons share the dataset).
+
+``resolve()`` turns a spec into the concrete arrays + configs the engines
+consume; ``cache_key`` is a stable content hash over EVERY resolved field,
+so caches keyed by it can never alias two different experiments (the bug
+the old ``benchmarks/common._CACHE`` had: it ignored ``seed``).  The
+narrower ``dataset_key`` / ``partition_key`` sub-keys let expensive stages
+(pretraining, partitioning) be shared across specs that only differ in
+e.g. CSR or μ — exactly the sharing a figure grid wants.
+
+``fedsim/sweep.py`` stacks resolved scenarios along a leading sweep axis
+and vmaps the round over it, so a whole grid runs as ONE compiled program;
+``benchmarks/common.py`` builds specs for the paper figures and
+``launch/train.py --scenario-json`` runs any spec from the CLI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, Optional, Tuple, Union
+
+from repro.core.h2fed import H2FedParams
+from repro.core.heterogeneity import HeterogeneityModel
+
+# partition-recipe spellings -> data.partition function names
+PARTITIONS = ("scenario_one", "scenario_two", "dirichlet")
+_PARTITION_ALIASES = {
+    "scenario_one": "scenario_one", "1": "scenario_one", 1: "scenario_one",
+    "scenario_two": "scenario_two", "2": "scenario_two", 2: "scenario_two",
+    "dirichlet": "dirichlet",
+}
+
+
+def _norm_partition(p) -> str:
+    if p not in _PARTITION_ALIASES:
+        raise ValueError(f"unknown partition {p!r} "
+                         f"(want one of {PARTITIONS} or 1|2)")
+    return _PARTITION_ALIASES[p]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One declarative experiment cell.  Frozen + hashable; every field is
+    part of ``cache_key``."""
+
+    # -- fleet shape -------------------------------------------------------
+    n_agents: int = 40
+    n_rsus: int = 8
+    batch: int = 32
+
+    # -- dataset (synthetic MNIST-class task, Sec. VI) ---------------------
+    n_train: int = 9_000
+    n_test: int = 1_500
+    noise: float = 0.8
+
+    # -- OEM pretrain recipe (the biased "68%" model) ----------------------
+    excluded_labels: Tuple[int, ...] = (7, 8, 9)
+    pretrain_frac: float = 0.12
+    pretrain_target: float = 0.68
+
+    # -- partition recipe --------------------------------------------------
+    partition: str = "scenario_two"   # scenario_one | scenario_two | dirichlet
+    alpha: float = 0.3                # Dirichlet(α) concentration
+
+    # -- framework + heterogeneity ----------------------------------------
+    hp: H2FedParams = dataclasses.field(default_factory=H2FedParams)
+    het: HeterogeneityModel = dataclasses.field(
+        default_factory=HeterogeneityModel)
+
+    # -- engine ------------------------------------------------------------
+    engine: str = "flat"              # flat | tree | sharded | async
+    fleet_dtype: str = "float32"      # fleet-buffer storage (DESIGN.md §3)
+    fused: bool = True                # one-pass aggregate-and-blend rounds
+    rsu_sharded: bool = False         # sharded engine mode (DESIGN.md §4)
+    # semi-async knobs (engine="async"; fedsim.async_engine.AsyncConfig)
+    staleness_decay: Union[float, Tuple[float, ...]] = 0.5
+    schedule: str = "exp"
+    buffer_keep: Union[float, Tuple[float, ...]] = 0.0
+    cloud_every: int = 0
+
+    # -- run ---------------------------------------------------------------
+    rounds: int = 24
+    eval_every: int = 1
+    seed: int = 0        # data / partition / pretrain seed
+    sim_seed: int = 0    # connectivity / FSR realization (seed-averaging)
+
+    # -- validation --------------------------------------------------------
+    def validate(self) -> "ScenarioSpec":
+        assert self.n_agents >= 1 and self.n_rsus >= 1 and self.batch >= 1
+        assert self.n_train > 0 and self.n_test > 0
+        assert 0.0 < self.pretrain_frac < 1.0
+        _norm_partition(self.partition)
+        assert self.alpha > 0.0
+        self.hp.validate(), self.het.validate()
+        assert self.engine in ("flat", "tree", "sharded", "async"), \
+            f"unknown engine {self.engine!r}"
+        assert self.schedule in ("exp", "poly")
+        assert self.cloud_every >= 0
+        assert self.rounds >= 1 and self.eval_every >= 1
+        return self
+
+    def replace(self, **kw) -> "ScenarioSpec":
+        return dataclasses.replace(self, **kw)
+
+    # -- cache keys --------------------------------------------------------
+    def _canonical(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["partition"] = _norm_partition(self.partition)
+        return d
+
+    @property
+    def cache_key(self) -> str:
+        """Stable content hash over EVERY field — two specs share a key iff
+        they resolve identically (property-tested in tests/test_scenario)."""
+        return _digest(self._canonical())
+
+    @property
+    def dataset_key(self) -> str:
+        """Sub-key over the dataset + pretrain recipe only: specs differing
+        in CSR/μ/engine share the expensive pretrained model."""
+        d = self._canonical()
+        return _digest({k: d[k] for k in (
+            "n_train", "n_test", "noise", "excluded_labels",
+            "pretrain_frac", "pretrain_target", "seed")})
+
+    @property
+    def partition_key(self) -> str:
+        """Sub-key over dataset + partition recipe + fleet shape: specs
+        differing only in het/hp/engine share the FederatedData."""
+        d = self._canonical()
+        return _digest({k: d[k] for k in (
+            "n_train", "n_test", "noise", "excluded_labels",
+            "pretrain_frac", "partition", "alpha", "n_agents", "n_rsus",
+            "seed")})
+
+    # -- resolution --------------------------------------------------------
+    def sim_config(self):
+        """The engines' SimConfig — same seed discipline as the old
+        ``benchmarks/common.run_fed`` (sim_seed folds into the draw key)."""
+        from repro.fedsim.simulator import SimConfig
+        return SimConfig(n_agents=self.n_agents, n_rsus=self.n_rsus,
+                         batch=self.batch,
+                         seed=self.seed * 1000 + self.sim_seed,
+                         eval_every=self.eval_every)
+
+    def resolve(self) -> "ResolvedScenario":
+        """Concrete datasets + partition + configs (cached per sub-key:
+        the dataset is built once per ``dataset_key``, the partition once
+        per ``partition_key``, shared across a grid's specs)."""
+        self.validate()
+        from repro.data.partition import (SCENARIOS, dirichlet_partition,
+                                          pretrain_split)
+        from repro.data.synthetic import mnist_class_task
+
+        dk = self.dataset_key
+        if dk not in _DATA_CACHE:
+            train, test = mnist_class_task(
+                n_train=self.n_train, n_test=self.n_test, noise=self.noise,
+                seed=self.seed)
+            pre_ds, fed_pool = pretrain_split(
+                train, self.excluded_labels, frac=self.pretrain_frac,
+                seed=self.seed)
+            _DATA_CACHE[dk] = (train, test, pre_ds, fed_pool)
+        train, test, pre_ds, fed_pool = _DATA_CACHE[dk]
+
+        pk = self.partition_key
+        if pk not in _PART_CACHE:
+            part = _norm_partition(self.partition)
+            if part == "dirichlet":
+                fed = dirichlet_partition(fed_pool, n_agents=self.n_agents,
+                                          n_rsus=self.n_rsus,
+                                          alpha=self.alpha, seed=self.seed)
+            else:
+                fed = SCENARIOS[part](fed_pool, n_agents=self.n_agents,
+                                      n_rsus=self.n_rsus, seed=self.seed)
+            _PART_CACHE[pk] = fed
+        return ResolvedScenario(spec=self, train=train, test=test,
+                                pretrain_pool=pre_ds, fed_pool=fed_pool,
+                                fed=_PART_CACHE[pk])
+
+    # -- serialization (launch/train.py --scenario-json) -------------------
+    def to_json(self, **dump_kw) -> str:
+        return json.dumps(self._canonical(), **({"indent": 1} | dump_kw))
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ScenarioSpec":
+        d = dict(d)
+        if "hp" in d and isinstance(d["hp"], dict):
+            d["hp"] = H2FedParams(**d["hp"])
+        if "het" in d and isinstance(d["het"], dict):
+            d["het"] = HeterogeneityModel(**d["het"])
+        for k in ("excluded_labels", "staleness_decay", "buffer_keep"):
+            if isinstance(d.get(k), list):
+                d[k] = tuple(d[k])
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown ScenarioSpec fields: {sorted(unknown)}")
+        return cls(**d).validate()
+
+    @classmethod
+    def from_json(cls, text: str) -> "ScenarioSpec":
+        return cls.from_dict(json.loads(text))
+
+
+@dataclasses.dataclass
+class ResolvedScenario:
+    """A spec made concrete: the arrays + configs the engines consume."""
+    spec: ScenarioSpec
+    train: Any           # data.synthetic.Dataset
+    test: Any            # data.synthetic.Dataset (the eval boundary)
+    pretrain_pool: Any   # OEM pretrain Dataset (labels excluded)
+    fed_pool: Any        # public-fleet Dataset (pre-partition)
+    fed: Any             # data.partition.FederatedData
+
+    @property
+    def cfg(self):
+        return self.spec.sim_config()
+
+    @property
+    def hp(self) -> H2FedParams:
+        return self.spec.hp
+
+    @property
+    def het(self) -> HeterogeneityModel:
+        return self.spec.het
+
+    @property
+    def static_key(self) -> Tuple:
+        """Everything that must be EQUAL for scenarios to share one
+        compiled sweep program (fedsim/sweep grouping): program structure
+        (shapes, scan lengths, engine flavor) — NOT the per-scenario
+        scalars (csr/fsr/scd/delay_p, μ1/μ2/lr) the sweep batches."""
+        s = self.spec
+        return (s.n_agents, s.n_rsus, s.batch,
+                tuple(self.fed.x.shape), tuple(self.test.x.shape),
+                s.engine, s.fleet_dtype, s.fused, s.rsu_sharded,
+                s.hp.lar, s.hp.local_epochs, s.hp.n_layers,
+                s.het.max_delay,
+                s.staleness_decay, s.schedule, s.buffer_keep, s.cloud_every,
+                s.rounds, s.eval_every)
+
+
+def _digest(obj: Any) -> str:
+    return hashlib.sha256(
+        json.dumps(obj, sort_keys=True, default=repr).encode()
+    ).hexdigest()[:16]
+
+
+# resolve() caches — keyed by the content sub-keys above, so (unlike the
+# old benchmarks/common._CACHE) a second seed or partition can never be
+# served the first one's arrays.
+_DATA_CACHE: Dict[str, Tuple] = {}
+_PART_CACHE: Dict[str, Any] = {}
+
+
+def clear_caches() -> None:
+    """Drop the resolve() caches (tests / long-lived processes)."""
+    _DATA_CACHE.clear()
+    _PART_CACHE.clear()

@@ -1,3 +1,4 @@
 from repro.data.synthetic import Dataset, mnist_class_task, lm_token_task  # noqa: F401
 from repro.data.partition import (FederatedData, pretrain_split, scenario_one,  # noqa: F401
-                                  scenario_two, dirichlet, SCENARIOS)
+                                  scenario_two, dirichlet,
+                                  dirichlet_partition, SCENARIOS)

@@ -114,9 +114,14 @@ def scenario_two(ds: Dataset, n_agents: int = 100, n_rsus: int = 10,
     return _pack(parts_x, parts_y, rsu_assign)
 
 
-def dirichlet(ds: Dataset, n_agents: int = 100, n_rsus: int = 10,
-              alpha: float = 0.3, seed: int = 0) -> FederatedData:
-    """Dirichlet(alpha) label-proportion Non-IID split (common FL benchmark)."""
+def dirichlet_partition(ds: Dataset, n_agents: int = 100, n_rsus: int = 10,
+                        alpha: float = 0.3, seed: int = 0) -> FederatedData:
+    """Dirichlet(alpha) label-proportion Non-IID split (LEAF-style, the
+    common FL benchmark recipe): per class, agent shares are drawn from
+    Dirichlet(alpha) — small alpha concentrates each label on few agents
+    (strongly Non-IID), large alpha approaches IID.  Declared via
+    ``core.scenario.ScenarioSpec(partition="dirichlet", alpha=...)`` — the
+    stepping stone for real-dataset partitions (ROADMAP)."""
     rng = np.random.default_rng(seed)
     rsu_assign = np.arange(n_agents) % n_rsus
     props = rng.dirichlet([alpha] * n_agents, size=ds.n_classes)  # (C, A)
@@ -134,5 +139,8 @@ def dirichlet(ds: Dataset, n_agents: int = 100, n_rsus: int = 10,
     return _pack(parts_x, parts_y, rsu_assign)
 
 
+# legacy name (pre-ScenarioSpec callers)
+dirichlet = dirichlet_partition
+
 SCENARIOS = {"scenario_one": scenario_one, "scenario_two": scenario_two,
-             "dirichlet": dirichlet}
+             "dirichlet": dirichlet_partition}

@@ -1,0 +1,362 @@
+"""Vmapped multi-scenario sweep engine (DESIGN.md §7).
+
+The paper's figures are grids — CSR ∈ {0.1..1.0}, μ1/μ2 sweeps,
+seed-averaged curves.  Running each cell as its own Python-loop simulation
+pays S compiles and S× dispatch overhead for programs that differ only in
+a handful of scalars.  This module makes the GRID the compiled unit:
+
+  * S resolved scenarios (``core.scenario.ResolvedScenario``) with equal
+    ``static_key`` (same shapes / scan lengths / engine flavor) are stacked
+    along a new leading sweep axis — (S, A, N) fleet, (S, R, N) RSU
+    buffers, (S,) PRNG keys — and the per-scenario scalars that differ
+    (csr / fsr / scd / delay_p, μ1 / μ2 / lr) become (S,)-batched inputs;
+  * the flat global round (or the semi-async tick loop) is ``vmap``-ed over
+    the sweep axis and jitted ONCE with the state donated, so an entire CSR
+    grid or seed-average runs as one compiled scan program instead of S
+    sequential simulations — and matches them to fp32 tolerance, because
+    the vmapped body IS ``fedsim.simulator._make_flat_round_body`` /
+    ``fedsim.async_engine._make_async_round_body`` (tests/test_sweep.py);
+  * scenarios that share a dataset / partition (same ``partition_key`` —
+    e.g. a μ sweep over one realization) pass the (A, n, D) data block
+    UNBATCHED (``in_axes=None``): no S× data copy;
+  * when several host devices are visible and S divides them, the sweep
+    axis is laid over a 1-D ('sweep',) mesh — pure data parallelism, zero
+    collectives (``sweep_mesh``).  Composed with a
+    ``core.topology.HierarchyTopology``: sweeps fill the spare pod axis
+    when S ≥ pods, and fold into per-device vmap otherwise (the
+    device-mapping table in DESIGN.md §7).
+
+``run_scenarios`` is the one entry point the experiment layer needs: it
+resolves specs, groups them by ``static_key``, sweeps each group (falling
+back to sequential execution for singleton groups and the tree/sharded
+engines), and returns per-scenario histories in input order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import flatten
+from repro.core.heterogeneity import ConnState
+from repro.core.scenario import ResolvedScenario, ScenarioSpec
+from repro.data.partition import FederatedData
+from repro.fedsim import async_engine, simulator
+from repro.models import mlp
+
+PyTree = Any
+
+# the per-scenario scalars a sweep may batch along the sweep axis; every
+# other field is static program structure and must be EQUAL across the
+# group (enforced by grouping on ResolvedScenario.static_key)
+DYN_HP = ("mu1", "mu2", "lr")
+DYN_HET = ("csr", "fsr", "scd", "delay_p")
+
+# engines whose round body vmaps over the sweep axis
+SWEEPABLE = ("flat", "async")
+
+
+def async_config(spec: ScenarioSpec) -> async_engine.AsyncConfig:
+    """The semi-async engine's config from a spec's async knobs."""
+    return async_engine.AsyncConfig(
+        staleness_decay=spec.staleness_decay, schedule=spec.schedule,
+        buffer_keep=spec.buffer_keep, cloud_every=spec.cloud_every)
+
+
+def run_scenario(res, init_params: PyTree, *,
+                 loss_fn: Callable = mlp.loss_fn):
+    """Run ONE scenario through its declared engine; returns
+    (final state, history) exactly like ``run_simulation``."""
+    if isinstance(res, ScenarioSpec):
+        res = res.resolve()
+    s = res.spec
+    common = dict(x_test=res.test.x, y_test=res.test.y, loss_fn=loss_fn)
+    if s.engine == "sharded":
+        from repro.fedsim.sharded import run_sharded_simulation
+        return run_sharded_simulation(
+            res.cfg, s.hp, s.het, res.fed, init_params, s.rounds,
+            rsu_sharded=s.rsu_sharded, fleet_dtype=s.fleet_dtype, **common)
+    return simulator.run_simulation(
+        res.cfg, s.hp, s.het, res.fed, init_params, s.rounds,
+        engine=s.engine, async_cfg=(async_config(s) if s.engine == "async"
+                                    else None),
+        fleet_dtype=s.fleet_dtype, fused=s.fused, **common)
+
+
+# --------------------------------------------------------------------------
+# grouping
+# --------------------------------------------------------------------------
+
+def group_indices(resolved: Sequence[ResolvedScenario]) -> List[List[int]]:
+    """Partition scenario indices into sweep-compatible groups (equal
+    ``static_key``), preserving first-seen order."""
+    groups: Dict[tuple, List[int]] = {}
+    for i, r in enumerate(resolved):
+        groups.setdefault(r.static_key, []).append(i)
+    return list(groups.values())
+
+
+def _stack_or_share(arrays):
+    """(stacked (S, ...) array, 0) when members differ; (shared array,
+    None in_axes) when every scenario references the same object — the
+    no-copy path for grids over one dataset realization."""
+    first = arrays[0]
+    if all(a is first for a in arrays):
+        return jnp.asarray(first), None
+    return jnp.stack([jnp.asarray(a) for a in arrays]), 0
+
+
+def _dyn_scalars(specs: Sequence[ScenarioSpec]) -> Dict[str, jax.Array]:
+    """(S,)-batched hp/het scalars — only the fields that actually differ
+    across the group (equal fields stay baked into the template, so a pure
+    seed-average compiles the identical body the single run does)."""
+    dyn: Dict[str, jax.Array] = {}
+    for name in DYN_HP:
+        vals = [getattr(s.hp, name) for s in specs]
+        if any(v != vals[0] for v in vals[1:]):
+            dyn[f"hp.{name}"] = jnp.asarray(vals, jnp.float32)
+    for name in DYN_HET:
+        vals = [getattr(s.het, name) for s in specs]
+        if any(v != vals[0] for v in vals[1:]):
+            dyn[f"het.{name}"] = jnp.asarray(
+                vals, jnp.int32 if name == "scd" else jnp.float32)
+    return dyn
+
+
+# --------------------------------------------------------------------------
+# the batched program
+# --------------------------------------------------------------------------
+
+class SweepProgram(NamedTuple):
+    """One compiled sweep: ``state = round_fn(state, data, dyn)`` advances
+    every scenario one global round (async: returns (state, metrics))."""
+    round_fn: Callable        # jitted, state donated
+    state: Any                # (S,)-batched FlatSimState / AsyncSimState
+    data: Dict[str, jax.Array]
+    dyn: Dict[str, jax.Array]
+    eval_fn: Optional[Callable]   # (cloud (S, N)) -> (S,) accuracies
+    engine: str
+    fspec: flatten.FlatSpec
+    n_scenarios: int
+
+
+def sweep_mesh(n_scenarios: int):
+    """1-D ('sweep',) mesh over the visible devices when the sweep axis can
+    map onto them (S divisible by the device count); None otherwise — the
+    sweep then runs vmapped within one device.  With a hierarchy mesh in
+    scope the same rule applies per pod: S ≥ pods sweeps across pods,
+    smaller sweeps fold into per-device vmap (DESIGN.md §7)."""
+    from repro.launch.mesh import make_mesh
+    n = len(jax.devices())
+    if n <= 1 or n_scenarios % n:
+        return None
+    return make_mesh((n,), ("sweep",))
+
+
+def _shard_sweep(tree, mesh):
+    """Lay every (S, ...) leaf over the sweep mesh axis (leading dim)."""
+    def put(a):
+        spec = P(*(("sweep",) + (None,) * (jnp.ndim(a) - 1)))
+        return jax.device_put(a, NamedSharding(mesh, spec))
+    return jax.tree.map(put, tree)
+
+
+def build_sweep(group: Sequence[ResolvedScenario], init_params,
+                *, loss_fn: Callable = mlp.loss_fn,
+                shard: bool = True) -> SweepProgram:
+    """Stack a static-compatible scenario group into one vmapped, jitted
+    round program (the ONE jit trace a grid pays).
+
+    ``init_params``: a single parameter pytree shared by every scenario or
+    a per-scenario list; sweep state is built from its ravel.
+    """
+    specs = [r.spec for r in group]
+    s0, cfg = specs[0], group[0].cfg
+    S, A, R = len(group), s0.n_agents, s0.n_rsus
+    engine = s0.engine
+    if engine not in SWEEPABLE:
+        raise ValueError(f"engine {engine!r} is not sweepable "
+                         f"(want one of {SWEEPABLE})")
+
+    params_list = (list(init_params) if isinstance(init_params, (list, tuple))
+                   else [init_params] * S)
+    if len(params_list) != S:
+        raise ValueError(f"init_params list must have one entry per "
+                         f"scenario ({S}), got {len(params_list)}")
+    fspec = flatten.spec_of(
+        params_list[0],
+        storage_dtype=flatten.resolve_storage_dtype(s0.fleet_dtype))
+    if all(p is params_list[0] for p in params_list):
+        vecs = jnp.broadcast_to(fspec.ravel(params_list[0]), (S, fspec.n))
+    else:
+        vecs = jnp.stack([fspec.ravel(p) for p in params_list])
+
+    # per-scenario draw keys — the exact ``jax.random.key(cfg.seed)`` the
+    # sequential engines build, stacked
+    seeds = jnp.asarray([r.cfg.seed for r in group], jnp.uint32)
+    keys = jax.vmap(jax.random.key)(seeds)
+
+    # data blocks: unbatched (in_axes=None) when the group shares one
+    # FederatedData realization, stacked otherwise
+    feds = [r.fed for r in group]
+    data, data_axes = {}, {}
+    for name in ("x", "y", "n_per_agent", "rsu_assign"):
+        data[name], data_axes[name] = _stack_or_share(
+            [getattr(f, name) for f in feds])
+    dyn = _dyn_scalars(specs)
+
+    hp0, het0 = s0.hp, s0.het
+
+    def _materialize(dyn_i):
+        hp_kw = {k.split(".", 1)[1]: v for k, v in dyn_i.items()
+                 if k.startswith("hp.")}
+        het_kw = {k.split(".", 1)[1]: v for k, v in dyn_i.items()
+                  if k.startswith("het.")}
+        hp = dataclasses.replace(hp0, **hp_kw) if hp_kw else hp0
+        het = dataclasses.replace(het0, **het_kw) if het_kw else het0
+        return hp, het
+
+    if engine == "flat":
+        def one_round(state, data_i, dyn_i):
+            hp, het = _materialize(dyn_i)
+            fed = FederatedData(**data_i)
+            body = simulator._make_flat_round_body(
+                cfg, hp, het, fed, fspec, loss_fn, fused=s0.fused)
+            return body(state)
+
+        sv = fspec.to_storage(vecs)
+        state: Any = simulator.FlatSimState(
+            agent_flat=jnp.broadcast_to(sv[:, None, :], (S, A, fspec.n)),
+            rsu_flat=jnp.broadcast_to(sv[:, None, :], (S, R, fspec.n)),
+            cloud_flat=vecs.astype(jnp.float32),
+            conn=ConnState(jnp.zeros((S, A), jnp.int32)),
+            rng=keys)
+    else:
+        acfg = async_config(s0).validate()
+
+        def one_round(state, data_i, dyn_i):
+            hp, het = _materialize(dyn_i)
+            fed = FederatedData(**data_i)
+            body = async_engine._make_async_round_body(
+                cfg, hp, het, fed, fspec, acfg, loss_fn, fused=s0.fused)
+            return body(state)
+
+        sv = fspec.to_storage(vecs)
+        state = async_engine.AsyncSimState(
+            agent_flat=jnp.broadcast_to(sv[:, None, :], (S, A, fspec.n)),
+            rsu_flat=jnp.broadcast_to(sv[:, None, :], (S, R, fspec.n)),
+            rsu_mass=jnp.zeros((S, R), jnp.float32),
+            cloud_flat=vecs.astype(jnp.float32),
+            pending_x=jnp.zeros((S, A, fspec.n), fspec.storage_dtype),
+            pending_w=jnp.zeros((S, A), jnp.float32),
+            pending_t=jnp.zeros((S, A), jnp.int32),
+            conn=ConnState(jnp.zeros((S, A), jnp.int32)),
+            rng=keys,
+            cloud_macc=jnp.zeros((S, R), jnp.float32),
+            tick=jnp.zeros((S,), jnp.int32))
+
+    round_fn = jax.jit(jax.vmap(one_round, in_axes=(0, data_axes, 0)),
+                       donate_argnums=(0,))
+
+    # batched eval on the (S, N) cloud master — shared test set when every
+    # scenario references the same arrays
+    x_t, ax_x = _stack_or_share([r.test.x for r in group])
+    y_t, ax_y = _stack_or_share([r.test.y for r in group])
+    eval_fn = jax.jit(jax.vmap(
+        lambda v, x, y: mlp.accuracy(fspec.unravel(v), x, y),
+        in_axes=(0, ax_x, ax_y)))
+    eval_closed = lambda cloud: eval_fn(cloud, x_t, y_t)    # noqa: E731
+
+    mesh = sweep_mesh(S) if shard else None
+    if mesh is not None:
+        state = _shard_sweep(state, mesh)
+        dyn = _shard_sweep(dyn, mesh)
+        # stacked (S, ...) data blocks live sweep-sharded too; shared
+        # (in_axes=None) blocks stay replicated
+        data = {k: (_shard_sweep(v, mesh) if data_axes[k] == 0 else v)
+                for k, v in data.items()}
+
+    return SweepProgram(round_fn=round_fn, state=state, data=data, dyn=dyn,
+                        eval_fn=eval_closed, engine=engine, fspec=fspec,
+                        n_scenarios=S)
+
+
+def run_sweep(group: Sequence[ResolvedScenario], init_params, *,
+              loss_fn: Callable = mlp.loss_fn, shard: bool = True,
+              ) -> List[Dict[str, np.ndarray]]:
+    """Run one static-compatible group as a single compiled sweep; returns
+    per-scenario histories (same schema as ``run_simulation``'s; async
+    scenarios additionally record absorbed/pending mass)."""
+    prog = build_sweep(group, init_params, loss_fn=loss_fn, shard=shard)
+    s0 = group[0].spec
+    state = prog.state
+    accs, rounds = [], []
+    absorbed, pending = [], []
+    for r in range(s0.rounds):
+        if prog.engine == "async":
+            state, metrics = prog.round_fn(state, prog.data, prog.dyn)
+            absorbed.append(np.asarray(
+                jnp.sum(metrics["absorbed_mass"], axis=(1, 2))))   # (S,)
+            pending.append(np.asarray(metrics["pending_mass"]))    # (S,)
+        else:
+            state = prog.round_fn(state, prog.data, prog.dyn)
+        if r % s0.eval_every == 0 or r == s0.rounds - 1:
+            accs.append(np.asarray(prog.eval_fn(state.cloud_flat)))
+            rounds.append(r + 1)
+    acc_mat = np.stack(accs, axis=1)                        # (S, T)
+    out = []
+    for i in range(prog.n_scenarios):
+        h = {"round": np.asarray(rounds), "acc": acc_mat[i]}
+        if prog.engine == "async":
+            h["absorbed_mass"] = np.asarray([a[i] for a in absorbed])
+            h["pending_mass"] = np.asarray([p[i] for p in pending])
+        out.append(h)
+    return out
+
+
+def run_scenarios(specs_or_resolved: Sequence, init_params, *,
+                  loss_fn: Callable = mlp.loss_fn, shard: bool = True,
+                  max_sweep: int = 0) -> List[Dict[str, np.ndarray]]:
+    """Run a whole grid: group by ``static_key``, sweep every compatible
+    group as one compiled program, fall back to sequential execution for
+    singleton groups and non-sweepable engines.  Returns histories in
+    input order.
+
+    ``init_params``: one shared pytree, a per-scenario list, or a callable
+    ``spec -> pytree`` (e.g. the per-dataset pretrained model).
+    ``max_sweep`` > 0 chunks oversized groups (memory bound: the sweep
+    state is S× the single-scenario fleet).
+    """
+    resolved = [s.resolve() if isinstance(s, ScenarioSpec) else s
+                for s in specs_or_resolved]
+    if callable(init_params):
+        params_list = [init_params(r.spec) for r in resolved]
+    elif isinstance(init_params, (list, tuple)):
+        params_list = list(init_params)
+    else:
+        params_list = [init_params] * len(resolved)
+    if len(params_list) != len(resolved):
+        raise ValueError("need one init_params per scenario")
+
+    out: List[Optional[Dict[str, np.ndarray]]] = [None] * len(resolved)
+    for idx in group_indices(resolved):
+        chunks = ([idx] if not max_sweep else
+                  [idx[i:i + max_sweep]
+                   for i in range(0, len(idx), max_sweep)])
+        for chunk in chunks:
+            group = [resolved[i] for i in chunk]
+            if len(chunk) == 1 or group[0].spec.engine not in SWEEPABLE:
+                for i in chunk:
+                    _, hist = run_scenario(resolved[i], params_list[i],
+                                           loss_fn=loss_fn)
+                    out[i] = hist
+            else:
+                hists = run_sweep(group, [params_list[i] for i in chunk],
+                                  loss_fn=loss_fn, shard=shard)
+                for i, h in zip(chunk, hists):
+                    out[i] = h
+    return out

@@ -10,6 +10,11 @@ round (launch/h2fed_round.py) over synthetic Non-IID LM shards, with
 checkpointing and optional adaptive-mu orchestration (core/orchestrator).
 On CPU pass --devices to materialize host devices; on a real TPU slice the
 flag is unnecessary and --mesh should match the topology.
+
+``--scenario-json spec.json`` instead runs a declarative experiment
+scenario (core/scenario.ScenarioSpec, DESIGN.md §7) through the fedsim
+engines — any paper-figure cell, engine / partition / heterogeneity chosen
+by the spec.
 """
 import argparse
 import os
@@ -65,7 +70,46 @@ def _parse_args():
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario-json", default="", metavar="PATH",
+                    help="run a declarative ScenarioSpec (core/scenario, "
+                         "DESIGN.md §7) through the fedsim engines instead "
+                         "of the LM arch path — any paper-figure cell from "
+                         "the CLI")
+    ap.add_argument("--scenario-pretrain", action="store_true",
+                    help="with --scenario-json: run the spec's OEM "
+                         "pretrain stage first (the biased '68%' model) "
+                         "instead of a fresh init")
     return ap.parse_args()
+
+
+def _run_scenario_json(args):
+    """Run one declarative scenario end to end (engine chosen by the spec:
+    flat / tree / sharded / async; sharded uses the visible devices)."""
+    from pathlib import Path
+
+    import jax
+
+    from repro.configs.mnist_mlp import CONFIG as MLP_CFG
+    from repro.core.scenario import ScenarioSpec
+    from repro.fedsim.sweep import run_scenario
+    from repro.models import mlp
+
+    spec = ScenarioSpec.from_json(Path(args.scenario_json).read_text())
+    res = spec.resolve()
+    print(f"[scenario] {args.scenario_json}  cache_key={spec.cache_key}")
+    print(f"[scenario] engine={spec.engine} partition={spec.partition} "
+          f"A={spec.n_agents} R={spec.n_rsus} rounds={spec.rounds}")
+    params = mlp.init_params(MLP_CFG, jax.random.key(spec.seed))
+    if args.scenario_pretrain:
+        from repro.fedsim.pretrain import pretrain_to_target
+        params, pre_acc = pretrain_to_target(
+            params, res.pretrain_pool, res.test.x, res.test.y,
+            target_acc=spec.pretrain_target, seed=spec.seed)
+        print(f"[pretrain] biased OEM model: test acc {pre_acc:.3f}")
+    _, hist = run_scenario(res, params)
+    for r, a in zip(hist["round"], hist["acc"]):
+        print(f"[round {r:3d}] acc {a:.4f}")
+    print("[done]")
 
 
 def main():
@@ -74,6 +118,8 @@ def main():
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}")
+    if args.scenario_json:
+        return _run_scenario_json(args)
 
     import jax
     import jax.numpy as jnp

@@ -52,3 +52,25 @@ def test_train_adaptive_mu_flag(tmp_path):
     # the controller must have moved mu away from the base once csr_obs
     # was observed low
     assert "mu=(0.0" in out.stdout
+
+
+def test_train_scenario_json(tmp_path):
+    """--scenario-json runs a declarative ScenarioSpec (DESIGN.md §7)
+    through the fedsim engines — any figure cell from the CLI."""
+    from repro.core.scenario import ScenarioSpec
+    from repro.core.h2fed import H2FedParams
+    from repro.core.heterogeneity import HeterogeneityModel
+    spec = ScenarioSpec(n_agents=8, n_rsus=4, batch=8, n_train=400,
+                        n_test=100, partition="dirichlet", engine="async",
+                        hp=H2FedParams(lar=2, local_epochs=1),
+                        het=HeterogeneityModel(csr=0.8, max_delay=1,
+                                               delay_p=0.3),
+                        rounds=2)
+    path = tmp_path / "spec.json"
+    path.write_text(spec.to_json())
+    out = _run(["repro.launch.train", "--scenario-json", str(path)])
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert f"cache_key={spec.cache_key}" in out.stdout
+    assert "engine=async partition=dirichlet" in out.stdout
+    assert "[round   2]" in out.stdout
+    assert "[done]" in out.stdout

@@ -1,0 +1,125 @@
+"""ScenarioSpec: cache-key properties, resolution caching, serialization
+(DESIGN.md §7)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.h2fed import H2FedParams
+from repro.core.heterogeneity import HeterogeneityModel
+from repro.core.scenario import ScenarioSpec
+
+BASE = ScenarioSpec(n_agents=8, n_rsus=4, batch=8, n_train=400, n_test=100,
+                    rounds=2)
+
+# one admissible perturbation per field — the "cache_key changes iff a
+# resolved field changes" property walks every field through this table
+PERTURB = {
+    "n_agents": 16, "n_rsus": 2, "batch": 16,
+    "n_train": 500, "n_test": 120, "noise": 0.5,
+    "excluded_labels": (7, 8), "pretrain_frac": 0.2,
+    "pretrain_target": 0.5,
+    "partition": "dirichlet", "alpha": 1.0,
+    "hp": H2FedParams(mu1=0.123),
+    "het": HeterogeneityModel(csr=0.321),
+    "engine": "async", "fleet_dtype": "bfloat16", "fused": False,
+    "rsu_sharded": True,
+    "staleness_decay": 0.9, "schedule": "poly", "buffer_keep": 0.5,
+    "cloud_every": 3,
+    "rounds": 5, "eval_every": 2, "seed": 1, "sim_seed": 1,
+}
+
+
+class TestCacheKey:
+    def test_every_field_perturbation_changes_key(self):
+        fields = {f.name for f in dataclasses.fields(ScenarioSpec)}
+        assert fields == set(PERTURB), \
+            f"PERTURB table out of date: {fields ^ set(PERTURB)}"
+        base_key = BASE.cache_key
+        for name, val in PERTURB.items():
+            assert getattr(BASE, name) != val, name
+            assert BASE.replace(**{name: val}).cache_key != base_key, name
+
+    def test_equal_specs_share_key(self):
+        clone = ScenarioSpec(**{f.name: getattr(BASE, f.name)
+                                for f in dataclasses.fields(ScenarioSpec)})
+        assert clone.cache_key == BASE.cache_key
+
+    def test_partition_aliases_share_key(self):
+        """1 / "1" / "scenario_one" are the same recipe, not three caches."""
+        keys = {BASE.replace(partition=p).cache_key
+                for p in (1, "1", "scenario_one")}
+        assert len(keys) == 1
+
+    def test_dataset_key_ignores_experiment_knobs(self):
+        """Specs differing only in het/hp/engine share the pretrain."""
+        assert BASE.replace(
+            het=HeterogeneityModel(csr=0.2), engine="async",
+            hp=H2FedParams(mu1=0.5)).dataset_key == BASE.dataset_key
+
+    def test_dataset_key_tracks_seed(self):
+        """THE old pipeline-cache bug: a second seed must get its own key."""
+        assert BASE.replace(seed=1).dataset_key != BASE.dataset_key
+        assert BASE.replace(n_train=500).dataset_key != BASE.dataset_key
+
+
+class TestResolve:
+    def test_partition_cache_shares_across_het(self):
+        a = BASE.replace(het=HeterogeneityModel(csr=0.5)).resolve()
+        b = BASE.replace(het=HeterogeneityModel(csr=0.1)).resolve()
+        assert a.fed is b.fed
+
+    def test_seed_gets_own_data(self):
+        """Regression for the seed-ignoring cache: different seeds resolve
+        to different realizations."""
+        a, b = BASE.resolve(), BASE.replace(seed=1).resolve()
+        assert a.fed is not b.fed
+        assert not np.array_equal(a.fed.x, b.fed.x)
+        assert not np.array_equal(a.train.x, b.train.x)
+
+    def test_dirichlet_partition(self):
+        res = BASE.replace(partition="dirichlet", alpha=0.3).resolve()
+        assert res.fed.n_agents == BASE.n_agents
+        assert (res.fed.n_per_agent >= 1).all()
+        assert res.fed.rsu_assign.max() < BASE.n_rsus
+
+    def test_shapes_and_configs(self):
+        res = BASE.resolve()
+        assert res.fed.x.shape[0] == BASE.n_agents
+        assert res.test.x.shape[0] == BASE.n_test
+        cfg = res.cfg
+        assert (cfg.n_agents, cfg.n_rsus) == (8, 4)
+        assert cfg.seed == BASE.seed * 1000 + BASE.sim_seed
+
+    def test_static_key_splits_on_program_structure(self):
+        a = BASE.resolve()
+        assert a.static_key == BASE.replace(
+            het=HeterogeneityModel(csr=0.2)).resolve().static_key
+        assert a.static_key != BASE.replace(
+            hp=H2FedParams(lar=3)).resolve().static_key
+        assert a.static_key != BASE.replace(engine="async").resolve() \
+            .static_key
+
+    def test_validate_rejects_unknowns(self):
+        with pytest.raises(ValueError, match="unknown partition"):
+            BASE.replace(partition="nope").validate()
+        with pytest.raises(AssertionError):
+            BASE.replace(engine="warp").validate()
+
+
+class TestSerialization:
+    def test_json_round_trip(self):
+        spec = BASE.replace(engine="async", partition="dirichlet",
+                            staleness_decay=(0.5, 0.6, 0.7, 0.8),
+                            hp=H2FedParams(mu1=0.004, lar=3),
+                            het=HeterogeneityModel(csr=0.2, max_delay=2,
+                                                   delay_p=0.5))
+        back = ScenarioSpec.from_json(spec.to_json())
+        assert back == spec
+        assert back.cache_key == spec.cache_key
+
+    def test_from_dict_rejects_unknown_fields(self):
+        with pytest.raises(ValueError, match="unknown ScenarioSpec"):
+            ScenarioSpec.from_dict({"n_agents": 4, "warp_factor": 9})

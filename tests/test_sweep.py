@@ -1,0 +1,181 @@
+"""Vmapped multi-scenario sweep engine vs sequential runs (DESIGN.md §7).
+
+The hard contract: an S-scenario sweep is ONE jitted program (the sweep
+axis is visible in the compiled HLO) and matches S sequential
+``run_simulation`` calls to fp32 tolerance — for the flat engine, the
+semi-async engine (latencies + staleness buffers live), and across
+partitions (including Dirichlet).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.mnist_mlp import CONFIG as MLP_CFG
+from repro.core.h2fed import H2FedParams
+from repro.core.heterogeneity import HeterogeneityModel
+from repro.core.scenario import ScenarioSpec
+from repro.fedsim import sweep
+from repro.launch import hlo_analysis
+from repro.models import mlp
+
+BASE = ScenarioSpec(n_agents=8, n_rsus=4, batch=8, n_train=400, n_test=100,
+                    hp=H2FedParams(mu1=0.01, mu2=0.005, lar=2,
+                                   local_epochs=1, lr=0.1),
+                    het=HeterogeneityModel(csr=0.8, scd=1), rounds=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return mlp.init_params(MLP_CFG, jax.random.key(42))
+
+
+def _assert_matches_sequential(specs, params, atol=2e-5):
+    seq = [sweep.run_scenario(s, params)[1] for s in specs]
+    hists = sweep.run_scenarios(specs, params)
+    assert len(hists) == len(specs)
+    for a, b in zip(seq, hists):
+        np.testing.assert_array_equal(a["round"], b["round"])
+        np.testing.assert_allclose(a["acc"], b["acc"], atol=atol)
+    return seq, hists
+
+
+class TestFlatSweep:
+    def test_csr_grid_matches_sequential(self, params):
+        """The fig-2-shaped grid: csr × mu1 batched, shared dataset."""
+        specs = [BASE.replace(
+            het=dataclasses.replace(BASE.het, csr=c),
+            hp=dataclasses.replace(BASE.hp, mu1=m), sim_seed=s)
+            for (c, m, s) in ((1.0, 0.0, 0), (0.5, 0.01, 1), (0.2, 0.02, 2))]
+        _assert_matches_sequential(specs, params)
+
+    def test_seed_average_shares_data(self, params):
+        """Pure sim_seed sweep: no dynamic scalars, data unbatched."""
+        specs = [BASE.replace(sim_seed=s) for s in range(3)]
+        resolved = [s.resolve() for s in specs]
+        assert all(r.fed is resolved[0].fed for r in resolved)
+        prog = sweep.build_sweep(resolved, params)
+        assert prog.dyn == {}                      # nothing varies
+        assert prog.data["x"].ndim == 3            # (A, n, D), no S axis
+        _assert_matches_sequential(specs, params)
+
+    def test_dirichlet_partition_sweep(self, params):
+        """Sweep across partitions: scenario II vs Dirichlet stacks the
+        data blocks (same padded shape enforced via static_key grouping —
+        here they differ, so run_scenarios splits groups and still matches
+        sequential, order preserved)."""
+        specs = [BASE,
+                 BASE.replace(partition="dirichlet", alpha=0.5),
+                 BASE.replace(partition="dirichlet", alpha=0.5,
+                              het=dataclasses.replace(BASE.het, csr=0.5))]
+        _assert_matches_sequential(specs, params)
+
+    def test_sweep_axis_in_compiled_hlo(self, params):
+        """Acceptance: one jit trace whose params carry the leading S."""
+        specs = [BASE.replace(
+            het=dataclasses.replace(BASE.het, csr=c)) for c in (1.0, 0.5)]
+        prog = sweep.build_sweep([s.resolve() for s in specs], params)
+        txt = prog.round_fn.lower(prog.state, prog.data,
+                                  prog.dyn).compile().as_text()
+        shapes = hlo_analysis.param_shapes(txt).values()
+        n = prog.fspec.n
+        assert any(f"f32[2,8,{n}]" in v for v in shapes), sorted(shapes)
+
+    def test_dyn_scalars_only_batch_differing_fields(self):
+        specs = [BASE,
+                 BASE.replace(hp=dataclasses.replace(BASE.hp, mu1=0.02))]
+        dyn = sweep._dyn_scalars([s for s in specs])
+        assert set(dyn) == {"hp.mu1"}
+        assert dyn["hp.mu1"].shape == (2,)
+
+
+class TestAsyncSweep:
+    def test_async_sweep_matches_sequential(self, params):
+        """Semi-async case: in-flight buffers, staleness decay and the
+        decoupled cloud cadence all live; delay_p and mu1 batched."""
+        base = BASE.replace(
+            engine="async",
+            het=dataclasses.replace(BASE.het, max_delay=2, delay_p=0.5),
+            staleness_decay=0.6, buffer_keep=0.25, cloud_every=2,
+            hp=dataclasses.replace(BASE.hp, lar=3))
+        specs = [base.replace(
+            het=dataclasses.replace(base.het, delay_p=p),
+            hp=dataclasses.replace(base.hp, mu1=m))
+            for (p, m) in ((0.0, 0.0), (0.5, 0.01), (1.0, 0.02))]
+        seq, hists = _assert_matches_sequential(specs, params)
+        for a, b in zip(seq, hists):
+            np.testing.assert_allclose(a["absorbed_mass"],
+                                       b["absorbed_mass"], rtol=1e-5)
+            np.testing.assert_allclose(a["pending_mass"],
+                                       b["pending_mass"], rtol=1e-5)
+
+    def test_mixed_engine_grid_preserves_order(self, params):
+        """flat + async specs in one grid: separate groups, input order."""
+        specs = [BASE.replace(sim_seed=1), BASE.replace(engine="async"),
+                 BASE]
+        _assert_matches_sequential(specs, params)
+
+
+class TestSweepSharded:
+    def test_sweep_axis_over_devices(self, forced_devices_run):
+        """S=4 sweep laid over a 4-device ('sweep',) mesh (DESIGN.md §7
+        device-mapping table) still matches sequential runs."""
+        forced_devices_run("""
+            import dataclasses, numpy as np, jax
+            assert len(jax.devices()) == 4
+            from repro.core.scenario import ScenarioSpec
+            from repro.core.h2fed import H2FedParams
+            from repro.core.heterogeneity import HeterogeneityModel
+            from repro.configs.mnist_mlp import CONFIG
+            from repro.models import mlp
+            from repro.fedsim import sweep
+
+            base = ScenarioSpec(
+                n_agents=8, n_rsus=4, batch=8, n_train=400, n_test=100,
+                hp=H2FedParams(mu1=0.01, mu2=0.005, lar=2, local_epochs=1,
+                               lr=0.1),
+                het=HeterogeneityModel(csr=0.8, scd=1), rounds=2)
+            specs = [base.replace(
+                het=dataclasses.replace(base.het, csr=c), sim_seed=i)
+                for i, c in enumerate((1.0, 0.5, 0.2, 0.1))]
+            params = mlp.init_params(CONFIG, jax.random.key(0))
+            resolved = [s.resolve() for s in specs]
+            prog = sweep.build_sweep(resolved, params, shard=True)
+            assert "sweep" in str(prog.state.agent_flat.sharding)
+            hists = sweep.run_sweep(resolved, params, shard=True)
+            seq = [sweep.run_scenario(r, params)[1] for r in resolved]
+            for a, b in zip(seq, hists):
+                np.testing.assert_allclose(a["acc"], b["acc"], atol=2e-5)
+            print("SWEEP_SHARDED_OK")
+        """, devices=4)
+
+
+class TestEngineDispatch:
+    def test_all_engines_agree_through_specs(self, params):
+        """run_fed-style A/B across engines without editing any module:
+        the spec's engine/fleet_dtype knobs reach the engines (the old
+        run_fed hardwired the flat engine)."""
+        _, flat = sweep.run_scenario(BASE, params)
+        for engine, atol in (("sharded", 2e-5), ("tree", 2e-4)):
+            _, h = sweep.run_scenario(BASE.replace(engine=engine), params)
+            np.testing.assert_allclose(flat["acc"], h["acc"], atol=atol)
+        # bf16 fleet storage threads through and still learns the task
+        _, h16 = sweep.run_scenario(
+            BASE.replace(fleet_dtype="bfloat16"), params)
+        assert h16["acc"].shape == flat["acc"].shape
+
+
+class TestGrouping:
+    def test_group_split_on_static_key(self):
+        specs = [BASE, BASE.replace(engine="async"),
+                 BASE.replace(het=dataclasses.replace(BASE.het, csr=0.3))]
+        groups = sweep.group_indices([s.resolve() for s in specs])
+        assert sorted(map(sorted, groups)) == [[0, 2], [1]]
+
+    def test_non_sweepable_engine_rejected(self, params):
+        res = BASE.replace(engine="tree").resolve()
+        with pytest.raises(ValueError, match="not sweepable"):
+            sweep.build_sweep([res], params)
