@@ -10,10 +10,12 @@ Prints ``name,us_per_call,derived`` CSV rows for:
   async   — sync-vs-async round latency + 90%-disconnect convergence record
   topology — replicated vs RSU-sharded round latency at large R (2x4 mesh)
   sweep   — vmapped multi-scenario sweep vs sequential runs (DESIGN.md §7)
+  streaming — cohort-streamed host-fleet round vs resident + million-agent
+              fleet cell (DESIGN.md §8)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline]
                                                 [--json results/bench/bench.json]
-                                                [--summary BENCH_PR5.json]
+                                                [--summary BENCH_PR6.json]
 Env:    REPRO_BENCH_FULL=1 for the paper-scale (100 agents) runs.
 
 ``--json`` additionally writes every row (and any suite failures) to one
@@ -82,6 +84,11 @@ def bench_sweep():
     return sweep_bench.run()
 
 
+def bench_streaming():
+    from benchmarks import streaming_round
+    return streaming_round.run()
+
+
 SUITES = {
     "fig2": bench_fig2,
     "fig3": bench_fig3,
@@ -93,6 +100,7 @@ SUITES = {
     "async": bench_async,
     "topology": bench_topology,
     "sweep": bench_sweep,
+    "streaming": bench_streaming,
 }
 
 
@@ -138,6 +146,17 @@ def write_summary(path: Path, bench_dir: Path, since: float) -> None:
             for k in ("sweep_vs_sequential_wall",
                       "sweep_vs_sequential_round", "sweep_trace_count"):
                 summary[k] = rec.get(k)
+        elif name == "streaming_round":
+            merge(rec, "streaming_round")
+            summary["streaming_agents_per_s"] = rec.get("agents_per_s")
+            for k in ("streamed_equals_resident",
+                      "host_device_bytes_per_round",
+                      "peak_device_working_set_bytes",
+                      "working_set_bounded_by_chunk",
+                      "fleet_n_agents", "fleet_round_s",
+                      "fleet_agents_per_s", "fleet_host_store_bytes",
+                      "fleet_device_working_set_bytes"):
+                summary[k] = rec.get(k)
     path.write_text(json.dumps(summary, indent=1))
     print(f"[summary] {path}", file=sys.stderr)
 
@@ -150,7 +169,7 @@ def main() -> None:
                     help="also write rows + failures to one JSON record")
     ap.add_argument("--summary", default=None, metavar="PATH",
                     help="write a top-level perf summary (e.g. "
-                         "BENCH_PR5.json) distilled from the bench "
+                         "BENCH_PR6.json) distilled from the bench "
                          "records THIS run produced")
     args = ap.parse_args()
     t_start = time.time()

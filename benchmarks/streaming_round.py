@@ -1,0 +1,291 @@
+"""Cohort-streamed round benchmark (DESIGN.md §8) — the PR-6 story.
+
+Two cells:
+
+  equivalence/throughput — the SAME small-A scenario through the resident
+      ``engine="flat"`` round and the host-streamed round
+      (``fleet_store="host"``): asserts streamed == resident to fp32
+      tolerance, records steady-state agents/sec both ways (CI asserts
+      the streamed path keeps >= 0.7x of resident at small A, where the
+      python chunk loop is ALL overhead), the analytic host<->device
+      bytes/round, and the compiled chunk step's device working set at
+      two fleet sizes (must be equal — the bounded-working-set claim);
+
+  fleet — a fleet far beyond device residency for the real (A, N) MLP:
+      A = 1e6 agents (``REPRO_BENCH_FULL=1``; 100k at CI scale) on a tiny
+      linear task, the per-agent data a zero-copy ``np.broadcast_to``
+      view.  One streamed global round end-to-end, recording agents/sec
+      at scale and host-fleet vs device-working-set bytes.
+
+Standalone:
+  PYTHONPATH=src python -m benchmarks.streaming_round [--agents 64]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+from typing import List
+
+
+def _parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--agents", type=int, default=64)
+    ap.add_argument("--rsus", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--lar", type=int, default=2)
+    ap.add_argument("--n-train", type=int, default=32000)
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--fleet-agents", type=int, default=0,
+                    help="fleet-cell size (0 = 1e6 full / 100k CI)")
+    ap.add_argument("--out", default=os.environ.get("REPRO_RESULTS",
+                                                    "results") + "/bench")
+    return ap.parse_args()
+
+
+def _spec(args):
+    from repro.core.h2fed import H2FedParams
+    from repro.core.scenario import ScenarioSpec
+    return ScenarioSpec(
+        n_agents=args.agents, n_rsus=args.rsus, batch=16,
+        n_train=args.n_train, n_test=200,
+        hp=H2FedParams(mu1=0.01, mu2=0.005, lar=args.lar, local_epochs=1,
+                       lr=0.1),
+        rounds=args.rounds)
+
+
+def _interleaved_round_s(paths, n_rounds: int, reps: int = 3):
+    """Steady-state per-round seconds for each (step, state) path —
+    measured in alternating batches, best-of-``reps`` per path, so shared-
+    CPU noise hits both paths alike instead of whichever ran last."""
+    import jax
+    states, best = [], [float("inf")] * len(paths)
+    for step, state in paths:
+        state = step(step(state))            # compile + warmup
+        jax.block_until_ready(state.cloud_flat)
+        states.append(state)
+    for _ in range(reps):
+        for i, (step, _) in enumerate(paths):
+            t0 = time.perf_counter()
+            for _ in range(n_rounds):
+                states[i] = step(states[i])
+            jax.block_until_ready(states[i].cloud_flat)
+            best[i] = min(best[i], (time.perf_counter() - t0) / n_rounds)
+    return best
+
+
+def _chunk_step_footprint(round_fn, fed, fspec, n_rsus: int):
+    """Device bytes of the compiled chunk step (ShapeDtypeStruct lowering
+    — nothing is executed)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.launch.hlo_analysis import memory_footprint
+    plan = round_fn.plan
+    xs, ys = np.asarray(fed.x), np.asarray(fed.y)
+    S, R, n = jax.ShapeDtypeStruct, n_rsus, fspec.n
+    args = (S((R, n), jnp.float32), S((R,), jnp.float32),
+            S((R, n), fspec.storage_dtype), S((n,), jnp.float32),
+            S((plan.chunk,) + xs.shape[1:], xs.dtype),
+            S((plan.chunk,) + ys.shape[1:], ys.dtype),
+            S((plan.chunk,), jnp.int32),
+            S((plan.chunk,), jnp.float32),
+            S((plan.chunk,), jnp.int32))
+    return memory_footprint(round_fn.chunk_step, *args)
+
+
+def equivalence_cell(args) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs.mnist_mlp import CONFIG as MLP_CFG
+    from repro.core import flatten
+    from repro.fedsim import run_scenario
+    from repro.fedsim.simulator import init_flat_state, make_flat_global_round
+    from repro.fedsim.streaming import (init_stream_state,
+                                        make_streamed_flat_round,
+                                        streamed_transfer_bytes)
+    from repro.models import mlp
+
+    spec = _spec(args)
+    res = spec.resolve()
+    params = mlp.init_params(MLP_CFG, jax.random.key(0))
+    fspec = flatten.spec_of(params)
+
+    # -- streamed == resident (fp32 tol), through THE engine entry point --
+    st_res, h_res = run_scenario(res, params)
+    st_str, h_str = run_scenario(
+        spec.replace(fleet_store="host", chunk_agents=args.chunk), params)
+    np.testing.assert_allclose(h_str["acc"], h_res["acc"], rtol=0,
+                               atol=5e-5)
+    np.testing.assert_allclose(
+        np.asarray(st_str.cloud_flat),
+        np.asarray(flatten.spec_of(st_res.cloud_params)
+                   .ravel(st_res.cloud_params)), rtol=0, atol=1e-5)
+
+    # -- steady-state agents/sec: resident fused round vs streamed round --
+    resident_fn = make_flat_global_round(res.cfg, res.hp, res.het, res.fed,
+                                         fspec)
+    streamed_fn = make_streamed_flat_round(res.cfg, res.hp, res.het,
+                                           res.fed, fspec,
+                                           chunk_agents=args.chunk)
+    rs_resident, rs_streamed = _interleaved_round_s(
+        [(resident_fn, init_flat_state(res.cfg, fspec, params,
+                                       jax.random.key(res.cfg.seed))),
+         (streamed_fn, init_stream_state(res.cfg, fspec, params,
+                                         jax.random.key(res.cfg.seed)))],
+        args.rounds)
+
+    # -- bounded working set: chunk-step device bytes must not grow with A
+    fp_small = _chunk_step_footprint(streamed_fn, res.fed, fspec, args.rsus)
+    big = spec.replace(n_agents=3 * args.agents,
+                       n_train=3 * args.n_train).resolve()
+    fn_big = make_streamed_flat_round(big.cfg, big.hp, big.het, big.fed,
+                                      fspec, chunk_agents=args.chunk)
+    fp_big = _chunk_step_footprint(fn_big, big.fed, fspec, args.rsus)
+    bounded = (fp_small["total_bytes"] == fp_big["total_bytes"]
+               and fp_small["temp_bytes"] == fp_big["temp_bytes"])
+
+    xfer = streamed_transfer_bytes(streamed_fn.plan, fspec, spec.hp,
+                                   res.fed)
+    A = args.agents
+    return {
+        "bench": "streaming_round",
+        "n_agents": A, "n_rsus": args.rsus, "lar": args.lar,
+        "chunk_agents": args.chunk, "n_rounds": args.rounds,
+        "n_params": fspec.n,
+        "round_s": {"resident": rs_resident, "streamed": rs_streamed},
+        "agents_per_s": {"resident": A / max(rs_resident, 1e-12),
+                         "streamed": A / max(rs_streamed, 1e-12)},
+        "streamed_vs_resident_agents_per_s":
+            rs_resident / max(rs_streamed, 1e-12),
+        "streamed_equals_resident": True,     # the asserts above passed
+        "bytes_per_round": {"streamed_h2d": xfer["h2d"],
+                            "streamed_d2h": xfer["d2h"]},
+        "host_device_bytes_per_round": xfer["total"],
+        "peak_device_working_set_bytes": fp_small["total_bytes"],
+        "working_set_bounded_by_chunk": bounded,
+    }
+
+
+# -- the fleet cell: one streamed round over a million-agent host fleet --
+
+_FLEET_D, _FLEET_C, _FLEET_S = 16, 4, 4     # features, classes, samples
+
+
+def _linear_loss(params, x, y):
+    import jax
+    import jax.numpy as jnp
+    logits = x @ params["w"] + params["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def fleet_cell(args) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.core import flatten
+    from repro.core.h2fed import H2FedParams
+    from repro.core.heterogeneity import HeterogeneityModel
+    from repro.data.partition import FederatedData
+    from repro.fedsim.simulator import SimConfig
+    from repro.fedsim.streaming import (init_stream_state,
+                                        make_streamed_flat_round)
+
+    full = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+    A = args.fleet_agents or (1_000_000 if full else 100_000)
+    R, chunk = 16, 16_384
+    rng = np.random.default_rng(0)
+    # every agent sees the same tiny shard — a zero-copy broadcast view,
+    # so the host cost is the FLEET (A, N) buffer, not the data
+    x1 = rng.normal(size=(1, _FLEET_S, _FLEET_D)).astype(np.float32)
+    y1 = rng.integers(0, _FLEET_C, size=(1, _FLEET_S)).astype(np.int32)
+    fed = FederatedData(
+        x=np.broadcast_to(x1, (A, _FLEET_S, _FLEET_D)),
+        y=np.broadcast_to(y1, (A, _FLEET_S)),
+        n_per_agent=np.broadcast_to(np.int32(_FLEET_S), (A,)),
+        rsu_assign=(np.arange(A, dtype=np.int32) % R))
+
+    cfg = SimConfig(n_agents=A, n_rsus=R, batch=_FLEET_S, seed=0)
+    hp = H2FedParams(mu1=0.01, mu2=0.005, lar=1, local_epochs=1, lr=0.1)
+    het = HeterogeneityModel(csr=1.0)
+    params = {"w": np.zeros((_FLEET_D, _FLEET_C), np.float32),
+              "b": np.zeros((_FLEET_C,), np.float32)}
+    fspec = flatten.spec_of(jax.tree.map(jax.numpy.asarray, params))
+
+    round_fn = make_streamed_flat_round(cfg, hp, het, fed, fspec,
+                                        _linear_loss, chunk_agents=chunk)
+    state = init_stream_state(cfg, fspec, params, jax.random.key(0))
+    fp = _chunk_step_footprint(round_fn, fed, fspec, R)
+
+    t0 = time.perf_counter()
+    state = round_fn(state)
+    jax.block_until_ready(state.cloud_flat)
+    wall = time.perf_counter() - t0
+    assert np.isfinite(np.asarray(state.cloud_flat)).all()
+
+    return {
+        "fleet_n_agents": A,
+        "fleet_chunk_agents": chunk,
+        "fleet_n_chunks": round_fn.plan.n_chunks,
+        "fleet_round_s": wall,
+        "fleet_agents_per_s": A / max(wall, 1e-12),
+        "fleet_host_store_bytes": state.store.nbytes,
+        "fleet_device_working_set_bytes": fp["total_bytes"],
+    }
+
+
+def _csv_rows(rec: dict) -> List[str]:
+    from benchmarks.common import csv_row
+    return [
+        csv_row("streaming_round/resident", rec["round_s"]["resident"]
+                * 1e6, f"A{rec['n_agents']} "
+                f"{rec['agents_per_s']['resident']:.0f} agents/s"),
+        csv_row("streaming_round/streamed", rec["round_s"]["streamed"]
+                * 1e6, f"chunk{rec['chunk_agents']} "
+                f"{rec['agents_per_s']['streamed']:.0f} agents/s, "
+                f"ratio={1 / rec['streamed_vs_resident_agents_per_s']:.2f}"),
+        csv_row("streaming_round/h2d+d2h",
+                rec["host_device_bytes_per_round"],
+                "analytic host<->device bytes/round"),
+        csv_row("streaming_round/fleet", rec["fleet_round_s"] * 1e6,
+                f"A{rec['fleet_n_agents']} host fleet "
+                f"{rec['fleet_host_store_bytes'] / 1e6:.0f}MB, device "
+                f"{rec['fleet_device_working_set_bytes'] / 1e6:.1f}MB, "
+                f"{rec['fleet_agents_per_s']:.0f} agents/s"),
+    ]
+
+
+def _record(args) -> dict:
+    rec = equivalence_cell(args)
+    rec.update(fleet_cell(args))
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / "streaming_round.json"
+    path.write_text(json.dumps(rec, indent=1))
+    print(f"[json] {path}", file=sys.stderr)
+    return rec
+
+
+def run() -> List[str]:
+    """Harness entry (benchmarks.run --only streaming): defaults only —
+    the harness owns argv."""
+    args = argparse.Namespace(
+        agents=64, rsus=4, rounds=3, lar=2, n_train=32000, chunk=32,
+        fleet_agents=0,
+        out=os.environ.get("REPRO_RESULTS", "results") + "/bench")
+    return _csv_rows(_record(args))
+
+
+def main():
+    for row in _csv_rows(_record(_parse_args())):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

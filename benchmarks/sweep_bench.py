@@ -9,8 +9,8 @@ Runs the SAME 4-point CSR grid two ways:
 
 Records total wall (compile included — the number a figure grid actually
 pays), steady-state per-round latency (compile excluded), and the jit
-trace count into the BENCH json flow (``BENCH_PR5.json`` asserts the
-sweep is ≥1.3× faster wall-clock in CI).
+trace count into the BENCH json flow (the ``--summary`` record asserts
+the sweep is ≥1.3× faster wall-clock in CI).
 
 Standalone:
   PYTHONPATH=src python -m benchmarks.sweep_bench [--rounds 3] [--agents 16]

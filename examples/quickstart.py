@@ -2,44 +2,49 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds the paper's pipeline at miniature scale: a synthetic 10-class task,
-an OEM pre-training pool with labels {7,8,9} excluded (the deliberately
-biased "68%" model), then a federated fleet of 20 traffic agents under 4
-RSUs running the H²-Fed hierarchical round with dual proximal terms under
-bad communication (CSR = 30%).
+The whole experiment is ONE declarative ``ScenarioSpec`` (core/scenario):
+a synthetic 10-class task, an OEM pre-training pool with labels {7,8,9}
+excluded (the deliberately biased "68%" model), a federated fleet of 20
+traffic agents under 4 RSUs (Non-IID Scenario II), and the H²-Fed
+hierarchical round with dual proximal terms under bad communication
+(CSR = 30%).  ``fedsim.run_scenario`` is the single entry point for every
+engine — ``engine="async"`` / ``"sharded"`` or cohort streaming
+(``fleet_store="host"``) are one-field changes to the spec.
 """
 import jax
 
 from repro.configs.mnist_mlp import CONFIG as MLP_CFG
 from repro.core.baselines import h2fed
 from repro.core.heterogeneity import HeterogeneityModel
-from repro.data.partition import pretrain_split, scenario_two
-from repro.data.synthetic import mnist_class_task
-from repro.fedsim.pretrain import pretrain_to_target
-from repro.fedsim.simulator import SimConfig, run_simulation
+from repro.core.scenario import ScenarioSpec
+from repro.fedsim import pretrain_to_target, run_scenario
 from repro.models import mlp
 
 
 def main():
-    # 1. dataset + OEM pre-training pool (labels 7-9 excluded -> biased model)
-    train, test = mnist_class_task(n_train=6_000, n_test=1_000, seed=0)
-    pre_ds, fed_pool = pretrain_split(train, excluded_labels=[7, 8, 9],
-                                      frac=0.25, seed=0)
-    params = mlp.init_params(MLP_CFG, jax.random.key(0))
-    pre_params, pre_acc = pretrain_to_target(params, pre_ds, test.x, test.y,
-                                             target_acc=0.62, max_epochs=10)
+    # 1. the experiment cell: dataset + biased-pretrain recipe + partition
+    #    + framework / heterogeneity knobs + engine choice, in one spec
+    hp = h2fed(mu1=0.001, mu2=0.005, lar=4, lr=0.1)
+    spec = ScenarioSpec(
+        n_agents=20, n_rsus=4, batch=32,
+        n_train=6_000, n_test=1_000,
+        excluded_labels=(7, 8, 9), pretrain_frac=0.25,
+        pretrain_target=0.62,
+        partition="scenario_two",
+        hp=hp, het=HeterogeneityModel(csr=0.3, scd=1, lar=hp.lar),
+        rounds=10)
+    res = spec.resolve()
+
+    # 2. OEM pre-training on the label-censored pool -> the biased model
+    params = mlp.init_params(MLP_CFG, jax.random.key(spec.seed))
+    pre_params, pre_acc = pretrain_to_target(
+        params, res.pretrain_pool, res.test.x, res.test.y,
+        target_acc=spec.pretrain_target, max_epochs=10)
     print(f"pre-trained (biased) model accuracy: {pre_acc:.3f}")
 
-    # 2. public fleet: 20 agents / 4 RSUs, Non-IID across agents (Scenario II)
-    fed = scenario_two(fed_pool, n_agents=20, n_rsus=4, seed=0)
-
-    # 3. H²-Fed: dual proximal terms + hierarchical pre-aggregation
-    hp = h2fed(mu1=0.001, mu2=0.005, lar=4, lr=0.1)
-    het = HeterogeneityModel(csr=0.3, scd=1, lar=hp.lar)
-
-    cfg = SimConfig(n_agents=20, n_rsus=4, batch=32)
-    _, hist = run_simulation(cfg, hp, het, fed, pre_params, n_rounds=10,
-                             x_test=test.x, y_test=test.y)
+    # 3. H²-Fed enhancement: dual proximal terms + hierarchical
+    #    pre-aggregation, through THE engine entry point
+    _, hist = run_scenario(res, pre_params)
     for r, a in zip(hist["round"], hist["acc"]):
         print(f"  global round {r:2d}: test acc {a:.3f}")
     print(f"enhanced: {pre_acc:.3f} -> {hist['acc'][-1]:.3f} "

@@ -1,13 +1,15 @@
-"""Serve the federated global model: batched KV-cache decoding.
+"""Train with H²-Fed, then serve the federated global model.
 
-    PYTHONPATH=src python examples/serve_demo.py [--arch qwen3-0.6b] \
-        [--batch 4] [--prompt-len 16] [--gen 24]
+    PYTHONPATH=src python examples/serve_demo.py [--rounds 6] \
+        [--fleet-store host --chunk-agents 8] [--batch 256]
 
 After H²-Fed training the cloud model is an ordinary dense checkpoint —
-serving needs no federation logic.  This demo runs the serve path used by
-the decode_32k / long_500k dry-run shapes: batched prefill to build the KV
-cache (per-arch: GQA cache, MLA compressed cache, SSM/xLSTM constant
-state), then token-by-token greedy decode via ``M.decode_step``.
+serving needs no federation logic.  The demo runs one declarative
+``ScenarioSpec`` through ``fedsim.run_scenario`` (pass
+``--fleet-store host`` to run the cohort-streamed engine, the
+million-agent path at toy scale; DESIGN.md §8), unravels the cloud
+master once, and serves batched classification requests with latency
+stats.
 """
 from __future__ import annotations
 
@@ -18,65 +20,75 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.registry import ARCH_IDS, get_reduced_config
-from repro.models import model as M
+from repro.configs.mnist_mlp import CONFIG as MLP_CFG
+from repro.core import flatten
+from repro.core.heterogeneity import HeterogeneityModel
+from repro.core.scenario import ScenarioSpec
+from repro.fedsim import run_scenario
+from repro.models import mlp
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=256,
+                    help="serve-side request batch size")
+    ap.add_argument("--fleet-store", default="device",
+                    choices=("device", "host"),
+                    help="'host' streams the (A, N) fleet from host memory "
+                         "in cohort chunks (fedsim/streaming)")
+    ap.add_argument("--chunk-agents", type=int, default=8,
+                    help="agents per streamed chunk (with "
+                         "--fleet-store host)")
     args = ap.parse_args()
 
-    cfg = get_reduced_config(args.arch)
-    if cfg.encoder.kind == "vision":
-        raise SystemExit("serve_demo drives text decode; pick a non-VLM arch")
-    params = M.init_params(cfg, jax.random.key(0))
-    rng = np.random.default_rng(0)
-    B, Sp = args.batch, args.prompt_len
-    max_len = Sp + args.gen
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, Sp)), jnp.int32)
-    memory = None
-    if cfg.encoder.kind == "audio":
-        memory = jnp.asarray(rng.standard_normal(
-            (B, cfg.encoder.n_positions, cfg.encoder.d_embed)), jnp.float32)
-
-    # --- prefill: run the prompt through decode_step token-by-token into the
-    # cache (same numerics as bulk prefill; see test_decode_matches_prefill)
-    cache = M.init_cache(cfg, B, max_len)
-    decode = jax.jit(lambda p, c, t, pos: M.decode_step(
-        cfg, p, c, t, pos, memory=memory))
-
+    # --- train: one declarative cell through THE engine entry point
+    spec = ScenarioSpec(
+        n_agents=24, n_rsus=4, batch=32, n_train=4_000, n_test=800,
+        het=HeterogeneityModel(csr=0.5),
+        fleet_store=args.fleet_store,
+        chunk_agents=(args.chunk_agents if args.fleet_store == "host"
+                      else 0),
+        rounds=args.rounds)
+    res = spec.resolve()
     t0 = time.perf_counter()
-    logits = None
-    for t in range(Sp):
-        logits, cache = decode(params, cache, prompts[:, t:t + 1],
-                               jnp.full((B,), t, jnp.int32))
-    t_prefill = time.perf_counter() - t0
+    state, hist = run_scenario(res)
+    t_train = time.perf_counter() - t0
+    print(f"[train] engine={spec.engine} fleet_store={spec.fleet_store} | "
+          f"{spec.rounds} rounds in {t_train:.2f}s | "
+          f"final acc {hist['acc'][-1]:.3f}")
 
-    # --- greedy decode of `gen` new tokens, batched
-    out_tokens = []
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    t0 = time.perf_counter()
-    for t in range(Sp, max_len):
-        out_tokens.append(np.asarray(tok[:, 0]))
-        logits, cache = decode(params, cache, tok,
-                               jnp.full((B,), t, jnp.int32))
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    t_decode = time.perf_counter() - t0
+    # --- the cloud master is a dense checkpoint: pytree directly from the
+    # resident engines, one unravel from the streamed flat buffer
+    if hasattr(state, "cloud_params"):
+        params = state.cloud_params
+    else:
+        fspec = flatten.spec_of(
+            mlp.init_params(MLP_CFG, jax.random.key(spec.seed)))
+        params = fspec.unravel(state.cloud_flat)
 
-    gen = np.stack(out_tokens, axis=1)
-    print(f"[arch] {args.arch} (reduced) | batch {B} | cache len {max_len}")
-    print(f"[prefill] {Sp} tokens in {t_prefill:.2f}s")
-    print(f"[decode]  {args.gen} tokens in {t_decode:.2f}s "
-          f"({B * args.gen / max(t_decode, 1e-9):.1f} tok/s batched)")
-    for b in range(min(B, 2)):
-        print(f"  request {b}: prompt={np.asarray(prompts[b])[:8]}... "
-              f"-> generated={gen[b][:12]}...")
-    assert np.isfinite(np.asarray(logits, np.float32)).all()
-    print("[ok] all logits finite; cache round-trip consistent")
+    # --- serve batched classification requests
+    predict = jax.jit(lambda p, x: jnp.argmax(mlp.forward(p, x), axis=-1))
+    B = args.batch
+    x, y = np.asarray(res.test.x), np.asarray(res.test.y)
+    reqs = [x[i:i + B] for i in range(0, len(x), B)]
+    preds, lat = [], []
+    _ = predict(params, jnp.asarray(reqs[0]))       # warm the compile cache
+    for xb in reqs:
+        t0 = time.perf_counter()
+        pb = np.asarray(predict(params, jnp.asarray(xb)))
+        lat.append(time.perf_counter() - t0)
+        preds.append(pb)
+    pred = np.concatenate(preds)
+    lat_ms = np.asarray(lat) * 1e3
+    print(f"[serve] {len(x)} requests in {len(reqs)} batches of {B} | "
+          f"acc {float((pred == y).mean()):.3f}")
+    print(f"[serve] latency/batch: mean {lat_ms.mean():.2f}ms "
+          f"p50 {np.percentile(lat_ms, 50):.2f}ms "
+          f"max {lat_ms.max():.2f}ms "
+          f"({len(x) / (lat_ms.sum() / 1e3):.0f} req/s)")
+    assert np.isfinite(lat_ms).all() and pred.shape == y.shape
+    print("[ok] federated checkpoint served with plain dense inference")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,172 @@
+"""Fleet parameter storage: where the (A, N) agent rows live (DESIGN.md §8).
+
+The resident engines hold the whole fleet as one device ``(A, N)`` buffer,
+so fleet size is HBM-bound — the opposite of the paper's participation
+model, where a CSR-sized cohort of a huge connected fleet is active per
+round.  A ``FleetStore`` abstracts the storage choice:
+
+  * ``DeviceFleetStore`` — today's resident buffer, the unchanged fast
+    path: gather/scatter are O(chunk) slices of a device array.
+  * ``HostFleetStore`` — the fleet lives in host (numpy) memory in the
+    ``FlatSpec`` STORAGE dtype (fp32 | bf16, DESIGN.md §3; bf16 rows use
+    ``ml_dtypes.bfloat16``, numpy's bridge dtype for jax bf16 arrays).
+    Only the round's cohort chunks are gathered to device by the
+    cohort-streamed engines (fedsim/streaming), so the device working set
+    is O(chunk · N) — independent of A.  This is what makes A=1e6 fleets
+    runnable on fixed HBM.
+
+Stores are plain Python objects and never cross a jit boundary: engines
+``gather`` a chunk, ``jax.device_put`` it, run the jitted chunk program,
+and ``scatter`` results back — the store is the host side of the
+double-buffered transfer pipeline.  ``scatter(..., where=)`` supports the
+semi-async engines' row-masked writes (busy agents keep their rows) without
+a read-modify-write gather of the old rows.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FLEET_STORES = ("device", "host")
+
+
+def resolve_fleet_store(name: Optional[str]) -> str:
+    """Canonical fleet-store spelling from a CLI/spec value."""
+    if name is None:
+        return "device"
+    if name not in FLEET_STORES:
+        raise ValueError(f"unknown fleet store {name!r} "
+                         f"(want one of {FLEET_STORES})")
+    return name
+
+
+def np_storage_dtype(storage_dtype) -> np.dtype:
+    """The numpy dtype holding host-side fleet rows: bf16 storage maps to
+    ``ml_dtypes.bfloat16`` (a jax dependency — numpy itself has no native
+    bfloat16), everything else passes through."""
+    dt = jnp.dtype(storage_dtype)
+    if dt == jnp.dtype(jnp.bfloat16):
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(dt)
+
+
+class DeviceFleetStore:
+    """The resident (A, N) device buffer behind the FleetStore interface.
+
+    ``gather`` returns device rows directly (``device_put`` on them is a
+    no-op), ``scatter`` is a functional dynamic-update-slice — the store
+    rebinds its buffer, matching the donated-buffer discipline of the
+    resident engines."""
+
+    kind = "device"
+
+    def __init__(self, buffer: jax.Array):
+        self._buf = buffer
+
+    @classmethod
+    def broadcast(cls, vec: jax.Array, n_agents: int,
+                  storage_dtype) -> "DeviceFleetStore":
+        row = jnp.asarray(vec).astype(storage_dtype)
+        # materialized (not a broadcast view) so scatter can donate rows
+        return cls(jnp.tile(row, (n_agents, 1)))
+
+    @property
+    def n_agents(self) -> int:
+        return int(self._buf.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self._buf.shape[1])
+
+    @property
+    def dtype(self):
+        return self._buf.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return int(self._buf.size * self._buf.dtype.itemsize)
+
+    def gather(self, lo: int, hi: int):
+        return jax.lax.dynamic_slice_in_dim(self._buf, lo, hi - lo, axis=0)
+
+    def scatter(self, lo: int, rows: jax.Array, where=None) -> None:
+        rows = rows.astype(self._buf.dtype)
+        if where is not None:
+            cur = self.gather(lo, lo + rows.shape[0])
+            rows = jnp.where(jnp.asarray(where)[:, None], rows, cur)
+        self._buf = jax.lax.dynamic_update_slice_in_dim(
+            self._buf, rows, lo, axis=0)
+
+    def snapshot(self) -> jax.Array:
+        return self._buf
+
+
+class HostFleetStore:
+    """The fleet as one host numpy (A, N) array in the storage dtype.
+
+    ``gather`` returns a host view (the caller ``device_put``s it as part
+    of the streamed round's double-buffered pipeline); ``scatter`` copies
+    device rows back with an optional row mask.  Host RAM bounds the fleet;
+    the device never sees more than a chunk."""
+
+    kind = "host"
+
+    def __init__(self, buffer: np.ndarray):
+        self._buf = buffer
+
+    @classmethod
+    def broadcast(cls, vec, n_agents: int, storage_dtype) -> "HostFleetStore":
+        row = np.asarray(vec).astype(np_storage_dtype(storage_dtype))
+        buf = np.empty((n_agents, row.shape[-1]), dtype=row.dtype)
+        buf[:] = row
+        return cls(buf)
+
+    @classmethod
+    def zeros(cls, n_agents: int, n: int, storage_dtype) -> "HostFleetStore":
+        return cls(np.zeros((n_agents, n), dtype=np_storage_dtype(
+            storage_dtype)))
+
+    @property
+    def n_agents(self) -> int:
+        return int(self._buf.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self._buf.shape[1])
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self._buf.dtype)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self._buf.nbytes)
+
+    def gather(self, lo: int, hi: int) -> np.ndarray:
+        return self._buf[lo:hi]
+
+    def scatter(self, lo: int, rows, where=None) -> None:
+        rows = np.asarray(rows)          # blocks until the rows are ready
+        dst = self._buf[lo:lo + rows.shape[0]]
+        if where is None:
+            np.copyto(dst, rows.astype(dst.dtype))
+        else:
+            np.copyto(dst, rows.astype(dst.dtype),
+                      where=np.asarray(where)[:, None])
+
+    def snapshot(self) -> jax.Array:
+        """The whole fleet as ONE device array — an eval/test boundary for
+        small fleets; at streaming scale callers must stay chunked."""
+        return jnp.asarray(self._buf)
+
+
+def make_fleet_store(kind: str, vec, n_agents: int, storage_dtype):
+    """Build the fleet rows store with every row initialized to ``vec``."""
+    kind = resolve_fleet_store(kind)
+    if kind == "host":
+        return HostFleetStore.broadcast(vec, n_agents, storage_dtype)
+    return DeviceFleetStore.broadcast(vec, n_agents, storage_dtype)

@@ -87,6 +87,11 @@ class ScenarioSpec:
     fleet_dtype: str = "float32"      # fleet-buffer storage (DESIGN.md §3)
     fused: bool = True                # one-pass aggregate-and-blend rounds
     rsu_sharded: bool = False         # sharded engine mode (DESIGN.md §4)
+    # cohort streaming (fedsim/streaming, DESIGN.md §8): where the (A, N)
+    # fleet rows live, and the streamed chunk size (0 = resident when
+    # fleet_store="device", auto chunk otherwise)
+    fleet_store: str = "device"       # device | host
+    chunk_agents: int = 0
     # semi-async knobs (engine="async"; fedsim.async_engine.AsyncConfig)
     staleness_decay: Union[float, Tuple[float, ...]] = 0.5
     schedule: str = "exp"
@@ -109,6 +114,14 @@ class ScenarioSpec:
         self.hp.validate(), self.het.validate()
         assert self.engine in ("flat", "tree", "sharded", "async"), \
             f"unknown engine {self.engine!r}"
+        from repro.core.fleet_store import resolve_fleet_store
+        resolve_fleet_store(self.fleet_store)
+        assert self.chunk_agents >= 0
+        if self.fleet_store != "device" or self.chunk_agents:
+            assert self.engine in ("flat", "async"), \
+                (f"cohort streaming (fleet_store={self.fleet_store!r}, "
+                 f"chunk_agents={self.chunk_agents}) requires engine "
+                 f"'flat'|'async', got {self.engine!r}")
         assert self.schedule in ("exp", "poly")
         assert self.cloud_every >= 0
         assert self.rounds >= 1 and self.eval_every >= 1
@@ -247,8 +260,10 @@ class ResolvedScenario:
         scalars (csr/fsr/scd/delay_p, μ1/μ2/lr) the sweep batches."""
         s = self.spec
         return (s.n_agents, s.n_rsus, s.batch,
-                tuple(self.fed.x.shape), tuple(self.test.x.shape),
+                tuple(self.fed.x.shape),
+                tuple(self.test.x.shape) if self.test is not None else None,
                 s.engine, s.fleet_dtype, s.fused, s.rsu_sharded,
+                s.fleet_store, s.chunk_agents,
                 s.hp.lar, s.hp.local_epochs, s.hp.n_layers,
                 s.het.max_delay,
                 s.staleness_decay, s.schedule, s.buffer_keep, s.cloud_every,

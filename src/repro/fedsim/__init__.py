@@ -6,3 +6,9 @@ from repro.fedsim.async_engine import (AsyncConfig, AsyncSimState,  # noqa: F401
                                        make_async_global_round,
                                        run_async_simulation)
 from repro.fedsim.pretrain import pretrain_to_target, train_centralized  # noqa: F401
+# THE engine entry points (DESIGN.md §8): one scenario / a whole grid.
+# run_simulation / run_async_simulation / run_sharded_simulation above are
+# deprecated wrappers over run_scenario.
+from repro.fedsim.sweep import (adhoc_scenario, run_scenario,  # noqa: F401
+                                run_scenarios)
+from repro.fedsim.streaming import run_streamed_simulation  # noqa: F401

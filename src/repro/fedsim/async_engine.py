@@ -55,6 +55,7 @@ tolerance — in both the replicated and the RSU-sharded layout.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
@@ -607,18 +608,47 @@ def run_async_simulation(cfg: SimConfig, hp: H2FedParams,
                          fleet_dtype=None,
                          fused: bool = True,
                          ) -> Tuple[AsyncSimState, Dict[str, np.ndarray]]:
-    """Run ``n_rounds`` semi-async global rounds; returns final state +
-    history (accuracy curve plus per-round absorbed/pending mass so the
-    straggler economy is observable).  ``fedsim.simulator.run_simulation``
-    dispatches here for ``engine="async"``.  Passing an ``rsu_sharded``
-    ``HierarchyTopology`` runs the tick loop RSU-sharded over its mesh
-    (the returned state is converted back to the original agent order).
-    ``fleet_dtype`` sets the (A, N)/(R, N) storage dtype (DESIGN.md §3);
-    ``fused=False`` keeps the multi-pass tick program (replicated engine
-    only) for A/B benchmarking.
+    """DEPRECATED: use ``fedsim.run_scenario`` with an
+    ``engine="async"`` ``ScenarioSpec`` — the semi-async knobs (staleness
+    schedule, buffer keep, cloud cadence) are spec fields (DESIGN.md §8).
+
+    This wrapper builds an ad-hoc scenario around the pre-built arrays and
+    delegates; numerics are unchanged (equivalence test-pinned in
+    tests/test_api.py).  ``topo`` passes through to the RSU-sharded tick
+    loop.
     """
+    warnings.warn(
+        "run_async_simulation is deprecated; use fedsim.run_scenario with "
+        "an engine='async' ScenarioSpec (async knobs are spec fields)",
+        DeprecationWarning, stacklevel=2)
+    from repro.fedsim import sweep
+    res = sweep.adhoc_scenario(
+        cfg, hp, het, fed, n_rounds=n_rounds, engine="async",
+        fleet_dtype=fleet_dtype, fused=fused, async_cfg=acfg,
+        x_test=x_test, y_test=y_test)
+    return sweep.run_scenario(res, init_params, loss_fn=loss_fn,
+                              eval_fn=eval_fn, topo=topo)
+
+
+def _run_async(res, init_params: PyTree, *,
+               loss_fn: Callable = mlp.loss_fn,
+               eval_fn: Optional[Callable] = None,
+               topo: Optional[HierarchyTopology] = None,
+               ) -> Tuple[AsyncSimState, Dict[str, np.ndarray]]:
+    """``run_scenario``'s semi-async dispatch target: run the scenario's
+    rounds through the tick engine; history carries the accuracy curve
+    plus per-round absorbed/pending mass so the straggler economy is
+    observable.  A ``topo`` (rsu-sharded HierarchyTopology) runs the tick
+    loop sharded over its mesh, converting agent order on entry/exit."""
+    s = res.spec
+    cfg, hp, het, fed = res.cfg, s.hp, s.het, res.fed
+    n_rounds, fleet_dtype, fused = s.rounds, s.fleet_dtype, s.fused
+    x_test = res.test.x if res.test is not None else None
+    y_test = res.test.y if res.test is not None else None
     hp.validate(), het.validate()
-    acfg = (acfg or AsyncConfig()).validate()
+    acfg = AsyncConfig(staleness_decay=s.staleness_decay,
+                       schedule=s.schedule, buffer_keep=s.buffer_keep,
+                       cloud_every=s.cloud_every).validate()
     key = jax.random.key(cfg.seed)
     spec = flatten.spec_of(
         init_params, storage_dtype=flatten.resolve_storage_dtype(fleet_dtype))

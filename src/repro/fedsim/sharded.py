@@ -37,6 +37,7 @@ devices the way launch/dryrun.py does).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Dict, Tuple
 
 import jax
@@ -296,12 +297,39 @@ def run_sharded_simulation(cfg: SimConfig, hp: H2FedParams,
                            loss_fn: Callable = mlp.loss_fn,
                            fleet_dtype=None,
                            ) -> Tuple[FlatSimState, Dict[str, np.ndarray]]:
-    """Sharded twin of ``run_simulation``: same rounds, agents partitioned
-    over the mesh; unravel happens only at the eval boundary.  The returned
-    state is in the ORIGINAL agent order in both modes (the RSU-sharded
-    rounds run pod-block-permuted internally).  ``fleet_dtype`` sets the
-    fleet-buffer storage dtype — bf16 also halves the psum'd numerator /
-    cross-pod cloud collective bytes (DESIGN.md §3)."""
+    """DEPRECATED: use ``fedsim.run_scenario`` with an
+    ``engine="sharded"`` ``ScenarioSpec`` (``rsu_sharded`` is a spec
+    field; pass a custom ``mesh`` via ``run_scenario(..., mesh=)``).
+
+    This wrapper builds an ad-hoc scenario around the pre-built arrays and
+    delegates; numerics are unchanged (DESIGN.md §8)."""
+    warnings.warn(
+        "run_sharded_simulation is deprecated; use fedsim.run_scenario "
+        "with an engine='sharded' ScenarioSpec",
+        DeprecationWarning, stacklevel=2)
+    from repro.fedsim import sweep
+    res = sweep.adhoc_scenario(
+        cfg, hp, het, fed, n_rounds=n_rounds, engine="sharded",
+        fleet_dtype=fleet_dtype, rsu_sharded=rsu_sharded,
+        x_test=x_test, y_test=y_test)
+    return sweep.run_scenario(res, init_params, loss_fn=loss_fn, mesh=mesh)
+
+
+def _run_sharded(res, init_params: PyTree, *,
+                 loss_fn: Callable = mlp.loss_fn, mesh=None,
+                 ) -> Tuple[FlatSimState, Dict[str, np.ndarray]]:
+    """``run_scenario``'s sharded dispatch target: same rounds as the flat
+    engine, agents partitioned over the mesh; unravel happens only at the
+    eval boundary.  The returned state is in the ORIGINAL agent order in
+    both modes (the RSU-sharded rounds run pod-block-permuted internally).
+    ``fleet_dtype`` sets the fleet-buffer storage dtype — bf16 also halves
+    the psum'd numerator / cross-pod cloud collective bytes (§3)."""
+    s = res.spec
+    cfg, hp, het, fed = res.cfg, s.hp, s.het, res.fed
+    n_rounds, rsu_sharded, fleet_dtype = s.rounds, s.rsu_sharded, \
+        s.fleet_dtype
+    x_test = res.test.x if res.test is not None else None
+    y_test = res.test.y if res.test is not None else None
     hp.validate(), het.validate()
     mesh = mesh if mesh is not None else make_fleet_mesh()
     topo = resolve_topology(cfg, fed, mesh, rsu_sharded=rsu_sharded)

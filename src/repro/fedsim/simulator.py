@@ -41,6 +41,7 @@ is HierFAVG.  Property tests assert this numerically.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -404,25 +405,43 @@ def run_simulation(cfg: SimConfig, hp: H2FedParams, het: HeterogeneityModel,
                    fleet_dtype=None,
                    fused: bool = True,
                    ) -> Tuple[SimState, Dict[str, np.ndarray]]:
-    """Run ``n_rounds`` global rounds; returns final state + history.
+    """DEPRECATED: use ``fedsim.run_scenario`` with a ``ScenarioSpec`` —
+    the one engine entry point with the shared knob surface (``engine``,
+    ``fleet_dtype``, ``fused``, ``fleet_store``; DESIGN.md §8).
 
-    With the default flat engine the fleet stays in (A, N)/(R, N)/(N,)
-    buffers across all rounds; pytrees are materialized only for the
-    per-round eval and for the returned final state.  ``engine="async"``
-    dispatches to the semi-asynchronous engine (fedsim/async_engine,
-    configured by ``async_cfg``) and returns its AsyncSimState.
-
-    ``fleet_dtype`` ("float32" default | "bfloat16") sets the fleet-buffer
-    storage dtype (flat/async engines; DESIGN.md §3 dtype policy);
-    ``fused=False`` keeps the two-pass aggregation program for A/B
-    benchmarking.
+    This wrapper builds an ad-hoc scenario around the pre-built arrays and
+    delegates; numerics are unchanged (same seed/key discipline,
+    equivalence test-pinned in tests/test_api.py).
     """
-    if engine == "async":
-        from repro.fedsim import async_engine
-        return async_engine.run_async_simulation(
-            cfg, hp, het, fed, init_params, n_rounds, acfg=async_cfg,
-            x_test=x_test, y_test=y_test, loss_fn=loss_fn, eval_fn=eval_fn,
-            fleet_dtype=fleet_dtype, fused=fused)
+    if engine not in ("flat", "tree", "async"):
+        raise ValueError(
+            f"unknown engine {engine!r} (want 'flat'|'tree'|'async')")
+    warnings.warn(
+        "run_simulation is deprecated; use fedsim.run_scenario with a "
+        "ScenarioSpec (engine/fleet knobs are spec fields)",
+        DeprecationWarning, stacklevel=2)
+    from repro.fedsim import sweep
+    res = sweep.adhoc_scenario(
+        cfg, hp, het, fed, n_rounds=n_rounds, engine=engine,
+        fleet_dtype=fleet_dtype, fused=fused, async_cfg=async_cfg,
+        x_test=x_test, y_test=y_test)
+    return sweep.run_scenario(res, init_params, loss_fn=loss_fn,
+                              eval_fn=eval_fn)
+
+
+def _run_sync(res, init_params: PyTree, *,
+              loss_fn: Callable = mlp.loss_fn,
+              eval_fn: Optional[Callable] = None,
+              ) -> Tuple[SimState, Dict[str, np.ndarray]]:
+    """``run_scenario``'s flat/tree dispatch target: run the scenario's
+    rounds with the fleet resident in (A, N)/(R, N)/(N,) device buffers
+    (pytrees materialize only for eval and the returned final state)."""
+    s = res.spec
+    cfg, hp, het, fed = res.cfg, s.hp, s.het, res.fed
+    engine, fleet_dtype, fused, n_rounds = (s.engine, s.fleet_dtype,
+                                            s.fused, s.rounds)
+    x_test = res.test.x if res.test is not None else None
+    y_test = res.test.y if res.test is not None else None
     hp.validate(), het.validate()
     key = jax.random.key(cfg.seed)
     if eval_fn is None and x_test is not None:

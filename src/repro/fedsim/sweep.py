@@ -67,24 +67,81 @@ def async_config(spec: ScenarioSpec) -> async_engine.AsyncConfig:
         buffer_keep=spec.buffer_keep, cloud_every=spec.cloud_every)
 
 
-def run_scenario(res, init_params: PyTree, *,
-                 loss_fn: Callable = mlp.loss_fn):
-    """Run ONE scenario through its declared engine; returns
-    (final state, history) exactly like ``run_simulation``."""
+def run_scenario(res, init_params: Optional[PyTree] = None, *,
+                 loss_fn: Callable = mlp.loss_fn,
+                 eval_fn: Optional[Callable] = None,
+                 mesh=None, topo=None):
+    """THE engine entry point (DESIGN.md §8): run ONE scenario through its
+    declared engine; returns ``(final state, history)``.
+
+    Every knob is a ``ScenarioSpec`` field — ``engine`` (flat | tree |
+    sharded | async), ``fleet_dtype``, ``fused``, ``rsu_sharded``, the
+    semi-async schedule, and the cohort-streaming pair ``fleet_store`` /
+    ``chunk_agents`` (either one non-default dispatches the streamed
+    engines in ``fedsim/streaming``).  The legacy ``run_simulation`` /
+    ``run_async_simulation`` / ``run_sharded_simulation`` signatures are
+    deprecated wrappers over this function (via ``adhoc_scenario``).
+
+    ``init_params`` defaults to the paper's MLP initialized from the
+    spec's data seed; pass a pytree (e.g. the OEM-pretrained model) to
+    override.  ``mesh`` (sharded) and ``topo`` (async) pass through to
+    those engines; ``eval_fn`` overrides the test-set accuracy eval.
+    """
     if isinstance(res, ScenarioSpec):
         res = res.resolve()
-    s = res.spec
-    common = dict(x_test=res.test.x, y_test=res.test.y, loss_fn=loss_fn)
+    s = res.spec.validate()
+    if init_params is None:
+        from repro.configs.mnist_mlp import CONFIG
+        init_params = mlp.init_params(CONFIG, jax.random.key(s.seed))
     if s.engine == "sharded":
-        from repro.fedsim.sharded import run_sharded_simulation
-        return run_sharded_simulation(
-            res.cfg, s.hp, s.het, res.fed, init_params, s.rounds,
-            rsu_sharded=s.rsu_sharded, fleet_dtype=s.fleet_dtype, **common)
-    return simulator.run_simulation(
-        res.cfg, s.hp, s.het, res.fed, init_params, s.rounds,
-        engine=s.engine, async_cfg=(async_config(s) if s.engine == "async"
-                                    else None),
-        fleet_dtype=s.fleet_dtype, fused=s.fused, **common)
+        from repro.fedsim import sharded
+        return sharded._run_sharded(res, init_params, loss_fn=loss_fn,
+                                    mesh=mesh)
+    if s.fleet_store != "device" or s.chunk_agents:
+        from repro.fedsim import streaming
+        return streaming._run_streamed(res, init_params, loss_fn=loss_fn,
+                                       eval_fn=eval_fn)
+    if s.engine == "async":
+        return async_engine._run_async(res, init_params, loss_fn=loss_fn,
+                                       eval_fn=eval_fn, topo=topo)
+    return simulator._run_sync(res, init_params, loss_fn=loss_fn,
+                               eval_fn=eval_fn)
+
+
+def adhoc_scenario(cfg, hp, het, fed, *, n_rounds: int,
+                   engine: str = "flat", fleet_dtype=None,
+                   fused: bool = True, rsu_sharded: bool = False,
+                   async_cfg=None, fleet_store: str = "device",
+                   chunk_agents: int = 0, x_test=None,
+                   y_test=None) -> ResolvedScenario:
+    """Wrap pre-built arrays (SimConfig + FederatedData + optional test
+    set) in the scenario contract so ``run_scenario`` can drive them —
+    the deprecated ``run_*_simulation`` wrappers' bridge.  Only ``fed``
+    and ``test`` are populated (train/pretrain pools stay ``None``); the
+    seed mapping ``seed=0, sim_seed=cfg.seed`` makes ``spec.sim_config()``
+    reproduce ``cfg`` exactly, so wrapper numerics are unchanged."""
+    dt = flatten.resolve_storage_dtype(fleet_dtype)
+    dtype_name = ("bfloat16" if jnp.dtype(dt) == jnp.dtype(jnp.bfloat16)
+                  else "float32")
+    async_kw = {}
+    if async_cfg is not None:
+        async_kw = dict(staleness_decay=async_cfg.staleness_decay,
+                        schedule=async_cfg.schedule,
+                        buffer_keep=async_cfg.buffer_keep,
+                        cloud_every=async_cfg.cloud_every)
+    spec = ScenarioSpec(
+        n_agents=cfg.n_agents, n_rsus=cfg.n_rsus, batch=cfg.batch,
+        hp=hp, het=het, engine=engine, fleet_dtype=dtype_name, fused=fused,
+        rsu_sharded=rsu_sharded, fleet_store=fleet_store,
+        chunk_agents=chunk_agents, rounds=n_rounds,
+        eval_every=cfg.eval_every, seed=0, sim_seed=cfg.seed, **async_kw)
+    test = None
+    if x_test is not None:
+        from repro.data.synthetic import Dataset
+        x_np, y_np = np.asarray(x_test), np.asarray(y_test)
+        test = Dataset(x=x_np, y=y_np, n_classes=int(y_np.max()) + 1)
+    return ResolvedScenario(spec=spec, train=None, test=test,
+                            pretrain_pool=None, fed_pool=None, fed=fed)
 
 
 # --------------------------------------------------------------------------
@@ -349,7 +406,9 @@ def run_scenarios(specs_or_resolved: Sequence, init_params, *,
                    for i in range(0, len(idx), max_sweep)])
         for chunk in chunks:
             group = [resolved[i] for i in chunk]
-            if len(chunk) == 1 or group[0].spec.engine not in SWEEPABLE:
+            s0 = group[0].spec
+            if (len(chunk) == 1 or s0.engine not in SWEEPABLE
+                    or s0.fleet_store != "device" or s0.chunk_agents):
                 for i in chunk:
                     _, hist = run_scenario(resolved[i], params_list[i],
                                            loss_fn=loss_fn)

@@ -132,6 +132,28 @@ def masked_scatter_accumulate(stacked_flat, weights, rsu_assign,
                                    n_rsus, interpret=False)
 
 
+def chunk_agg(chunk_flat, weights, rsu_assign, n_rsus: int):
+    """Chunk-shaped aggregation entry for the cohort-streamed engines
+    (fedsim/streaming, DESIGN.md §8): ``(num (R, N), mass (R,)) =
+    Σ_a w_a·x_a`` over ONE agent chunk, grouped by GLOBAL RSU id with
+    weights unnormalized (mask × data volume × any staleness decay folded
+    in).  The caller accumulates num/mass across chunks and normalizes
+    once per local round (``core.aggregation.normalize_blend`` /
+    ``buffer_absorb``) — the same partial-sum algebra the sharded engines
+    psum, so streamed results match the resident fused ``agg_blend`` /
+    ``agg_absorb`` rounds to fp32 tolerance.
+
+    TPU: the Pallas aggregation matmul with the (R, chunk) weight matrix
+    resident in VMEM; off-TPU: the XLA ``segment_sum`` reference.  Padded
+    tail rows ride along with weight 0 (and assignment 0), so the entry is
+    shape-static across a round's chunk stream.
+    """
+    if _interpret():
+        return _scatter_ref(chunk_flat, weights, rsu_assign, n_rsus)
+    return _mha.scatter_accumulate(chunk_flat, weights, rsu_assign,
+                                   n_rsus, interpret=False)
+
+
 def cloud_agg(rsu_flat, rsu_weights):
     wn, _ = normalized_weights(rsu_weights)
     return weighted_agg_matmul(wn[None, :], rsu_flat)[0]

@@ -351,6 +351,66 @@ def round_cost(fn, *args, latency_s: Optional[float] = None
     return res
 
 
+def memory_footprint(fn, *args) -> Dict[str, float]:
+    """Compiled device-memory footprint of ``fn(*args)`` — the allocation
+    check behind the streamed engines' bounded-working-set claim
+    (DESIGN.md §8): the peak live bytes of ONE chunk step must be
+    O(chunk·N + R·N), independent of the fleet size A.
+
+    Lowers + compiles (args traced, never executed — donation-safe) and
+    reads the compiler's ``memory_analysis()``.  Keys (0.0 where a backend
+    doesn't report a statistic): ``argument_bytes``, ``output_bytes``,
+    ``temp_bytes``, ``alias_bytes``, ``generated_code_bytes`` and
+    ``total_bytes`` — arguments + outputs + temporaries − aliased
+    (donated) pairs, the peak resident set the program needs beyond code.
+    """
+    import jax
+    jfn = fn if hasattr(fn, "lower") else jax.jit(fn)
+    mem = jfn.lower(*args).compile().memory_analysis()
+    stats = {
+        "argument_bytes": "argument_size_in_bytes",
+        "output_bytes": "output_size_in_bytes",
+        "temp_bytes": "temp_size_in_bytes",
+        "alias_bytes": "alias_size_in_bytes",
+        "generated_code_bytes": "generated_code_size_in_bytes",
+    }
+    out = {k: float(getattr(mem, attr, 0) or 0)
+           for k, attr in stats.items()}
+    out["total_bytes"] = (out["argument_bytes"] + out["output_bytes"]
+                          + out["temp_bytes"] - out["alias_bytes"])
+    return out
+
+
+def stream_round_cost(chunk_fn, *args, n_chunks: int, lar: int = 1,
+                      h2d_bytes_per_chunk: float = 0.0,
+                      d2h_bytes_per_chunk: float = 0.0,
+                      latency_s: Optional[float] = None) -> Dict[str, float]:
+    """Per-round cost model of a cohort-streamed round (DESIGN.md §8):
+    ``round_cost`` of ONE compiled chunk step scaled by the
+    ``n_chunks × lar`` executions a global round dispatches, plus the
+    host↔device transfer bytes the chunk pipeline moves (which ``analyze``
+    cannot see — they happen outside the compiled program).  Also reports
+    the chunk step's ``memory_footprint`` under ``peak_*`` keys: the
+    device working set the streamed round is bounded by.
+    """
+    per_chunk = round_cost(chunk_fn, *args)
+    n_exec = float(n_chunks * lar)
+    res = {
+        "flops": per_chunk["flops"] * n_exec,
+        "bytes": per_chunk["bytes"] * n_exec,
+        "collective_bytes": per_chunk["collective_bytes"] * n_exec,
+        "collectives": per_chunk["collectives"],
+        "transfer_bytes": (h2d_bytes_per_chunk + d2h_bytes_per_chunk)
+        * n_exec,
+        "n_chunks": float(n_chunks),
+    }
+    for k, v in memory_footprint(chunk_fn, *args).items():
+        res[f"peak_{k}"] = v
+    if latency_s is not None:
+        res["hbm_gbps"] = res["bytes"] / max(latency_s, 1e-12) / 1e9
+    return res
+
+
 _RG_LIST_RE = re.compile(r"replica_groups=\{((?:\{[0-9,\s]*\},?\s*)*)\}")
 _RG_IOTA_RE = re.compile(
     r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")

@@ -79,6 +79,15 @@ def _parse_args():
                     help="with --scenario-json: run the spec's OEM "
                          "pretrain stage first (the biased '68%' model) "
                          "instead of a fresh init")
+    ap.add_argument("--fleet-store", default="", choices=("", "device",
+                                                          "host"),
+                    help="with --scenario-json: override the spec's fleet "
+                         "row storage (DESIGN.md §8) — 'host' streams the "
+                         "(A, N) fleet from host memory in cohort chunks")
+    ap.add_argument("--chunk-agents", type=int, default=-1, metavar="C",
+                    help="with --scenario-json: override the spec's "
+                         "streamed chunk size (agents per device chunk; "
+                         "0 = auto)")
     return ap.parse_args()
 
 
@@ -95,10 +104,16 @@ def _run_scenario_json(args):
     from repro.models import mlp
 
     spec = ScenarioSpec.from_json(Path(args.scenario_json).read_text())
+    if args.fleet_store:
+        spec = spec.replace(fleet_store=args.fleet_store)
+    if args.chunk_agents >= 0:
+        spec = spec.replace(chunk_agents=args.chunk_agents)
+    spec.validate()
     res = spec.resolve()
     print(f"[scenario] {args.scenario_json}  cache_key={spec.cache_key}")
     print(f"[scenario] engine={spec.engine} partition={spec.partition} "
-          f"A={spec.n_agents} R={spec.n_rsus} rounds={spec.rounds}")
+          f"A={spec.n_agents} R={spec.n_rsus} rounds={spec.rounds} "
+          f"fleet_store={spec.fleet_store} chunk_agents={spec.chunk_agents}")
     params = mlp.init_params(MLP_CFG, jax.random.key(spec.seed))
     if args.scenario_pretrain:
         from repro.fedsim.pretrain import pretrain_to_target

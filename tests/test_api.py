@@ -1,0 +1,106 @@
+"""The unified engine API (DESIGN.md §8): ``run_scenario`` is THE entry
+point; the legacy ``run_*_simulation`` signatures are deprecated wrappers
+over it with unchanged numerics."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.heterogeneity import HeterogeneityModel
+from repro.core.scenario import ScenarioSpec
+from repro.fedsim import (AsyncConfig, run_async_simulation, run_scenario,
+                          run_simulation)
+from repro.fedsim.sweep import adhoc_scenario
+
+BASE = ScenarioSpec(n_agents=12, n_rsus=4, batch=8, n_train=400, n_test=100,
+                    het=HeterogeneityModel(csr=0.7), rounds=2)
+
+
+class TestWrapperEquivalence:
+    def test_run_simulation_flat(self):
+        res = BASE.resolve()
+        st_s, h_s = run_scenario(res)
+        with pytest.deprecated_call():
+            _, h_w = run_simulation(res.cfg, BASE.hp, BASE.het, res.fed,
+                                    _params(), BASE.rounds,
+                                    x_test=res.test.x, y_test=res.test.y)
+        np.testing.assert_array_equal(h_w["acc"], h_s["acc"])
+        np.testing.assert_array_equal(h_w["round"], h_s["round"])
+
+    def test_run_simulation_tree(self):
+        res = BASE.resolve()
+        with pytest.deprecated_call():
+            _, h_tree = run_simulation(res.cfg, BASE.hp, BASE.het, res.fed,
+                                       _params(), BASE.rounds,
+                                       x_test=res.test.x, y_test=res.test.y,
+                                       engine="tree")
+        _, h_flat = run_scenario(res)
+        np.testing.assert_allclose(h_tree["acc"], h_flat["acc"], atol=3e-6)
+
+    def test_run_async_simulation(self):
+        spec = BASE.replace(engine="async", staleness_decay=0.7,
+                            cloud_every=2,
+                            het=HeterogeneityModel(csr=0.6, max_delay=2,
+                                                   delay_p=0.5))
+        res = spec.resolve()
+        st_s, h_s = run_scenario(res)
+        acfg = AsyncConfig(staleness_decay=0.7, cloud_every=2)
+        with pytest.deprecated_call():
+            st_w, h_w = run_async_simulation(
+                res.cfg, spec.hp, spec.het, res.fed, _params(), spec.rounds,
+                acfg=acfg, x_test=res.test.x, y_test=res.test.y)
+        np.testing.assert_array_equal(h_w["acc"], h_s["acc"])
+        np.testing.assert_array_equal(h_w["absorbed_mass"],
+                                      h_s["absorbed_mass"])
+        np.testing.assert_array_equal(np.asarray(st_w.cloud_flat),
+                                      np.asarray(st_s.cloud_flat))
+
+    def test_unknown_engine_still_valueerror(self):
+        res = BASE.resolve()
+        with pytest.raises(ValueError, match="unknown engine"):
+            run_simulation(res.cfg, BASE.hp, BASE.het, res.fed, _params(),
+                           1, engine="warp")
+
+
+class TestAdhocScenario:
+    def test_seed_mapping_reproduces_cfg(self):
+        res = BASE.resolve()
+        ad = adhoc_scenario(res.cfg, BASE.hp, BASE.het, res.fed, n_rounds=3)
+        assert ad.cfg.seed == res.cfg.seed
+        assert ad.cfg.n_agents == res.cfg.n_agents
+        assert ad.spec.rounds == 3
+        assert ad.test is None and ad.train is None
+
+    def test_fleet_dtype_object_normalized(self):
+        import jax.numpy as jnp
+        res = BASE.resolve()
+        ad = adhoc_scenario(res.cfg, BASE.hp, BASE.het, res.fed,
+                            n_rounds=1, fleet_dtype=jnp.bfloat16)
+        assert ad.spec.fleet_dtype == "bfloat16"
+
+    def test_eval_optional(self):
+        """No test set -> the engines run without an accuracy eval."""
+        res = BASE.resolve()
+        ad = adhoc_scenario(res.cfg, BASE.hp, BASE.het, res.fed, n_rounds=1)
+        _, hist = run_scenario(ad, _params())
+        assert hist["acc"].size == 0
+
+
+class TestSpecValidation:
+    def test_streaming_requires_flat_or_async(self):
+        with pytest.raises(AssertionError, match="cohort streaming"):
+            BASE.replace(engine="sharded", fleet_store="host").validate()
+        with pytest.raises(AssertionError, match="cohort streaming"):
+            BASE.replace(engine="tree", chunk_agents=4).validate()
+        BASE.replace(engine="async", fleet_store="host").validate()
+
+    def test_unknown_fleet_store_rejected(self):
+        with pytest.raises(ValueError, match="unknown fleet store"):
+            BASE.replace(fleet_store="warp").validate()
+
+
+def _params():
+    import jax
+    from repro.configs.mnist_mlp import CONFIG
+    from repro.models import mlp
+    return mlp.init_params(CONFIG, jax.random.key(BASE.seed))

@@ -10,8 +10,8 @@ from repro.data.pipeline import agent_minibatch, classification_batches, \
     lm_sequences
 from repro.data.synthetic import (Dataset, lm_token_task, mnist_class_task,
                                   N_CLASSES)
-from repro.fedsim.topology import (balanced_assignment, cohort_sizes,
-                                   unbalanced_assignment)
+from repro.core.topology import (balanced_assignment, cohort_sizes,
+                                 unbalanced_assignment)
 
 import jax.numpy as jnp
 

@@ -74,3 +74,22 @@ def test_train_scenario_json(tmp_path):
     assert "engine=async partition=dirichlet" in out.stdout
     assert "[round   2]" in out.stdout
     assert "[done]" in out.stdout
+
+
+def test_train_scenario_fleet_store_host(tmp_path):
+    """--fleet-store host / --chunk-agents override the spec and run the
+    cohort-streamed engine (fedsim/streaming, DESIGN.md §8)."""
+    from repro.core.scenario import ScenarioSpec
+    from repro.core.h2fed import H2FedParams
+    from repro.core.heterogeneity import HeterogeneityModel
+    spec = ScenarioSpec(n_agents=10, n_rsus=4, batch=8, n_train=400,
+                        n_test=100, hp=H2FedParams(lar=2, local_epochs=1),
+                        het=HeterogeneityModel(csr=0.8), rounds=2)
+    path = tmp_path / "spec.json"
+    path.write_text(spec.to_json())
+    out = _run(["repro.launch.train", "--scenario-json", str(path),
+                "--fleet-store", "host", "--chunk-agents", "4"])
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "fleet_store=host chunk_agents=4" in out.stdout
+    assert "[round   2]" in out.stdout
+    assert "[done]" in out.stdout

@@ -26,6 +26,7 @@ PERTURB = {
     "het": HeterogeneityModel(csr=0.321),
     "engine": "async", "fleet_dtype": "bfloat16", "fused": False,
     "rsu_sharded": True,
+    "fleet_store": "host", "chunk_agents": 64,
     "staleness_decay": 0.9, "schedule": "poly", "buffer_keep": 0.5,
     "cloud_every": 3,
     "rounds": 5, "eval_every": 2, "seed": 1, "sim_seed": 1,

@@ -1,0 +1,207 @@
+"""Cohort-streamed engines (fedsim/streaming + core/fleet_store,
+DESIGN.md §8): streamed == resident to fp32 tolerance, FleetStore
+semantics, chunk-bounded device working set."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.mnist_mlp import CONFIG as MLP_CFG
+from repro.core import flatten
+from repro.core.fleet_store import (HostFleetStore, make_fleet_store,
+                                    np_storage_dtype, resolve_fleet_store)
+from repro.models import mlp
+from repro.core.heterogeneity import HeterogeneityModel
+from repro.core.scenario import ScenarioSpec
+from repro.fedsim import run_scenario
+from repro.fedsim.streaming import make_chunk_plan, streamed_transfer_bytes
+
+BASE = ScenarioSpec(n_agents=16, n_rsus=4, batch=8, n_train=400, n_test=100,
+                    rounds=2)
+ASYNC = BASE.replace(engine="async",
+                     het=HeterogeneityModel(csr=0.6, max_delay=2,
+                                            delay_p=0.5))
+TOL = dict(rtol=0, atol=3e-6)
+
+
+def _cloud_vec(state):
+    """The (N,) fp32 cloud master of any engine's final state."""
+    if hasattr(state, "cloud_flat"):
+        return np.asarray(state.cloud_flat, np.float32)
+    return np.asarray(flatten.spec_of(state.cloud_params)
+                      .ravel(state.cloud_params), np.float32)
+
+
+class TestFleetStore:
+    def test_resolve(self):
+        assert resolve_fleet_store(None) == "device"
+        assert resolve_fleet_store("host") == "host"
+        with pytest.raises(ValueError, match="unknown fleet store"):
+            resolve_fleet_store("warp")
+
+    def test_np_storage_dtype_bf16(self):
+        import ml_dtypes
+        assert np_storage_dtype(jnp.bfloat16) == np.dtype(ml_dtypes.bfloat16)
+        assert np_storage_dtype(jnp.float32) == np.dtype(np.float32)
+
+    @pytest.mark.parametrize("kind", ["device", "host"])
+    def test_broadcast_gather_scatter(self, kind):
+        vec = jnp.arange(6, dtype=jnp.float32)
+        store = make_fleet_store(kind, vec, 5, jnp.float32)
+        assert store.kind == kind
+        assert (store.n_agents, store.n) == (5, 6)
+        assert store.nbytes == 5 * 6 * 4
+        np.testing.assert_array_equal(np.asarray(store.gather(1, 3)),
+                                      np.tile(np.arange(6, dtype=np.float32),
+                                              (2, 1)))
+        rows = jnp.full((2, 6), 9.0, jnp.float32)
+        store.scatter(2, rows)
+        snap = np.asarray(store.snapshot())
+        assert (snap[2:4] == 9.0).all() and (snap[4] == np.arange(6)).all()
+
+    @pytest.mark.parametrize("kind", ["device", "host"])
+    def test_scatter_where_keeps_masked_rows(self, kind):
+        store = make_fleet_store(kind, jnp.zeros((4,), jnp.float32), 3,
+                                 jnp.float32)
+        rows = jnp.full((3, 4), 7.0, jnp.float32)
+        store.scatter(0, rows, where=np.array([True, False, True]))
+        snap = np.asarray(store.snapshot())
+        assert (snap[0] == 7.0).all() and (snap[2] == 7.0).all()
+        assert (snap[1] == 0.0).all()
+
+    def test_host_store_bf16_rows(self):
+        store = HostFleetStore.broadcast(jnp.ones((4,), jnp.float32), 3,
+                                         jnp.bfloat16)
+        assert store.dtype == jnp.dtype(jnp.bfloat16)
+        snap = store.snapshot()
+        assert snap.dtype == jnp.bfloat16
+        assert np.asarray(snap, np.float32).sum() == 12.0
+
+
+class TestChunkPlan:
+    def test_exact_and_padded(self):
+        p = make_chunk_plan(16, 4)
+        assert (p.chunk, p.n_chunks, p.pad) == (4, 4, 0)
+        p = make_chunk_plan(16, 5)
+        assert (p.chunk, p.n_chunks, p.pad) == (5, 4, 4)
+        assert p.n_padded == 20
+        assert p.bounds(3) == (15, 1)
+
+    def test_auto_and_clamp(self):
+        assert make_chunk_plan(10, 0).chunk == 10       # auto <= A
+        assert make_chunk_plan(4, 100).chunk == 4       # clamped to A
+
+
+class TestStreamedFlat:
+    def test_host_streamed_matches_resident(self):
+        st_res, h_res = run_scenario(BASE.resolve())
+        st_str, h_str = run_scenario(
+            BASE.replace(fleet_store="host", chunk_agents=5))  # padded tail
+        np.testing.assert_allclose(h_str["acc"], h_res["acc"], **TOL)
+        np.testing.assert_allclose(_cloud_vec(st_str), _cloud_vec(st_res),
+                                   **TOL)
+
+    def test_device_chunked_matches_host_streamed(self):
+        """Same chunk grid, different stores — identical algebra, and the
+        trained agent rows land in both stores identically."""
+        st_d, h_d = run_scenario(BASE.replace(fleet_store="device",
+                                              chunk_agents=5))
+        st_h, h_h = run_scenario(BASE.replace(fleet_store="host",
+                                              chunk_agents=5))
+        np.testing.assert_array_equal(h_d["acc"], h_h["acc"])
+        np.testing.assert_array_equal(np.asarray(st_d.store.snapshot()),
+                                      np.asarray(st_h.store.snapshot()))
+
+    def test_bf16_host_store(self):
+        st, h = run_scenario(BASE.replace(fleet_store="host",
+                                          chunk_agents=6,
+                                          fleet_dtype="bfloat16"))
+        assert st.store.dtype == jnp.dtype(jnp.bfloat16)
+        assert st.cloud_flat.dtype == jnp.float32    # fp32 cloud master
+        assert np.isfinite(h["acc"]).all()
+
+
+class TestStreamedAsync:
+    def test_host_streamed_matches_resident(self):
+        st_res, h_res = run_scenario(ASYNC.resolve())
+        st_str, h_str = run_scenario(
+            ASYNC.replace(fleet_store="host", chunk_agents=7))
+        np.testing.assert_allclose(h_str["acc"], h_res["acc"], **TOL)
+        np.testing.assert_allclose(h_str["absorbed_mass"],
+                                   h_res["absorbed_mass"], rtol=1e-6)
+        np.testing.assert_allclose(h_str["pending_mass"],
+                                   h_res["pending_mass"], rtol=1e-6)
+        np.testing.assert_allclose(_cloud_vec(st_str), _cloud_vec(st_res),
+                                   **TOL)
+        # the full in-flight economy matches: agent rows, pending rows
+        # (where in flight), weights and countdowns
+        np.testing.assert_allclose(
+            np.asarray(st_str.store.snapshot(), np.float32),
+            np.asarray(st_res.agent_flat, np.float32), **TOL)
+        np.testing.assert_array_equal(np.asarray(st_str.pending_t),
+                                      np.asarray(st_res.pending_t))
+        np.testing.assert_allclose(np.asarray(st_str.pending_w),
+                                   np.asarray(st_res.pending_w), rtol=1e-6)
+        in_flight = np.asarray(st_res.pending_t) > 0
+        if in_flight.any():
+            np.testing.assert_allclose(
+                np.asarray(st_str.pending_store.snapshot(),
+                           np.float32)[in_flight],
+                np.asarray(st_res.pending_x, np.float32)[in_flight], **TOL)
+
+    def test_cloud_cadence_streams(self):
+        spec = ASYNC.replace(cloud_every=3, buffer_keep=0.4,
+                             staleness_decay=0.7)
+        _, h_res = run_scenario(spec.resolve())
+        _, h_str = run_scenario(spec.replace(fleet_store="host",
+                                             chunk_agents=5))
+        np.testing.assert_allclose(h_str["acc"], h_res["acc"], **TOL)
+        np.testing.assert_allclose(h_str["absorbed_mass"],
+                                   h_res["absorbed_mass"], rtol=1e-6)
+
+
+class TestBoundedWorkingSet:
+    def test_chunk_step_footprint_independent_of_fleet_size(self):
+        """The tentpole claim: the compiled chunk step's device memory is
+        a function of (chunk, N, R) only — growing A must not grow it."""
+        from repro.fedsim.streaming import make_streamed_flat_round
+        from repro.launch.hlo_analysis import memory_footprint
+
+        def footprint(n_agents):
+            spec = BASE.replace(n_agents=n_agents)
+            res = spec.resolve()
+            fspec = flatten.spec_of(
+                mlp.init_params(MLP_CFG, jax.random.key(0)))
+            round_fn = make_streamed_flat_round(res.cfg, spec.hp, spec.het,
+                                                res.fed, fspec,
+                                                chunk_agents=8)
+            plan = round_fn.plan
+            xs, ys = np.asarray(res.fed.x), np.asarray(res.fed.y)
+            S, R, n = jax.ShapeDtypeStruct, spec.n_rsus, fspec.n
+            args = (S((R, n), jnp.float32), S((R,), jnp.float32),
+                    S((R, n), fspec.storage_dtype), S((n,), jnp.float32),
+                    S((plan.chunk,) + xs.shape[1:], xs.dtype),
+                    S((plan.chunk,) + ys.shape[1:], ys.dtype),
+                    S((plan.chunk,), jnp.int32),
+                    S((plan.chunk,), jnp.float32),
+                    S((plan.chunk,), jnp.int32))
+            return memory_footprint(round_fn.chunk_step, *args)
+
+        small, large = footprint(16), footprint(48)
+        assert small["total_bytes"] > 0
+        assert small["total_bytes"] == large["total_bytes"]
+        assert small["temp_bytes"] == large["temp_bytes"]
+
+    def test_transfer_bytes_accounting(self):
+        res = BASE.resolve()
+        fspec = flatten.spec_of(
+            mlp.init_params(MLP_CFG, jax.random.key(0)))
+        plan = make_chunk_plan(BASE.n_agents, 5)
+        b = streamed_transfer_bytes(plan, fspec, BASE.hp, res.fed)
+        assert b["d2h"] == BASE.hp.lar * plan.n_padded * fspec.n * 4
+        assert b["total"] == b["h2d"] + b["d2h"]
+        assert streamed_transfer_bytes(
+            plan, fspec, BASE.hp, res.fed,
+            fleet_store="device")["total"] == 0.0
