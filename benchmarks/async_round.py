@@ -87,8 +87,8 @@ def run_cell(args) -> dict:
     from repro.fedsim.async_engine import (AsyncConfig, init_async_state,
                                            make_async_global_round)
     from repro.fedsim.simulator import (SimConfig, init_flat_state,
-                                        make_flat_global_round,
-                                        run_simulation)
+                                        make_flat_global_round)
+    from repro.fedsim.sweep import adhoc_scenario, run_scenario
     from repro.models import mlp
 
     train, test = mnist_class_task(n_train=args.n_train, n_test=400, seed=0)
@@ -195,13 +195,13 @@ def run_cell(args) -> dict:
                   / max(tick_costs["fused_bf16"]["bytes"], 1.0))
 
     # --- 90%-disconnect convergence record: sync barrier vs late merges ---
-    _, h_sync = run_simulation(cfg, hp, het_sync, fed, params,
-                               args.conv_rounds, x_test=test.x,
-                               y_test=test.y, engine="flat")
-    _, h_async = run_simulation(cfg, hp, het_async, fed, params,
-                                args.conv_rounds, x_test=test.x,
-                                y_test=test.y, engine="async",
-                                async_cfg=acfg)
+    _, h_sync = run_scenario(
+        adhoc_scenario(cfg, hp, het_sync, fed, n_rounds=args.conv_rounds,
+                       engine="flat", x_test=test.x, y_test=test.y), params)
+    _, h_async = run_scenario(
+        adhoc_scenario(cfg, hp, het_async, fed, n_rounds=args.conv_rounds,
+                       engine="async", async_cfg=acfg, x_test=test.x,
+                       y_test=test.y), params)
 
     return {
         "bench": "async_round",

@@ -12,10 +12,12 @@ Prints ``name,us_per_call,derived`` CSV rows for:
   sweep   — vmapped multi-scenario sweep vs sequential runs (DESIGN.md §7)
   streaming — cohort-streamed host-fleet round vs resident + million-agent
               fleet cell (DESIGN.md §8)
+  serving — continuous-serving event loop: Poisson load, overload policies,
+            batch↔serving anchor + trace-replay determinism (DESIGN.md §9)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline]
                                                 [--json results/bench/bench.json]
-                                                [--summary BENCH_PR6.json]
+                                                [--summary BENCH_PR7.json]
 Env:    REPRO_BENCH_FULL=1 for the paper-scale (100 agents) runs.
 
 ``--json`` additionally writes every row (and any suite failures) to one
@@ -89,6 +91,11 @@ def bench_streaming():
     return streaming_round.run()
 
 
+def bench_serving():
+    from benchmarks import serving_loop
+    return serving_loop.run()
+
+
 SUITES = {
     "fig2": bench_fig2,
     "fig3": bench_fig3,
@@ -101,6 +108,7 @@ SUITES = {
     "topology": bench_topology,
     "sweep": bench_sweep,
     "streaming": bench_streaming,
+    "serving": bench_serving,
 }
 
 
@@ -157,6 +165,15 @@ def write_summary(path: Path, bench_dir: Path, since: float) -> None:
                       "fleet_agents_per_s", "fleet_host_store_bytes",
                       "fleet_device_working_set_bytes"):
                 summary[k] = rec.get(k)
+        elif name == "serving_loop":
+            merge(rec, "serving_loop")
+            summary["serving"] = {k: rec.get(k) for k in (
+                "updates_per_s", "tick_p50_ms", "tick_p99_ms",
+                "queue_depth_mean", "queue_depth_max",
+                "events_dropped_nominal", "event_wait_mean",
+                "model_staleness_mean", "serve_p50_ms", "final_acc",
+                "serving_equals_async", "trace_replay_deterministic")}
+            summary["serving_overload"] = rec.get("overload")
     path.write_text(json.dumps(summary, indent=1))
     print(f"[summary] {path}", file=sys.stderr)
 

@@ -1,0 +1,234 @@
+"""Continuous-serving loop benchmark (DESIGN.md §9) — the PR-7 story.
+
+Four cells, one record (``BENCH_PR7.json`` via ``benchmarks.run
+--summary``):
+
+  nominal — a seeded Poisson load at the design rate (one update per agent
+      per tick window) through the full event loop, with a live inference
+      probe against the cloud snapshot every tick: sustained updates/sec,
+      steady-state p50/p99 tick latency (tick 0 carries the jit compile
+      and is excluded), queue depth, model staleness and the final
+      accuracy.  CI asserts ZERO drops here — nominal load must not shed.
+
+  anchor — the batch↔serving equivalence: an every-agent-once-per-window
+      trace with decay disabled must reproduce ``engine="async"``'s final
+      cloud master (``serving_equals_async``).
+
+  overload — arrivals at several times the service rate into a one-fleet
+      queue under ``deadline`` ticks and ``drop_oldest``: drop counters,
+      drop rate, and staleness-under-load vs the nominal cell.
+
+  replay — the determinism seam: dump the nominal Poisson schedule to
+      JSONL, re-run from the trace, require the bit-identical final cloud
+      master (``trace_replay_deterministic``).
+
+Standalone:
+  PYTHONPATH=src python -m benchmarks.serving_loop [--agents 24]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import List
+
+
+def _parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--agents", type=int, default=24)
+    ap.add_argument("--rsus", type=int, default=4)
+    ap.add_argument("--windows", type=int, default=20,
+                    help="nominal load length in tick windows")
+    ap.add_argument("--n-train", type=int, default=2400)
+    ap.add_argument("--out", default=os.environ.get("REPRO_RESULTS",
+                                                    "results") + "/bench")
+    return ap.parse_args()
+
+
+def _spec(args, **kw):
+    from repro.core.h2fed import H2FedParams
+    from repro.core.scenario import ScenarioSpec
+    return ScenarioSpec(
+        n_agents=args.agents, n_rsus=args.rsus, batch=16,
+        n_train=args.n_train, n_test=400,
+        hp=H2FedParams(mu1=0.01, mu2=0.005, lar=2, local_epochs=1, lr=0.1),
+        engine="async", staleness_decay=1.0, rounds=2, **kw)
+
+
+def nominal_cell(args) -> dict:
+    from repro.fedsim.serving import run_serve_loop
+
+    A = args.agents
+    spec = _spec(args, serve_events=A * args.windows, arrival_rate=1.0,
+                 tick_trigger="auto", queue_capacity=4 * A)
+    res = spec.resolve()
+    t0 = time.perf_counter()
+    state, hist, stats, server = run_serve_loop(res,
+                                                probe_x=res.test.x[:64])
+    wall = time.perf_counter() - t0
+    s = stats.summary()
+    return {
+        "bench": "serving_loop",
+        "n_agents": A, "n_rsus": args.rsus,
+        "n_events": stats.events_generated,
+        "n_ticks": stats.n_ticks,
+        "round_s": {"serving_wall": wall},
+        "updates_per_s": s["updates_per_s"],
+        "tick_p50_ms": s["tick_p50_ms"],
+        "tick_p99_ms": s["tick_p99_ms"],
+        "queue_depth_mean": s["queue_depth_mean"],
+        "queue_depth_max": s["queue_depth_max"],
+        "events_dropped_nominal": stats.events_dropped,
+        "events_coalesced": stats.events_coalesced,
+        "event_wait_mean": s["event_wait_mean"],
+        "model_staleness_mean": s["model_staleness_mean"],
+        "serve_p50_ms": s["serve_p50_ms"],
+        "serve_requests": stats.serve_requests,
+        "final_acc": float(hist["acc"][-1]) if len(hist["acc"]) else None,
+    }
+
+
+def anchor_cell(args) -> dict:
+    import numpy as np
+
+    from repro.core.load_gen import every_agent_once_trace
+    from repro.fedsim import run_scenario
+    from repro.fedsim.serving import run_serve_loop
+
+    A, rounds = args.agents, 3
+    spec_a = _spec(args).replace(rounds=rounds)
+    st_a, _ = run_scenario(spec_a)
+    lar = spec_a.hp.lar
+    spec_s = spec_a.replace(serve_events=A * lar * rounds,
+                            tick_trigger=f"batch:{A}")
+    st_s, _, _, _ = run_serve_loop(
+        spec_s.resolve(), gen=every_agent_once_trace(A, lar * rounds))
+    np.testing.assert_allclose(np.asarray(st_s.cloud_flat),
+                               np.asarray(st_a.cloud_flat),
+                               rtol=2e-5, atol=2e-6)
+    return {"serving_equals_async": True}
+
+
+def overload_cell(args) -> dict:
+    """4x the nominal arrival rate into a one-fleet queue, both overload
+    policies: ``drop_oldest`` sheds (a deadline longer than the queue's
+    eviction horizon means sustained load keeps only the freshest fleet's
+    worth), ``backpressure`` keeps everything and pays for it in deferred
+    admissions and model staleness."""
+    from repro.fedsim.serving import run_serve_loop
+
+    A = args.agents
+    base = dict(serve_events=A * args.windows, arrival_rate=4.0,
+                queue_capacity=A)
+    spec_d = _spec(args, tick_trigger="deadline:4.0",
+                   overload_policy="drop_oldest", **base)
+    _, _, sd, _ = run_serve_loop(spec_d.resolve())
+    assert sd.events_generated == (sd.events_absorbed
+                                   + sd.events_coalesced
+                                   + sd.events_dropped)
+    spec_b = _spec(args, tick_trigger=f"batch:{2 * A}",
+                   overload_policy="backpressure", **base)
+    _, _, sb, _ = run_serve_loop(spec_b.resolve())
+    assert sb.events_dropped == 0
+    assert sb.events_generated == sb.events_absorbed + sb.events_coalesced
+    return {"overload": {
+        "arrival_rate": 4.0,
+        "queue_capacity": A,
+        "events_dropped": sd.events_dropped,
+        "drop_rate": sd.events_dropped / max(sd.events_generated, 1),
+        "event_wait_mean": sd.summary()["event_wait_mean"],
+        "queue_depth_max": sd.summary()["queue_depth_max"],
+        "backpressure_deferred": sb.events_deferred,
+        "backpressure_ticks": sb.n_ticks,
+        "backpressure_wait_mean": sb.summary()["event_wait_mean"],
+        "backpressure_staleness_mean":
+            sb.summary()["model_staleness_mean"],
+    }}
+
+
+def replay_cell(args) -> dict:
+    import numpy as np
+
+    from repro.core.load_gen import (PoissonLoadGen, agent_rates,
+                                     write_trace)
+    from repro.fedsim.serving import run_serve_loop
+
+    A = args.agents
+    n_ev = A * args.windows // 2
+    spec = _spec(args, serve_events=n_ev, arrival_rate=1.5,
+                 tick_trigger=f"batch:{A // 2},deadline:2.0",
+                 queue_capacity=2 * A)
+    res = spec.resolve()
+    st1, _, s1, _ = run_serve_loop(res)
+
+    rates = agent_rates(spec.het, A, spec.arrival_rate, seed=res.cfg.seed)
+    evs = PoissonLoadGen(rates, seed=res.cfg.seed, n_events=n_ev).take(n_ev)
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "trace.jsonl")
+        write_trace(evs, p)
+        st2, _, s2, _ = run_serve_loop(
+            spec.replace(serve_trace=p).resolve())
+    same_schedule = (s1.drain_sizes == s2.drain_sizes
+                     and s1.queue_depth == s2.queue_depth)
+    np.testing.assert_array_equal(np.asarray(st1.cloud_flat),
+                                  np.asarray(st2.cloud_flat))
+    return {"trace_replay_deterministic": bool(same_schedule)}
+
+
+def _csv_rows(rec: dict) -> List[str]:
+    from benchmarks.common import csv_row
+    ov = rec["overload"]
+    return [
+        csv_row("serving_loop/tick", rec["tick_p50_ms"] * 1e3,
+                f"p99={rec['tick_p99_ms']:.1f}ms "
+                f"{rec['updates_per_s']:.0f} upd/s "
+                f"depth<= {rec['queue_depth_max']}"),
+        csv_row("serving_loop/nominal-drops",
+                rec["events_dropped_nominal"],
+                f"of {rec['n_events']} events (must be 0), "
+                f"acc={rec['final_acc']}"),
+        csv_row("serving_loop/overload-drops", ov["events_dropped"],
+                f"rate x4 cap {ov['queue_capacity']}: "
+                f"{100 * ov['drop_rate']:.0f}% shed; backpressure "
+                f"deferred {ov['backpressure_deferred']} over "
+                f"{ov['backpressure_ticks']} ticks"),
+        csv_row("serving_loop/anchors",
+                int(rec["serving_equals_async"])
+                + int(rec["trace_replay_deterministic"]),
+                "serving==async + replay-deterministic (want 2)"),
+    ]
+
+
+def _record(args) -> dict:
+    rec = nominal_cell(args)
+    rec.update(anchor_cell(args))
+    rec.update(overload_cell(args))
+    rec.update(replay_cell(args))
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / "serving_loop.json"
+    path.write_text(json.dumps(rec, indent=1))
+    print(f"[json] {path}", file=sys.stderr)
+    return rec
+
+
+def run() -> List[str]:
+    """Harness entry (benchmarks.run --only serving): defaults only —
+    the harness owns argv."""
+    args = argparse.Namespace(
+        agents=24, rsus=4, windows=20, n_train=2400,
+        out=os.environ.get("REPRO_RESULTS", "results") + "/bench")
+    return _csv_rows(_record(args))
+
+
+def main():
+    for row in _csv_rows(_record(_parse_args())):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,82 +1,77 @@
-"""Train with H²-Fed, then serve the federated global model.
+"""Serve the LIVE H²-Fed cloud master while the fleet keeps training.
 
-    PYTHONPATH=src python examples/serve_demo.py [--rounds 6] \
-        [--fleet-store host --chunk-agents 8] [--batch 256]
+    PYTHONPATH=src python examples/serve_demo.py [--windows 16] \
+        [--agents 24] [--batch 256] [--rate 1.0]
 
-After H²-Fed training the cloud model is an ordinary dense checkpoint —
-serving needs no federation logic.  The demo runs one declarative
-``ScenarioSpec`` through ``fedsim.run_scenario`` (pass
-``--fleet-store host`` to run the cohort-streamed engine, the
-million-agent path at toy scale; DESIGN.md §8), unravels the cloud
-master once, and serves batched classification requests with latency
-stats.
+The continuous-serving subsystem (DESIGN.md §9) replaces the old
+train-then-serve split: agent updates arrive as seeded Poisson events,
+the event queue fires H²-Fed ticks on arrival pressure, and the fp32
+cloud master is snapshotted after every cloud aggregation and served to
+inference requests *during* ingestion — the demo probes it every tick
+(``probe_x``), then replays a full request sweep against the final
+snapshot.  No federation logic touches the serving path: the snapshot is
+an ordinary dense checkpoint (``CloudModelServer.params()``).
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.mnist_mlp import CONFIG as MLP_CFG
-from repro.core import flatten
 from repro.core.heterogeneity import HeterogeneityModel
 from repro.core.scenario import ScenarioSpec
-from repro.fedsim import run_scenario
-from repro.models import mlp
+from repro.fedsim.serving import run_serve_loop
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--windows", type=int, default=16,
+                    help="load length in tick windows (~1 fleet of "
+                         "events each)")
+    ap.add_argument("--agents", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="base Poisson arrival rate per agent")
     ap.add_argument("--batch", type=int, default=256,
                     help="serve-side request batch size")
-    ap.add_argument("--fleet-store", default="device",
-                    choices=("device", "host"),
-                    help="'host' streams the (A, N) fleet from host memory "
-                         "in cohort chunks (fedsim/streaming)")
-    ap.add_argument("--chunk-agents", type=int, default=8,
-                    help="agents per streamed chunk (with "
-                         "--fleet-store host)")
     args = ap.parse_args()
 
-    # --- train: one declarative cell through THE engine entry point
+    # --- one declarative serve-mode cell: events drive time, not rounds
     spec = ScenarioSpec(
-        n_agents=24, n_rsus=4, batch=32, n_train=4_000, n_test=800,
-        het=HeterogeneityModel(csr=0.5),
-        fleet_store=args.fleet_store,
-        chunk_agents=(args.chunk_agents if args.fleet_store == "host"
-                      else 0),
-        rounds=args.rounds)
+        n_agents=args.agents, n_rsus=4, batch=32, n_train=4_000,
+        n_test=800, het=HeterogeneityModel(csr=0.5), engine="async",
+        serve_events=args.agents * args.windows, arrival_rate=args.rate,
+        tick_trigger="auto", queue_capacity=4 * args.agents)
     res = spec.resolve()
+
     t0 = time.perf_counter()
-    state, hist = run_scenario(res)
-    t_train = time.perf_counter() - t0
-    print(f"[train] engine={spec.engine} fleet_store={spec.fleet_store} | "
-          f"{spec.rounds} rounds in {t_train:.2f}s | "
-          f"final acc {hist['acc'][-1]:.3f}")
+    state, hist, stats, server = run_serve_loop(res,
+                                                probe_x=res.test.x[:64])
+    wall = time.perf_counter() - t0
+    s = stats.summary()
+    print(f"[loop] {spec.n_agents} agents / {spec.n_rsus} RSUs | "
+          f"{s['events_generated']} events -> {s['n_ticks']} ticks / "
+          f"{s['n_rounds']} virtual rounds in {wall:.2f}s "
+          f"({s['updates_per_s']:.0f} upd/s, "
+          f"p50 {s['tick_p50_ms']:.1f}ms p99 {s['tick_p99_ms']:.1f}ms)")
+    print(f"[loop] dropped={s['events_dropped']} "
+          f"coalesced={s['events_coalesced']} | model staleness mean "
+          f"{s['model_staleness_mean']:.1f} ticks")
+    print(f"[live] {s['serve_requests']} inference probes served DURING "
+          f"ingestion, p50 {s['serve_p50_ms']:.2f}ms")
+    if len(hist["acc"]):
+        print(f"[acc] cloud accuracy {hist['acc'][0]:.3f} -> "
+              f"{hist['acc'][-1]:.3f} while serving")
 
-    # --- the cloud master is a dense checkpoint: pytree directly from the
-    # resident engines, one unravel from the streamed flat buffer
-    if hasattr(state, "cloud_params"):
-        params = state.cloud_params
-    else:
-        fspec = flatten.spec_of(
-            mlp.init_params(MLP_CFG, jax.random.key(spec.seed)))
-        params = fspec.unravel(state.cloud_flat)
-
-    # --- serve batched classification requests
-    predict = jax.jit(lambda p, x: jnp.argmax(mlp.forward(p, x), axis=-1))
+    # --- full request sweep against the final published snapshot
     B = args.batch
     x, y = np.asarray(res.test.x), np.asarray(res.test.y)
     reqs = [x[i:i + B] for i in range(0, len(x), B)]
+    _ = server.request(reqs[0])                 # warm the compile cache
     preds, lat = [], []
-    _ = predict(params, jnp.asarray(reqs[0]))       # warm the compile cache
     for xb in reqs:
         t0 = time.perf_counter()
-        pb = np.asarray(predict(params, jnp.asarray(xb)))
+        pb = np.asarray(server.request(xb))
         lat.append(time.perf_counter() - t0)
         preds.append(pb)
     pred = np.concatenate(preds)
@@ -88,7 +83,8 @@ def main():
           f"max {lat_ms.max():.2f}ms "
           f"({len(x) / (lat_ms.sum() / 1e3):.0f} req/s)")
     assert np.isfinite(lat_ms).all() and pred.shape == y.shape
-    print("[ok] federated checkpoint served with plain dense inference")
+    assert s["events_dropped"] == 0             # nominal load must not shed
+    print("[ok] live cloud master served concurrently with ingestion")
 
 
 if __name__ == "__main__":

@@ -97,6 +97,16 @@ class ScenarioSpec:
     schedule: str = "exp"
     buffer_keep: Union[float, Tuple[float, ...]] = 0.0
     cloud_every: int = 0
+    # continuous serving (fedsim/serving, DESIGN.md §9): serve_events > 0
+    # replaces the fixed round count with an event-driven loop — updates
+    # arrive from a seeded Poisson generator (or a JSONL trace replay) and
+    # ticks fire on arrival pressure (core.load_gen.parse_trigger grammar)
+    serve_events: int = 0             # 0 = batch mode (rounds drive time)
+    arrival_rate: float = 1.0         # base Poisson rate (events / window)
+    tick_trigger: str = "auto"        # auto | batch:K | deadline:W | both
+    queue_capacity: int = 0           # event-queue bound (0 = unbounded)
+    overload_policy: str = "drop_oldest"   # drop_oldest | backpressure
+    serve_trace: str = ""             # JSONL trace path ("" = Poisson)
 
     # -- run ---------------------------------------------------------------
     rounds: int = 24
@@ -124,6 +134,18 @@ class ScenarioSpec:
                  f"'flat'|'async', got {self.engine!r}")
         assert self.schedule in ("exp", "poly")
         assert self.cloud_every >= 0
+        assert self.serve_events >= 0 and self.queue_capacity >= 0
+        assert self.arrival_rate > 0.0
+        assert self.overload_policy in ("drop_oldest", "backpressure"), \
+            f"unknown overload_policy {self.overload_policy!r}"
+        if self.serve_events:
+            assert self.engine == "async", \
+                "serving (serve_events > 0) runs the async tick engine"
+            assert self.fleet_store == "device" and not self.chunk_agents, \
+                "serving needs the device-resident fleet"
+            assert not self.rsu_sharded, "serving is not rsu-sharded"
+            from repro.core.load_gen import parse_trigger
+            parse_trigger(self.tick_trigger, self.n_agents)
         assert self.rounds >= 1 and self.eval_every >= 1
         return self
 
@@ -267,7 +289,9 @@ class ResolvedScenario:
                 s.hp.lar, s.hp.local_epochs, s.hp.n_layers,
                 s.het.max_delay,
                 s.staleness_decay, s.schedule, s.buffer_keep, s.cloud_every,
-                s.rounds, s.eval_every)
+                s.rounds, s.eval_every,
+                s.serve_events, s.arrival_rate, s.tick_trigger,
+                s.queue_capacity, s.overload_policy, s.serve_trace)
 
 
 def _digest(obj: Any) -> str:

@@ -12,3 +12,6 @@ from repro.fedsim.pretrain import pretrain_to_target, train_centralized  # noqa:
 from repro.fedsim.sweep import (adhoc_scenario, run_scenario,  # noqa: F401
                                 run_scenarios)
 from repro.fedsim.streaming import run_streamed_simulation  # noqa: F401
+# continuous serving (DESIGN.md §9): event-driven ticks + live model server
+from repro.fedsim.serving import (CloudModelServer, EventQueue,  # noqa: F401
+                                  ServeLoopStats, run_serve_loop)

@@ -1,0 +1,574 @@
+"""Continuous-serving loop: event-driven H²-Fed ticks (DESIGN.md §9).
+
+Every engine so far is *batch*: ``run_scenario`` executes ``rounds`` global
+rounds and exits.  This module runs the SAME tick algebra as the semi-async
+engine (``fedsim/async_engine``) but lets the *workload* drive time: agent
+updates arrive as events from a seeded load generator (``core/load_gen``),
+queue in a bounded ``EventQueue`` with an explicit overload policy, and a
+tick fires on arrival pressure — queue depth (``batch:K``) or waiting time
+(``deadline:W``) — instead of a round counter.  The fp32 cloud master is
+snapshotted after every cloud aggregation and served to inference requests
+concurrently with ingestion (``CloudModelServer``).
+
+Event lifecycle (one arrival)::
+
+    generator ──admit──▶ EventQueue ──drain──▶ serve tick ──▶ RSU absorb
+        │ (queue full)       │ (same-agent dup)        (weight n·m·s(age))
+        ├─ drop_oldest: evict oldest, dropped += 1
+        ├─ backpressure: defer admission, fire a tick, deferred += 1
+        └─ coalesce: newest event per agent absorbs, coalesced += rest
+
+Tick grouping keeps the batch anchor: every ``hp.lar`` ticks form one
+VIRTUAL ROUND with the exact key discipline of the async engine
+(``rng, k = split(rng); keys = split(k, lar)``), and with ``cloud_every=0``
+the round close runs the same cloud aggregation + RSU re-anchor.  A run
+whose generator delivers every agent exactly once per tick window, with
+decay disabled, therefore equals ``engine="async"`` (and transitively
+``engine="flat"``) to fp32 tolerance — test-pinned in
+tests/test_serving.py.  Arrival latency is modeled by the QUEUE here, not
+the in-flight pending buffers: an event absorbed ``k`` ticks after
+admission is weighted by the same staleness schedule ``s(k)`` the async
+engine applies to a ``k``-tick-late delivery.
+
+``ServeLoopStats`` records the service-level story: sustained updates/sec,
+per-tick p50/p99 latency (steady-state — the first tick carries the jit
+compile and is excluded from percentiles), queue depth, drop/deferral/
+coalesce counters, and two staleness-under-load signals: the sim-time each
+absorbed event waited in the queue, and the age in ticks of the served
+cloud snapshot.  ``benchmarks/serving_loop.py`` turns these into the
+BENCH_PR7 flow.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import (Any, Callable, Deque, Dict, List, Optional, Tuple)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flatten
+from repro.core.aggregation import buffer_absorb
+from repro.core.load_gen import (Event, PoissonLoadGen, TickTrigger,
+                                 TraceLoadGen, agent_rates, parse_trigger)
+from repro.fedsim.async_engine import AsyncConfig, AsyncSimState, \
+    init_async_state
+from repro.fedsim.simulator import _fed_arrays, _local_train_flat, \
+    round_draws
+from repro.kernels import ops
+from repro.models import mlp
+
+PyTree = Any
+
+OVERLOAD_POLICIES = ("drop_oldest", "backpressure")
+
+
+# --------------------------------------------------------------------------
+# event queue + overload policy
+# --------------------------------------------------------------------------
+
+class EventQueue:
+    """Bounded FIFO of admitted events with explicit overload handling.
+
+    ``capacity=0`` is unbounded.  On a full queue, ``drop_oldest`` evicts
+    the head (and counts it); ``backpressure`` refuses admission — the
+    caller must fire a tick to free space and retry (the generator is
+    pull-based, so deferral stalls admission without touching sim time).
+    Entries carry their admission tick so staleness age is
+    ``current_tick - admit_tick``.
+    """
+
+    def __init__(self, capacity: int = 0, policy: str = "drop_oldest"):
+        if policy not in OVERLOAD_POLICIES:
+            raise ValueError(f"unknown overload policy {policy!r} "
+                             f"(want one of {OVERLOAD_POLICIES})")
+        if capacity < 0:
+            raise ValueError(f"queue_capacity must be >= 0, got {capacity}")
+        self.capacity = capacity
+        self.policy = policy
+        self._q: Deque[Tuple[Event, int]] = deque()
+        self.dropped = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def oldest_t(self) -> float:
+        return self._q[0][0].t
+
+    def push(self, ev: Event, tick: int) -> bool:
+        """Admit one event; False = refused (backpressure, queue full)."""
+        if self.capacity and len(self._q) >= self.capacity:
+            if self.policy == "backpressure":
+                return False
+            self._q.popleft()
+            self.dropped += 1
+        self._q.append((ev, tick))
+        return True
+
+    def drain(self, tick: int) -> Tuple[List[Tuple[Event, int]], int]:
+        """Take everything queued, coalescing same-agent duplicates to the
+        NEWEST event (an agent's later update supersedes its earlier one).
+        Returns (absorbed [(event, age_ticks)], n_coalesced)."""
+        newest: Dict[int, Tuple[Event, int]] = {}
+        n = len(self._q)
+        while self._q:
+            ev, admit = self._q.popleft()
+            newest[ev.agent] = (ev, tick - admit)
+        batch = sorted(newest.values(), key=lambda p: p[0].seq)
+        return batch, n - len(batch)
+
+
+# --------------------------------------------------------------------------
+# observability
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeLoopStats:
+    """Service-level counters + distributions for one serving run."""
+    events_generated: int = 0
+    events_absorbed: int = 0
+    events_dropped: int = 0
+    events_deferred: int = 0
+    events_coalesced: int = 0
+    n_ticks: int = 0
+    n_rounds: int = 0
+    n_cloud_aggs: int = 0
+    sim_time: float = 0.0
+    wall_s: float = 0.0
+    tick_latency_s: List[float] = dataclasses.field(default_factory=list)
+    queue_depth: List[int] = dataclasses.field(default_factory=list)
+    drain_sizes: List[int] = dataclasses.field(default_factory=list)
+    # staleness-under-load: sim-time each absorbed event waited queued,
+    # ticks-age of absorbed events (the decay weight's argument), and the
+    # served snapshot's age in ticks since the last cloud aggregation
+    event_wait: List[float] = dataclasses.field(default_factory=list)
+    event_age_ticks: List[int] = dataclasses.field(default_factory=list)
+    model_staleness: List[int] = dataclasses.field(default_factory=list)
+    serve_requests: int = 0
+    serve_latency_s: List[float] = dataclasses.field(default_factory=list)
+
+    def _steady(self) -> List[float]:
+        """Tick latencies minus the compile tick (the first fire carries
+        the whole jit trace; percentiles are a steady-state claim)."""
+        return (self.tick_latency_s[1:] if len(self.tick_latency_s) > 1
+                else self.tick_latency_s)
+
+    def percentile(self, q: float) -> float:
+        lat = self._steady()
+        return float(np.percentile(lat, q)) if lat else 0.0
+
+    @property
+    def updates_per_s(self) -> float:
+        """Sustained absorbed updates/sec over steady-state wall time."""
+        lat = self._steady()
+        absorbed = sum(self.drain_sizes[1:] if len(self.drain_sizes) > 1
+                       else self.drain_sizes)
+        return absorbed / max(sum(lat), 1e-12)
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "events_generated": self.events_generated,
+            "events_absorbed": self.events_absorbed,
+            "events_dropped": self.events_dropped,
+            "events_deferred": self.events_deferred,
+            "events_coalesced": self.events_coalesced,
+            "n_ticks": self.n_ticks,
+            "n_rounds": self.n_rounds,
+            "n_cloud_aggs": self.n_cloud_aggs,
+            "sim_time": self.sim_time,
+            "wall_s": self.wall_s,
+            "updates_per_s": self.updates_per_s,
+            "tick_p50_ms": self.percentile(50) * 1e3,
+            "tick_p99_ms": self.percentile(99) * 1e3,
+            "queue_depth_mean": (float(np.mean(self.queue_depth))
+                                 if self.queue_depth else 0.0),
+            "queue_depth_max": (int(np.max(self.queue_depth))
+                                if self.queue_depth else 0),
+            "event_wait_mean": (float(np.mean(self.event_wait))
+                                if self.event_wait else 0.0),
+            "event_wait_max": (float(np.max(self.event_wait))
+                               if self.event_wait else 0.0),
+            "event_age_ticks_mean": (float(np.mean(self.event_age_ticks))
+                                     if self.event_age_ticks else 0.0),
+            "model_staleness_mean": (float(np.mean(self.model_staleness))
+                                     if self.model_staleness else 0.0),
+            "model_staleness_max": (int(np.max(self.model_staleness))
+                                    if self.model_staleness else 0),
+            "serve_requests": self.serve_requests,
+            "serve_p50_ms": (float(np.percentile(self.serve_latency_s, 50))
+                             * 1e3 if self.serve_latency_s else 0.0),
+        }
+
+
+class CloudModelServer:
+    """Serve the fp32 cloud master concurrently with ingestion.
+
+    ``publish`` snapshots the master (an explicit device copy — the tick
+    jit DONATES its input state, so a held reference into the live state
+    would be invalidated by the next tick); ``request`` dispatches a jitted
+    prediction against the current snapshot and returns the un-blocked
+    device array, so inference overlaps the in-flight tick compute and
+    never blocks admission.
+    """
+
+    def __init__(self, fspec: flatten.FlatSpec,
+                 predict_fn: Optional[Callable] = None):
+        self.fspec = fspec
+        self._predict = predict_fn or jax.jit(
+            lambda v, x: jnp.argmax(mlp.forward(fspec.unravel(v), x),
+                                    axis=-1))
+        self._snap: Optional[jax.Array] = None
+        self.published_at_tick: int = 0
+
+    def publish(self, cloud_flat: jax.Array, tick: int) -> None:
+        self._snap = cloud_flat.copy()
+        self.published_at_tick = tick
+
+    @property
+    def snapshot(self) -> Optional[jax.Array]:
+        return self._snap
+
+    def params(self):
+        """The served model as a pytree (the checkpoint boundary)."""
+        return self.fspec.unravel(self._snap)
+
+    def request(self, x) -> jax.Array:
+        if self._snap is None:
+            raise RuntimeError("no cloud snapshot published yet")
+        return self._predict(self._snap, x)
+
+
+# --------------------------------------------------------------------------
+# the jitted serve tick (the async tick algebra, event-gated)
+# --------------------------------------------------------------------------
+
+def _make_serve_tick(cfg, hp, het, fed, spec: flatten.FlatSpec,
+                     acfg: AsyncConfig, loss_fn: Callable = mlp.loss_fn, *,
+                     fused: bool = True):
+    """One event-driven tick, jitted with the state donated:
+    ``(state, key, arrive (A,) f32, age (A,) i32) -> (state, metrics)``.
+
+    Identical to the async engine's tick with the in-flight machinery
+    replaced by the event gate: arriving agents train from their RSU row
+    and are absorbed with weight ``n_a · mask_a · arrive_a · s(age_a)``
+    (``s`` the staleness schedule over the event's queue age in ticks);
+    non-arriving agents keep their row and contribute nothing.  The cloud
+    cadence (``cloud_every`` on the global tick clock) is unchanged.
+    """
+    x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
+        _fed_arrays(cfg, hp, fed)
+    A, R, N = cfg.n_agents, cfg.n_rsus, spec.n
+    decay = acfg.agent_decay(rsu_assign, R)
+    keep = acfg.rsu_keep(R)
+    ce = acfg.cloud_every
+
+    train_agents = jax.vmap(
+        lambda x, y, w0, wr, wc, act: _local_train_flat(
+            loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
+        in_axes=(0, 0, 0, 0, None, 0))
+
+    def tick(state: AsyncSimState, key, arrive, age):
+        rsu_flat, rsu_mass = state.rsu_flat, state.rsu_mass
+        cloud_flat, cloud_macc = state.cloud_flat, state.cloud_macc
+
+        # stochastic realization — the flat/async engines' key discipline,
+        # so the once-per-window schedule reproduces their draws exactly
+        conn, mask, active_steps = round_draws(key, state.conn, het, hp,
+                                               A, spe)
+        maskf = mask.astype(jnp.float32)
+        arrived = arrive > 0
+
+        # training: only agents whose update-event fired this tick run
+        # their drawn steps; everyone else keeps their row untouched
+        act = jnp.where(arrived, active_steps, 0)
+        w_start = jnp.take(rsu_flat, rsu_assign, axis=0)
+        trained = spec.to_storage(
+            train_agents(x_all, y_all, w_start, w_start, cloud_flat, act))
+        agent_flat = jnp.where(arrived[:, None], trained, state.agent_flat)
+
+        # absorption: one cohort, weighted by data volume x connectivity
+        # mask x the staleness schedule over the event's queue age
+        w = n_per_agent * maskf * arrive * acfg.weight(age, decay=decay)
+        m = jax.ops.segment_sum(w, rsu_assign, num_segments=R)
+        if fused:
+            rsu_flat, rsu_mass, _ = ops.agg_absorb(
+                ((agent_flat, w),), rsu_assign, R, rsu_flat, rsu_mass,
+                keep=keep)
+        else:
+            num, _ = ops.masked_scatter_accumulate(agent_flat, w,
+                                                   rsu_assign, R)
+            rsu_flat, rsu_mass = buffer_absorb(rsu_flat, rsu_mass, num, m,
+                                               keep=keep)
+        cloud_macc = cloud_macc + m
+
+        # cloud cadence on the global tick clock (ce == 0 defers to the
+        # virtual-round close outside)
+        gtick = state.tick + 1
+        if ce:
+            def _fire(args):
+                rsu, macc, cloud = args
+                if fused:
+                    cloud = ops.cloud_blend(rsu, macc, cloud)
+                else:
+                    new_cloud = ops.cloud_agg(rsu, macc)
+                    cloud = jnp.where(jnp.sum(macc) > 0,
+                                      new_cloud.astype(jnp.float32), cloud)
+                return cloud, jnp.zeros_like(macc)
+
+            def _hold(args):
+                _, macc, cloud = args
+                return cloud, macc
+
+            cloud_flat, cloud_macc = jax.lax.cond(
+                (gtick % ce) == 0, _fire, _hold,
+                (rsu_flat, cloud_macc, cloud_flat))
+
+        metrics = {"absorbed_mass": m,                         # (R,)
+                   "absorbed_weight": jnp.sum(w)}
+        out = state._replace(agent_flat=agent_flat, rsu_flat=rsu_flat,
+                             rsu_mass=rsu_mass, cloud_flat=cloud_flat,
+                             conn=conn, cloud_macc=cloud_macc, tick=gtick)
+        return out, metrics
+
+    return jax.jit(tick, donate_argnums=(0,))
+
+
+def _make_round_close(spec: flatten.FlatSpec, n_rsus: int, *,
+                      fused: bool = True):
+    """Virtual-round close for the per-round cloud cadence
+    (``cloud_every=0``): aggregate the round's absorbed mass into the fp32
+    master, then re-anchor the RSU buffers to it — the exact round
+    boundary of the async engine's ``global_round`` (there the re-anchor
+    happens at round START; the state between rounds is identical, and the
+    initial ``init_async_state`` is already anchored)."""
+
+    def close(state: AsyncSimState) -> AsyncSimState:
+        if fused:
+            cloud = ops.cloud_blend(state.rsu_flat, state.cloud_macc,
+                                    state.cloud_flat)
+        else:
+            new_cloud = ops.cloud_agg(state.rsu_flat, state.cloud_macc)
+            cloud = jnp.where(jnp.sum(state.cloud_macc) > 0,
+                              new_cloud.astype(jnp.float32),
+                              state.cloud_flat)
+        return state._replace(
+            cloud_flat=cloud,
+            rsu_flat=jnp.broadcast_to(spec.to_storage(cloud),
+                                      (n_rsus, spec.n)),
+            rsu_mass=jnp.zeros((n_rsus,), jnp.float32),
+            cloud_macc=jnp.zeros((n_rsus,), jnp.float32))
+
+    return jax.jit(close, donate_argnums=(0,))
+
+
+# --------------------------------------------------------------------------
+# the loop
+# --------------------------------------------------------------------------
+
+def run_serve_loop(res, init_params: Optional[PyTree] = None, *,
+                   loss_fn: Callable = mlp.loss_fn,
+                   eval_fn: Optional[Callable] = None,
+                   gen=None, probe_x=None,
+                   ) -> Tuple[AsyncSimState, Dict[str, np.ndarray],
+                              ServeLoopStats, CloudModelServer]:
+    """Drive a serve-mode scenario end-to-end; returns
+    ``(state, history, stats, server)``.
+
+    ``gen`` overrides the spec-derived load generator (any object with an
+    ``events()`` iterator of ``load_gen.Event``); ``probe_x`` is a request
+    batch served against the live snapshot every tick — dispatched BEFORE
+    the loop blocks on the tick, so inference demonstrably overlaps
+    ingestion.  History carries the per-virtual-round accuracy curve and
+    absorbed mass (the async engine's schema) plus the stats summary under
+    ``history["serve"]``.
+    """
+    from repro.core.scenario import ScenarioSpec
+    if isinstance(res, ScenarioSpec):
+        res = res.resolve()
+    s = res.spec.validate()
+    if not s.serve_events and gen is None:
+        raise ValueError("run_serve_loop needs spec.serve_events > 0 "
+                         "(or an explicit gen)")
+    cfg, hp, het, fed = res.cfg, s.hp, s.het, res.fed
+    A, lar, ce = cfg.n_agents, hp.lar, s.cloud_every
+
+    if init_params is None:
+        from repro.configs.mnist_mlp import CONFIG
+        init_params = mlp.init_params(CONFIG, jax.random.key(s.seed))
+    fspec = flatten.spec_of(
+        init_params,
+        storage_dtype=flatten.resolve_storage_dtype(s.fleet_dtype))
+    acfg = AsyncConfig(staleness_decay=s.staleness_decay,
+                       schedule=s.schedule, buffer_keep=s.buffer_keep,
+                       cloud_every=s.cloud_every).validate()
+    state = init_async_state(cfg, fspec, init_params,
+                             jax.random.key(cfg.seed))
+
+    trigger: TickTrigger = parse_trigger(s.tick_trigger, A)
+    queue = EventQueue(capacity=s.queue_capacity,
+                       policy=s.overload_policy)
+    if gen is None:
+        if s.serve_trace:
+            gen = TraceLoadGen.from_jsonl(s.serve_trace,
+                                          limit=s.serve_events)
+        else:
+            gen = PoissonLoadGen(
+                agent_rates(het, A, s.arrival_rate, seed=cfg.seed),
+                seed=cfg.seed, n_events=s.serve_events)
+    stream = iter(gen.events())
+
+    tick_fn = _make_serve_tick(cfg, hp, het, fed, fspec, acfg, loss_fn,
+                               fused=s.fused)
+    round_close = _make_round_close(fspec, cfg.n_rsus, fused=s.fused)
+    round_keys = jax.jit(
+        lambda rng: (lambda r, k: (r, jax.random.split(k, lar)))(
+            *jax.random.split(rng)))
+
+    if eval_fn is None and res.test is not None:
+        x_t = jnp.asarray(res.test.x)
+        y_t = jnp.asarray(res.test.y)
+        eval_fn = jax.jit(lambda p: mlp.accuracy(p, x_t, y_t))
+    server = CloudModelServer(fspec)
+    server.publish(state.cloud_flat, 0)
+    probe_x = None if probe_x is None else jnp.asarray(probe_x)
+
+    stats = ServeLoopStats()
+    keys = None
+    tick_in_round = 0
+    last_cloud_tick = 0
+    accs: List[float] = []
+    rounds: List[int] = []
+    round_absorbed: List[float] = []
+    absorbed_acc = 0.0
+    pending_ev: Optional[Event] = None
+    stream_done = False
+    now = 0.0
+    t_loop = time.perf_counter()
+
+    def _eval_round(r: int):
+        if eval_fn is not None:
+            accs.append(float(eval_fn(fspec.unravel(state.cloud_flat))))
+            rounds.append(r + 1)
+
+    while True:
+        # ---- admit events until a trigger fires (or the stream ends) ----
+        while not stream_done:
+            if trigger.batch and len(queue) >= trigger.batch:
+                break
+            ev = pending_ev if pending_ev is not None else \
+                next(stream, None)
+            pending_ev = None
+            if ev is None:
+                stream_done = True
+                break
+            if not 0 <= ev.agent < A:
+                raise ValueError(
+                    f"event agent {ev.agent} outside the fleet "
+                    f"(n_agents={A}) — trace from a different scenario?")
+            if (trigger.deadline and len(queue)
+                    and ev.t - queue.oldest_t >= trigger.deadline):
+                pending_ev = ev            # fire first, admit after
+                break
+            if queue.push(ev, stats.n_ticks):
+                stats.events_generated += 1
+                now = ev.t
+            else:                          # backpressure: defer + fire
+                pending_ev = ev
+                stats.events_deferred += 1
+                break
+        if not len(queue):
+            break                          # stream drained, queue empty
+
+        # ---- drain + fire one tick --------------------------------------
+        if tick_in_round == 0:
+            new_rng, keys = round_keys(state.rng)
+            state = state._replace(rng=new_rng)
+        depth = len(queue)
+        batch, coalesced = queue.drain(stats.n_ticks)
+        stats.events_coalesced += coalesced
+        arrive = np.zeros((A,), np.float32)
+        age = np.zeros((A,), np.int32)
+        for e, a_ticks in batch:
+            arrive[e.agent] = 1.0
+            age[e.agent] = a_ticks
+            stats.event_wait.append(now - e.t)
+            stats.event_age_ticks.append(a_ticks)
+
+        t0 = time.perf_counter()
+        state, tm = tick_fn(state, keys[tick_in_round],
+                            jnp.asarray(arrive), jnp.asarray(age))
+        if probe_x is not None:
+            t_req = time.perf_counter()
+            preds = server.request(probe_x)    # overlaps the tick compute
+        jax.block_until_ready(state.rsu_mass)
+        lat = time.perf_counter() - t0
+        if probe_x is not None:
+            jax.block_until_ready(preds)
+            stats.serve_latency_s.append(time.perf_counter() - t_req)
+            stats.serve_requests += 1
+
+        absorbed_acc += float(tm["absorbed_weight"])
+        stats.tick_latency_s.append(lat)
+        stats.queue_depth.append(depth)
+        stats.drain_sizes.append(len(batch))
+        stats.events_absorbed += len(batch)
+        stats.n_ticks += 1
+        tick_in_round += 1
+        if ce and stats.n_ticks % ce == 0:
+            last_cloud_tick = stats.n_ticks
+            stats.n_cloud_aggs += 1
+            server.publish(state.cloud_flat, stats.n_ticks)
+        stats.model_staleness.append(stats.n_ticks - last_cloud_tick)
+
+        # ---- virtual-round boundary -------------------------------------
+        if tick_in_round == lar:
+            if not ce:
+                state = round_close(state)
+                last_cloud_tick = stats.n_ticks
+                stats.n_cloud_aggs += 1
+                server.publish(state.cloud_flat, stats.n_ticks)
+            r = stats.n_rounds
+            stats.n_rounds += 1
+            round_absorbed.append(absorbed_acc)
+            absorbed_acc = 0.0
+            if r % cfg.eval_every == 0:
+                _eval_round(r)
+            tick_in_round = 0
+
+    # partial final round: close it so trailing absorbed mass reaches the
+    # cloud master (then eval once more if the last round wasn't)
+    if tick_in_round:
+        if not ce:
+            state = round_close(state)
+            last_cloud_tick = stats.n_ticks
+            stats.n_cloud_aggs += 1
+        server.publish(state.cloud_flat, stats.n_ticks)
+        r = stats.n_rounds
+        stats.n_rounds += 1
+        round_absorbed.append(absorbed_acc)
+        _eval_round(r)
+    elif stats.n_rounds and (rounds == [] or rounds[-1] != stats.n_rounds):
+        _eval_round(stats.n_rounds - 1)
+
+    stats.events_dropped = queue.dropped
+    stats.sim_time = now
+    stats.wall_s = time.perf_counter() - t_loop
+    history = {"round": np.asarray(rounds), "acc": np.asarray(accs),
+               "absorbed_mass": np.asarray(round_absorbed),
+               "serve": stats.summary()}
+    return state, history, stats, server
+
+
+def _run_serve(res, init_params: Optional[PyTree] = None, *,
+               loss_fn: Callable = mlp.loss_fn,
+               eval_fn: Optional[Callable] = None,
+               ) -> Tuple[AsyncSimState, Dict[str, np.ndarray]]:
+    """``run_scenario``'s serve-mode dispatch target (spec.serve_events >
+    0): same ``(state, history)`` contract as every other engine, with the
+    service-level summary under ``history["serve"]``."""
+    state, history, _, _ = run_serve_loop(res, init_params,
+                                          loss_fn=loss_fn, eval_fn=eval_fn)
+    return state, history

@@ -93,6 +93,10 @@ def run_scenario(res, init_params: Optional[PyTree] = None, *,
     if init_params is None:
         from repro.configs.mnist_mlp import CONFIG
         init_params = mlp.init_params(CONFIG, jax.random.key(s.seed))
+    if s.serve_events:
+        from repro.fedsim import serving
+        return serving._run_serve(res, init_params, loss_fn=loss_fn,
+                                  eval_fn=eval_fn)
     if s.engine == "sharded":
         from repro.fedsim import sharded
         return sharded._run_sharded(res, init_params, loss_fn=loss_fn,
@@ -238,6 +242,10 @@ def build_sweep(group: Sequence[ResolvedScenario], init_params,
     if engine not in SWEEPABLE:
         raise ValueError(f"engine {engine!r} is not sweepable "
                          f"(want one of {SWEEPABLE})")
+    if s0.serve_events:
+        raise ValueError("serve-mode scenarios (serve_events > 0) are "
+                         "event-driven and cannot be vmapped into a sweep; "
+                         "run them through run_scenario")
 
     params_list = (list(init_params) if isinstance(init_params, (list, tuple))
                    else [init_params] * S)
@@ -408,7 +416,8 @@ def run_scenarios(specs_or_resolved: Sequence, init_params, *,
             group = [resolved[i] for i in chunk]
             s0 = group[0].spec
             if (len(chunk) == 1 or s0.engine not in SWEEPABLE
-                    or s0.fleet_store != "device" or s0.chunk_agents):
+                    or s0.fleet_store != "device" or s0.chunk_agents
+                    or s0.serve_events):
                 for i in chunk:
                     _, hist = run_scenario(resolved[i], params_list[i],
                                            loss_fn=loss_fn)

@@ -1,19 +1,105 @@
-"""Serving launcher: batched KV-cache decode of the federated global model.
+"""Serving launcher: continuous H²-Fed serving loop / KV-cache decode.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
-        [--ckpt-dir results/ckpt] [--batch 8] [--prompt-len 32] [--gen 32] \
-        [--window 0]
+Two modes:
 
-Loads the latest H²-Fed cloud checkpoint if given (else fresh init),
-prefills the prompts into the per-arch cache (GQA ring buffer / MLA
-compressed / SSM state) and greedy-decodes a batch of requests — the same
-`serve_step` the decode_32k / long_500k dry-run shapes lower.
+  --serve-loop — the continuous-serving subsystem (DESIGN.md §9): run an
+      event-driven H²-Fed round loop from a serve-mode ``ScenarioSpec``
+      (``--scenario-json``, or a built-in default), with updates arriving
+      from the seeded Poisson generator (or a ``serve_trace`` JSONL
+      replay) and the fp32 cloud master served to inference probes
+      concurrently with ingestion.  Prints the ``ServeLoopStats``
+      service-level summary; ``--dump-trace`` writes the realized event
+      schedule for bit-exact replay.
+
+        PYTHONPATH=src python -m repro.launch.serve --serve-loop \
+            [--scenario-json spec.json] [--events 480] [--dump-trace t.jsonl]
+
+  (default) — batched KV-cache decode of a (possibly federated) global
+      model checkpoint: prefill into the per-arch cache (GQA ring buffer /
+      MLA compressed / SSM state) and greedy-decode a batch of requests —
+      the same `serve_step` the decode_32k / long_500k dry-run shapes
+      lower.
+
+        PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+            [--ckpt-dir results/ckpt] [--batch 8] [--prompt-len 32] \
+            [--gen 32] [--window 0]
 """
 import argparse
 
 
+def _serve_loop(args) -> None:
+    import json
+
+    from repro.core.load_gen import (PoissonLoadGen, agent_rates,
+                                     write_trace)
+    from repro.core.scenario import ScenarioSpec
+    from repro.fedsim.serving import run_serve_loop
+
+    if args.scenario_json:
+        spec = ScenarioSpec.from_json(
+            open(args.scenario_json).read())
+        if not spec.serve_events:
+            spec = spec.replace(engine="async",
+                                serve_events=args.events).validate()
+    else:
+        spec = ScenarioSpec(
+            n_agents=24, n_rsus=4, batch=16, n_train=2400, n_test=400,
+            engine="async", staleness_decay=1.0, rounds=2,
+            serve_events=args.events, queue_capacity=96).validate()
+    res = spec.resolve()
+
+    if args.dump_trace:
+        rates = agent_rates(spec.het, spec.n_agents, spec.arrival_rate,
+                            seed=res.cfg.seed)
+        write_trace(PoissonLoadGen(rates, seed=res.cfg.seed,
+                                   n_events=spec.serve_events).events(),
+                    args.dump_trace)
+        print(f"[trace] {spec.serve_events} events -> {args.dump_trace}")
+
+    state, hist, stats, server = run_serve_loop(
+        res, probe_x=res.test.x[:64])
+    s = stats.summary()
+    print(f"[serve-loop] {spec.n_agents} agents / {spec.n_rsus} RSUs, "
+          f"trigger={spec.tick_trigger!r} "
+          f"capacity={spec.queue_capacity or 'inf'} "
+          f"policy={spec.overload_policy}")
+    print(f"[events] generated={s['events_generated']} "
+          f"absorbed={s['events_absorbed']} "
+          f"coalesced={s['events_coalesced']} "
+          f"dropped={s['events_dropped']} "
+          f"deferred={s['events_deferred']}")
+    print(f"[ticks] {s['n_ticks']} ticks / {s['n_rounds']} rounds | "
+          f"{s['updates_per_s']:.0f} upd/s "
+          f"p50={s['tick_p50_ms']:.1f}ms p99={s['tick_p99_ms']:.1f}ms | "
+          f"queue depth mean={s['queue_depth_mean']:.1f} "
+          f"max={s['queue_depth_max']}")
+    print(f"[staleness] event wait mean={s['event_wait_mean']:.2f} "
+          f"(sim), model staleness mean={s['model_staleness_mean']:.1f} "
+          f"ticks | probes={s['serve_requests']} "
+          f"p50={s['serve_p50_ms']:.2f}ms")
+    if len(hist["acc"]):
+        print(f"[acc] cloud accuracy {hist['acc'][0]:.3f} -> "
+              f"{hist['acc'][-1]:.3f} over {s['n_rounds']} virtual rounds")
+    if args.stats_json:
+        with open(args.stats_json, "w") as f:
+            json.dump(s, f, indent=1)
+        print(f"[json] {args.stats_json}")
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--serve-loop", action="store_true",
+                    help="run the continuous event-driven serving loop "
+                         "(DESIGN.md §9) instead of KV-cache decode")
+    ap.add_argument("--scenario-json", default="",
+                    help="serve-mode ScenarioSpec JSON (serve_events > 0)")
+    ap.add_argument("--events", type=int, default=480,
+                    help="serve-loop event count when the spec has none")
+    ap.add_argument("--dump-trace", default="",
+                    help="write the realized Poisson schedule as JSONL "
+                         "(replayable via the spec's serve_trace)")
+    ap.add_argument("--stats-json", default="",
+                    help="write the ServeLoopStats summary JSON here")
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full-config", dest="reduced", action="store_false")
@@ -25,6 +111,10 @@ def main():
                     help="sliding-window attention (0 = full causal)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.serve_loop:
+        _serve_loop(args)
+        return
 
     import time
 

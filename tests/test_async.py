@@ -30,6 +30,13 @@ F32 = np.float32
 SYNC_LIMIT = dict(staleness_decay=1.0, buffer_keep=0.0, cloud_every=0)
 
 
+def _run_sim(cfg, hp, het, fed, params, rounds, *, x_test, y_test, **kw):
+    from repro.fedsim.sweep import adhoc_scenario, run_scenario
+    res = adhoc_scenario(cfg, hp, het, fed, n_rounds=rounds,
+                         x_test=x_test, y_test=y_test, **kw)
+    return run_scenario(res, params)
+
+
 @pytest.fixture(scope="module")
 def small_fed(tiny_task, fed_small):
     from repro.configs.mnist_mlp import CONFIG as MLP_CFG
@@ -142,17 +149,16 @@ class TestSyncLimit:
     def test_matches_flat_engine(self, small_fed):
         from repro.core.baselines import h2fed
         from repro.fedsim.async_engine import AsyncConfig
-        from repro.fedsim.simulator import SimConfig, run_simulation
+        from repro.fedsim.simulator import SimConfig
         fed, test, params = small_fed
         cfg = SimConfig(n_agents=fed.n_agents, n_rsus=4, batch=16, seed=0)
         hp = h2fed(mu1=0.05, mu2=0.01, lar=2, lr=0.1)
         het = HeterogeneityModel(csr=0.6, lar=hp.lar)    # max_delay=0
-        sf, hf = run_simulation(cfg, hp, het, fed, params, 3,
-                                x_test=test.x, y_test=test.y, engine="flat")
-        sa, ha = run_simulation(cfg, hp, het, fed, params, 3,
-                                x_test=test.x, y_test=test.y,
-                                engine="async",
-                                async_cfg=AsyncConfig(**SYNC_LIMIT))
+        sf, hf = _run_sim(cfg, hp, het, fed, params, 3,
+                          x_test=test.x, y_test=test.y, engine="flat")
+        sa, ha = _run_sim(cfg, hp, het, fed, params, 3,
+                          x_test=test.x, y_test=test.y, engine="async",
+                          async_cfg=AsyncConfig(**SYNC_LIMIT))
         np.testing.assert_allclose(hf["acc"], ha["acc"], atol=2e-3)
         spec = flatten.spec_of(params)
         np.testing.assert_allclose(
@@ -168,18 +174,17 @@ class TestSyncLimit:
     def test_sync_limit_property(self, small_fed, seed, csr):
         from repro.core.baselines import h2fed
         from repro.fedsim.async_engine import AsyncConfig
-        from repro.fedsim.simulator import SimConfig, run_simulation
+        from repro.fedsim.simulator import SimConfig
         fed, test, params = small_fed
         cfg = SimConfig(n_agents=fed.n_agents, n_rsus=4, batch=16,
                         seed=seed)
         hp = h2fed(mu1=0.01, mu2=0.005, lar=2, lr=0.1)
         het = HeterogeneityModel(csr=float(csr), lar=hp.lar)
-        _, hf = run_simulation(cfg, hp, het, fed, params, 2,
-                               x_test=test.x, y_test=test.y, engine="flat")
-        _, ha = run_simulation(cfg, hp, het, fed, params, 2,
-                               x_test=test.x, y_test=test.y,
-                               engine="async",
-                               async_cfg=AsyncConfig(**SYNC_LIMIT))
+        _, hf = _run_sim(cfg, hp, het, fed, params, 2,
+                         x_test=test.x, y_test=test.y, engine="flat")
+        _, ha = _run_sim(cfg, hp, het, fed, params, 2,
+                         x_test=test.x, y_test=test.y, engine="async",
+                         async_cfg=AsyncConfig(**SYNC_LIMIT))
         np.testing.assert_allclose(hf["acc"], ha["acc"], atol=2e-3)
 
 
@@ -329,21 +334,19 @@ class TestPerRsuStaleness:
     def test_uniform_vector_matches_scalar_engine(self, small_fed):
         from repro.core.baselines import h2fed
         from repro.fedsim.async_engine import AsyncConfig
-        from repro.fedsim.simulator import SimConfig, run_simulation
+        from repro.fedsim.simulator import SimConfig
         fed, test, params = small_fed
         cfg = SimConfig(n_agents=fed.n_agents, n_rsus=4, batch=16, seed=0)
         hp = h2fed(mu1=0.01, mu2=0.005, lar=2, lr=0.1)
         het = HeterogeneityModel(csr=0.8, lar=hp.lar, max_delay=2,
                                  delay_p=0.5)
-        _, h_s = run_simulation(cfg, hp, het, fed, params, 2,
-                                x_test=test.x, y_test=test.y,
-                                engine="async",
-                                async_cfg=AsyncConfig(staleness_decay=0.5))
-        _, h_v = run_simulation(cfg, hp, het, fed, params, 2,
-                                x_test=test.x, y_test=test.y,
-                                engine="async",
-                                async_cfg=AsyncConfig(
-                                    staleness_decay=(0.5,) * 4))
+        _, h_s = _run_sim(cfg, hp, het, fed, params, 2,
+                          x_test=test.x, y_test=test.y, engine="async",
+                          async_cfg=AsyncConfig(staleness_decay=0.5))
+        _, h_v = _run_sim(cfg, hp, het, fed, params, 2,
+                          x_test=test.x, y_test=test.y, engine="async",
+                          async_cfg=AsyncConfig(
+                              staleness_decay=(0.5,) * 4))
         np.testing.assert_array_equal(h_s["acc"], h_v["acc"])
         np.testing.assert_array_equal(h_s["absorbed_mass"],
                                       h_v["absorbed_mass"])
@@ -445,8 +448,14 @@ from repro.core.heterogeneity import HeterogeneityModel
 from repro.data.partition import scenario_two
 from repro.data.synthetic import mnist_class_task
 from repro.fedsim.async_engine import AsyncConfig
-from repro.fedsim.simulator import SimConfig, run_simulation
+from repro.fedsim.simulator import SimConfig
+from repro.fedsim.sweep import adhoc_scenario, run_scenario
 from repro.models import mlp
+
+def run(cfg, hp, het, fed, params, rounds, **kw):
+    return run_scenario(adhoc_scenario(cfg, hp, het, fed, n_rounds=rounds,
+                                       x_test=test.x, y_test=test.y, **kw),
+                        params)
 
 assert len(jax.devices()) == 8, len(jax.devices())
 train, test = mnist_class_task(n_train=2000, n_test=400, seed=0)
@@ -455,16 +464,12 @@ params = mlp.init_params(MLP_CFG, jax.random.key(0))
 cfg = SimConfig(n_agents=8, n_rsus=4, batch=16, seed=0)
 hp = h2fed(mu1=0.01, mu2=0.005, lar=2, lr=0.1)
 het = HeterogeneityModel(csr=0.6, lar=hp.lar)
-_, hf = run_simulation(cfg, hp, het, fed, params, 2,
-                       x_test=test.x, y_test=test.y, engine="flat")
-_, ha = run_simulation(cfg, hp, het, fed, params, 2,
-                       x_test=test.x, y_test=test.y, engine="async",
-                       async_cfg=AsyncConfig(staleness_decay=1.0,
-                                             buffer_keep=0.0))
+_, hf = run(cfg, hp, het, fed, params, 2, engine="flat")
+_, ha = run(cfg, hp, het, fed, params, 2, engine="async",
+            async_cfg=AsyncConfig(staleness_decay=1.0, buffer_keep=0.0))
 np.testing.assert_allclose(hf["acc"], ha["acc"], atol=2e-3)
 het_d = HeterogeneityModel(csr=0.6, lar=hp.lar, max_delay=2, delay_p=0.5)
-_, hd = run_simulation(cfg, hp, het_d, fed, params, 2, x_test=test.x,
-                       y_test=test.y, engine="async")
+_, hd = run(cfg, hp, het_d, fed, params, 2, engine="async")
 assert np.isfinite(hd["acc"]).all()
 print("async-8dev-ok")
 """
@@ -527,9 +532,10 @@ from repro.core.baselines import h2fed
 from repro.core.heterogeneity import HeterogeneityModel
 from repro.data.partition import scenario_two
 from repro.data.synthetic import mnist_class_task
-from repro.fedsim.async_engine import AsyncConfig, run_async_simulation
+from repro.fedsim.async_engine import AsyncConfig
 from repro.fedsim.sharded import make_fleet_mesh, resolve_topology
-from repro.fedsim.simulator import SimConfig, run_simulation
+from repro.fedsim.simulator import SimConfig
+from repro.fedsim.sweep import adhoc_scenario, run_scenario
 from repro.models import mlp
 
 assert len(jax.devices()) == 8, len(jax.devices())
@@ -541,24 +547,24 @@ hp = h2fed(mu1=0.05, mu2=0.01, lar=2, lr=0.1)
 mesh = make_fleet_mesh(8, n_pods=2)
 topo = resolve_topology(cfg, fed, mesh, rsu_sharded=True)
 
+def run(het, rounds, *, topo=None, **kw):
+    return run_scenario(adhoc_scenario(cfg, hp, het, fed, n_rounds=rounds,
+                                       x_test=test.x, y_test=test.y, **kw),
+                        params, topo=topo)
+
 # sync-limit anchor: RSU-sharded async == flat
 het = HeterogeneityModel(csr=0.6, lar=hp.lar)
-_, hf = run_simulation(cfg, hp, het, fed, params, 2,
-                       x_test=test.x, y_test=test.y, engine="flat")
-_, hs = run_async_simulation(cfg, hp, het, fed, params, 2, topo=topo,
-                             acfg=AsyncConfig(staleness_decay=1.0,
-                                              buffer_keep=0.0),
-                             x_test=test.x, y_test=test.y)
+_, hf = run(het, 2, engine="flat")
+_, hs = run(het, 2, engine="async", topo=topo,
+            async_cfg=AsyncConfig(staleness_decay=1.0, buffer_keep=0.0))
 np.testing.assert_allclose(hf["acc"], hs["acc"], atol=2e-3)
 
 # delayed regime: RSU-sharded == replicated async (same draws, same
 # staleness algebra, block-local merge)
 het_d = HeterogeneityModel(csr=0.8, lar=hp.lar, max_delay=2, delay_p=0.5)
 acfg = AsyncConfig(staleness_decay=0.5, buffer_keep=0.4, cloud_every=3)
-_, hu = run_async_simulation(cfg, hp, het_d, fed, params, 2, acfg=acfg,
-                             x_test=test.x, y_test=test.y)
-_, hq = run_async_simulation(cfg, hp, het_d, fed, params, 2, topo=topo,
-                             acfg=acfg, x_test=test.x, y_test=test.y)
+_, hu = run(het_d, 2, engine="async", async_cfg=acfg)
+_, hq = run(het_d, 2, engine="async", topo=topo, async_cfg=acfg)
 np.testing.assert_allclose(hu["acc"], hq["acc"], atol=2e-3)
 np.testing.assert_allclose(hu["absorbed_mass"], hq["absorbed_mass"],
                            rtol=1e-5)

@@ -15,10 +15,17 @@ import numpy as np
 import pytest
 
 from repro.core import flatten
-from repro.fedsim.simulator import (FlatSimState, SimConfig,
-                                    init_flat_state, run_simulation)
+from repro.fedsim.simulator import (FlatSimState, SimConfig,  # noqa: F401
+                                    init_flat_state)
+from repro.fedsim.sweep import adhoc_scenario, run_scenario
 
 F32 = np.float32
+
+
+def _run(cfg, hp, het, fed, params, rounds, *, x_test, y_test, **kw):
+    res = adhoc_scenario(cfg, hp, het, fed, n_rounds=rounds,
+                         x_test=x_test, y_test=y_test, **kw)
+    return run_scenario(res, params)
 
 
 @pytest.fixture(scope="module")
@@ -40,9 +47,9 @@ class TestFusedRound:
         """The one-pass round == the two-pass program BIT-exactly at fp32
         (off-TPU both routes lower to the same XLA ops by construction)."""
         fed, test, params, cfg, hp, het = sim_setup
-        sf, hf = run_simulation(cfg, hp, het, fed, params, 2,
+        sf, hf = _run(cfg, hp, het, fed, params, 2,
                                 x_test=test.x, y_test=test.y)
-        su, hu = run_simulation(cfg, hp, het, fed, params, 2,
+        su, hu = _run(cfg, hp, het, fed, params, 2,
                                 x_test=test.x, y_test=test.y, fused=False)
         np.testing.assert_array_equal(hf["acc"], hu["acc"])
         for a, b in zip(jax.tree.leaves(sf.cloud_params),
@@ -58,10 +65,10 @@ class TestFusedRound:
         het = HeterogeneityModel(csr=0.8, lar=hp.lar, max_delay=2,
                                  delay_p=0.5)
         acfg = AsyncConfig(staleness_decay=0.5, buffer_keep=0.5)
-        sf, hf = run_simulation(cfg, hp, het, fed, params, 2,
+        sf, hf = _run(cfg, hp, het, fed, params, 2,
                                 x_test=test.x, y_test=test.y,
                                 engine="async", async_cfg=acfg)
-        su, hu = run_simulation(cfg, hp, het, fed, params, 2,
+        su, hu = _run(cfg, hp, het, fed, params, 2,
                                 x_test=test.x, y_test=test.y,
                                 engine="async", async_cfg=acfg,
                                 fused=False)
@@ -104,9 +111,9 @@ class TestBf16FleetStorage:
         acceptance bound is 1 point at the paper-scale run recorded in
         the bench flow)."""
         fed, test, params, cfg, hp, het = sim_setup
-        _, hf = run_simulation(cfg, hp, het, fed, params, 4,
+        _, hf = _run(cfg, hp, het, fed, params, 4,
                                x_test=test.x, y_test=test.y)
-        _, hb = run_simulation(cfg, hp, het, fed, params, 4,
+        _, hb = _run(cfg, hp, het, fed, params, 4,
                                x_test=test.x, y_test=test.y,
                                fleet_dtype="bfloat16")
         assert abs(hb["acc"][-1] - hf["acc"][-1]) < 0.03, \
@@ -118,10 +125,10 @@ class TestBf16FleetStorage:
         fed, test, params, cfg, hp, _ = sim_setup
         het = HeterogeneityModel(csr=0.8, lar=hp.lar, max_delay=2,
                                  delay_p=0.5)
-        _, hf = run_simulation(cfg, hp, het, fed, params, 3,
+        _, hf = _run(cfg, hp, het, fed, params, 3,
                                x_test=test.x, y_test=test.y,
                                engine="async", async_cfg=AsyncConfig())
-        _, hb = run_simulation(cfg, hp, het, fed, params, 3,
+        _, hb = _run(cfg, hp, het, fed, params, 3,
                                x_test=test.x, y_test=test.y,
                                engine="async", async_cfg=AsyncConfig(),
                                fleet_dtype="bfloat16")

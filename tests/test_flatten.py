@@ -173,7 +173,7 @@ class TestFlatAggEquivalence:
 
 
 class TestEngineEquivalence:
-    """run_simulation(engine='flat') == engine='tree' end to end."""
+    """run_scenario(engine='flat') == engine='tree' end to end."""
 
     @pytest.fixture(scope="class")
     def small_sim(self, tiny_task, fed_small):
@@ -186,15 +186,20 @@ class TestEngineEquivalence:
     def test_flat_matches_tree_engine(self, small_sim):
         from repro.core.baselines import h2fed
         from repro.core.heterogeneity import HeterogeneityModel
-        from repro.fedsim.simulator import SimConfig, run_simulation
+        from repro.fedsim.simulator import SimConfig
+        from repro.fedsim.sweep import adhoc_scenario, run_scenario
         fed, test, params = small_sim
         cfg = SimConfig(n_agents=fed.n_agents, n_rsus=4, batch=16, seed=0)
         hp = h2fed(mu1=0.05, mu2=0.01, lar=2, lr=0.1)
         het = HeterogeneityModel(csr=0.6, lar=hp.lar)
-        sf, hf = run_simulation(cfg, hp, het, fed, params, 3,
-                                x_test=test.x, y_test=test.y, engine="flat")
-        st, ht = run_simulation(cfg, hp, het, fed, params, 3,
-                                x_test=test.x, y_test=test.y, engine="tree")
+
+        def run(engine):
+            res = adhoc_scenario(cfg, hp, het, fed, n_rounds=3,
+                                 x_test=test.x, y_test=test.y, engine=engine)
+            return run_scenario(res, params)
+
+        sf, hf = run("flat")
+        st, ht = run("tree")
         np.testing.assert_allclose(hf["acc"], ht["acc"], atol=2e-3)
         for a, b in zip(jax.tree.leaves(sf.cloud_params),
                         jax.tree.leaves(st.cloud_params)):

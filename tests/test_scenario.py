@@ -29,6 +29,9 @@ PERTURB = {
     "fleet_store": "host", "chunk_agents": 64,
     "staleness_decay": 0.9, "schedule": "poly", "buffer_keep": 0.5,
     "cloud_every": 3,
+    "serve_events": 64, "arrival_rate": 2.0,
+    "tick_trigger": "deadline:1.0", "queue_capacity": 128,
+    "overload_policy": "backpressure", "serve_trace": "trace.jsonl",
     "rounds": 5, "eval_every": 2, "seed": 1, "sim_seed": 1,
 }
 

@@ -1,0 +1,305 @@
+"""Continuous-serving subsystem tests (DESIGN.md §9).
+
+Pins the three guarantees the serving loop makes:
+
+  * the batch↔serving ANCHOR — a serving run whose generator delivers
+    every agent exactly once per tick window, with decay disabled, equals
+    ``engine="async"`` (and transitively ``engine="flat"``, via the async
+    anchor in tests/test_async.py) on the final cloud master;
+  * DETERMINISM — the event schedule lives on a monotonic sim clock, so a
+    seeded Poisson run and its JSONL trace replay produce bit-identical
+    tick schedules and final models;
+  * OVERLOAD accounting — every generated event is absorbed, coalesced or
+    dropped (nothing leaks), drop counters increment only when the bounded
+    queue overflows under ``drop_oldest``, and ``backpressure`` defers
+    instead of dropping.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.load_gen import (Event, PoissonLoadGen, TraceLoadGen,
+                                 agent_rates, every_agent_once_trace,
+                                 parse_trigger, read_trace, write_trace)
+from repro.core.heterogeneity import HeterogeneityModel
+from repro.core.scenario import ScenarioSpec
+from repro.fedsim import run_scenario
+from repro.fedsim.serving import EventQueue, run_serve_loop
+
+BASE = dict(n_agents=8, n_rsus=4, batch=8, n_train=400, n_test=100,
+            staleness_decay=1.0, buffer_keep=0.0, cloud_every=0)
+
+
+def _serve_spec(**kw):
+    return ScenarioSpec(**{**BASE, "engine": "async", **kw})
+
+
+# --------------------------------------------------------------------------
+# load generator
+# --------------------------------------------------------------------------
+
+class TestLoadGen:
+    def test_trigger_grammar(self):
+        assert parse_trigger("auto", 24) == (24, 0.0)
+        assert parse_trigger("batch:6", 24) == (6, 0.0)
+        assert parse_trigger("deadline:1.5", 24) == (0, 1.5)
+        assert parse_trigger("batch:6,deadline:1.5", 24) == (6, 1.5)
+
+    @pytest.mark.parametrize("bad", ["", "batch:x", "every:3", "batch:0",
+                                     "batch:-1", "deadline:-2"])
+    def test_trigger_rejects(self, bad):
+        with pytest.raises(ValueError):
+            parse_trigger(bad, 24)
+
+    def test_agent_rates_floor_and_determinism(self):
+        het = HeterogeneityModel(max_delay=4, delay_p=0.8)
+        r1 = agent_rates(het, 32, base_rate=2.0, seed=3)
+        r2 = agent_rates(het, 32, base_rate=2.0, seed=3)
+        np.testing.assert_array_equal(r1, r2)
+        assert (r1 >= 0.05 * 2.0).all()          # the liveness floor
+        assert (r1 <= 2.0).all()                 # slowdown only
+        assert len(np.unique(r1)) > 1            # latency classes differ
+        # a different seed redraws the latency classes
+        assert not np.array_equal(r1, agent_rates(het, 32, 2.0, seed=4))
+        # a throttled fleet (csr/fsr < 1) saturates the floor
+        slow = HeterogeneityModel(csr=0.1, fsr=0.5, max_delay=4,
+                                  delay_p=0.8)
+        np.testing.assert_array_equal(agent_rates(slow, 8, 2.0), 0.1)
+
+    def test_poisson_monotonic_and_seeded(self):
+        rates = agent_rates(HeterogeneityModel(), 8, 1.0, seed=0)
+        a = PoissonLoadGen(rates, seed=7, n_events=100).take(100)
+        b = PoissonLoadGen(rates, seed=7, n_events=100).take(100)
+        assert a == b                            # pure function of the seed
+        ts = [e.t for e in a]
+        assert all(x <= y for x, y in zip(ts, ts[1:]))
+        assert [e.seq for e in a] == list(range(100))
+        assert {e.agent for e in a} <= set(range(8))
+
+    def test_per_agent_streams_independent(self):
+        # an agent's own arrival times never depend on OTHER agents' rates
+        # (per-agent Generators merged through a heap — the determinism
+        # seam that makes trace replay meaningful)
+        slow = PoissonLoadGen([1.0, 1.0], seed=5, n_events=200).take(200)
+        fast = PoissonLoadGen([1.0, 9.0], seed=5, n_events=200).take(200)
+        t0_slow = [e.t for e in slow if e.agent == 0][:10]
+        t0_fast = [e.t for e in fast if e.agent == 0][:10]
+        assert t0_slow == t0_fast
+
+    def test_trace_roundtrip_bit_exact(self, tmp_path):
+        rates = agent_rates(HeterogeneityModel(), 6, 1.3, seed=1)
+        evs = PoissonLoadGen(rates, seed=11, n_events=64).take(64)
+        p = tmp_path / "trace.jsonl"
+        write_trace(evs, p)
+        back = read_trace(p)
+        assert [(e.t, e.agent) for e in back] == \
+               [(e.t, e.agent) for e in evs]     # float64 bit round-trip
+        assert len(TraceLoadGen.from_jsonl(p, limit=10)) == 10
+
+    def test_trace_rejects_time_travel(self):
+        with pytest.raises(ValueError, match="non-decreasing"):
+            TraceLoadGen([Event(1.0, 0, 0), Event(0.5, 1, 1)])
+
+    def test_every_agent_once_trace(self):
+        tr = every_agent_once_trace(4, 3)
+        assert len(tr) == 12
+        for w in range(3):
+            window = tr.take(12)[w * 4:(w + 1) * 4]
+            assert [e.agent for e in window] == [0, 1, 2, 3]
+            assert all(w <= e.t < w + 1 for e in window)
+
+
+# --------------------------------------------------------------------------
+# event queue
+# --------------------------------------------------------------------------
+
+class TestEventQueue:
+    def test_drop_oldest_evicts_head(self):
+        q = EventQueue(capacity=2, policy="drop_oldest")
+        for i in range(4):
+            assert q.push(Event(float(i), i, i), tick=0)
+        assert q.dropped == 2
+        batch, coalesced = q.drain(tick=3)
+        assert [e.agent for e, _ in batch] == [2, 3]   # oldest two evicted
+        assert [age for _, age in batch] == [3, 3]
+        assert coalesced == 0
+
+    def test_backpressure_refuses(self):
+        q = EventQueue(capacity=2, policy="backpressure")
+        assert q.push(Event(0.0, 0, 0), 0)
+        assert q.push(Event(0.1, 1, 1), 0)
+        assert not q.push(Event(0.2, 2, 2), 0)         # refused, not lost
+        assert q.dropped == 0 and len(q) == 2
+
+    def test_drain_coalesces_to_newest(self):
+        q = EventQueue()
+        q.push(Event(0.0, 3, 0), 0)
+        q.push(Event(0.5, 3, 1), 1)                    # same agent, newer
+        q.push(Event(0.7, 1, 2), 1)
+        batch, coalesced = q.drain(tick=2)
+        assert coalesced == 1
+        assert {(e.agent, e.seq) for e, _ in batch} == {(3, 1), (1, 2)}
+
+    def test_rejects_bad_config(self):
+        with pytest.raises(ValueError):
+            EventQueue(policy="explode")
+        with pytest.raises(ValueError):
+            EventQueue(capacity=-1)
+
+
+# --------------------------------------------------------------------------
+# scenario plumbing
+# --------------------------------------------------------------------------
+
+class TestServeSpec:
+    def test_serve_requires_async_device_fleet(self):
+        with pytest.raises(AssertionError):
+            _serve_spec(engine="flat", serve_events=8).validate()
+        with pytest.raises(AssertionError):
+            _serve_spec(serve_events=8, fleet_store="host").validate()
+        with pytest.raises(AssertionError):
+            _serve_spec(serve_events=8, rsu_sharded=True).validate()
+        with pytest.raises(ValueError):
+            _serve_spec(serve_events=8, tick_trigger="nope").validate()
+        with pytest.raises(AssertionError):
+            _serve_spec(serve_events=8,
+                        overload_policy="explode").validate()
+        _serve_spec(serve_events=8).validate()
+
+    def test_serve_mode_not_sweepable(self):
+        from repro.fedsim.sweep import build_sweep
+        res = [_serve_spec(serve_events=8, rounds=2).resolve()
+               for _ in range(2)]
+        with pytest.raises(ValueError, match="event-driven"):
+            build_sweep(res, None)
+
+
+# --------------------------------------------------------------------------
+# the serving loop
+# --------------------------------------------------------------------------
+
+class TestServeLoop:
+    def test_anchor_equals_async(self):
+        """Everyone arrives exactly once per tick window, decay disabled →
+        the serving loop IS the async engine (transitively engine="flat",
+        via the async↔flat anchor)."""
+        A, rounds = 8, 3
+        spec_a = _serve_spec(rounds=rounds)
+        st_a, h_a = run_scenario(spec_a)
+        lar = spec_a.hp.lar
+        spec_s = _serve_spec(rounds=rounds, serve_events=A * lar * rounds,
+                             tick_trigger=f"batch:{A}")
+        st_s, h_s, stats, _ = run_serve_loop(
+            spec_s.resolve(), gen=every_agent_once_trace(A, lar * rounds))
+        assert stats.n_ticks == lar * rounds
+        assert stats.n_rounds == rounds
+        assert stats.events_coalesced == stats.events_dropped == 0
+        np.testing.assert_allclose(np.asarray(st_s.cloud_flat),
+                                   np.asarray(st_a.cloud_flat),
+                                   rtol=2e-5, atol=2e-6)
+        np.testing.assert_allclose(h_s["acc"], h_a["acc"], atol=2e-6)
+
+    def test_anchor_mass_conserved(self):
+        """Full connectivity + full-fleet ticks: every round absorbs
+        exactly lar x sum(n_per_agent) of cohort mass — nothing lost to
+        the event path."""
+        A, rounds = 8, 2
+        spec = _serve_spec(rounds=rounds, serve_events=0,
+                           het=HeterogeneityModel(csr=1.0, fsr=1.0))
+        lar = spec.hp.lar
+        spec = spec.replace(serve_events=A * lar * rounds,
+                            tick_trigger=f"batch:{A}")
+        res = spec.resolve()
+        _, hist, stats, _ = run_serve_loop(
+            res, gen=every_agent_once_trace(A, lar * rounds))
+        per_round = lar * float(np.sum(res.fed.n_per_agent))
+        np.testing.assert_allclose(hist["absorbed_mass"],
+                                   [per_round] * rounds, rtol=1e-6)
+        assert stats.events_absorbed == A * lar * rounds
+
+    def test_replay_bit_deterministic(self, tmp_path):
+        """Seeded Poisson run → dump its schedule → trace replay: identical
+        tick schedule AND bit-identical final cloud master."""
+        base = dict(rounds=2, serve_events=64, arrival_rate=1.5,
+                    tick_trigger="batch:4,deadline:2.0", queue_capacity=16)
+        spec = _serve_spec(**base)
+        res = spec.resolve()
+        st1, _, s1, _ = run_serve_loop(res)
+
+        rates = agent_rates(spec.het, spec.n_agents, spec.arrival_rate,
+                            seed=res.cfg.seed)
+        evs = PoissonLoadGen(rates, seed=res.cfg.seed,
+                             n_events=64).take(64)
+        p = tmp_path / "trace.jsonl"
+        write_trace(evs, p)
+        st2, _, s2, _ = run_serve_loop(
+            _serve_spec(**base, serve_trace=str(p)).resolve())
+
+        assert s1.drain_sizes == s2.drain_sizes   # identical tick schedule
+        assert s1.queue_depth == s2.queue_depth
+        assert s1.n_ticks == s2.n_ticks
+        np.testing.assert_array_equal(np.asarray(st1.cloud_flat),
+                                      np.asarray(st2.cloud_flat))
+
+    def test_overload_drop_oldest(self):
+        """Arrivals far outpace the deadline-triggered ticks with a tiny
+        queue: the drop counter increments and the event accounting stays
+        exact — generated == absorbed + coalesced + dropped."""
+        spec = _serve_spec(rounds=2, serve_events=160, arrival_rate=6.0,
+                           tick_trigger="deadline:3.0", queue_capacity=6,
+                           overload_policy="drop_oldest")
+        st, hist, stats, _ = run_serve_loop(spec.resolve())
+        assert stats.events_dropped > 0
+        assert stats.events_generated == 160
+        assert stats.events_generated == (stats.events_absorbed
+                                          + stats.events_coalesced
+                                          + stats.events_dropped)
+        assert np.isfinite(np.asarray(st.cloud_flat)).all()
+        assert float(jnp.sum(st.rsu_mass)) >= 0.0
+
+    def test_overload_backpressure_defers(self):
+        """Backpressure never drops: a full queue defers admission, a tick
+        fires, and every event is eventually absorbed or coalesced."""
+        spec = _serve_spec(rounds=2, serve_events=96, arrival_rate=6.0,
+                           tick_trigger="batch:32", queue_capacity=4,
+                           overload_policy="backpressure")
+        _, _, stats, _ = run_serve_loop(spec.resolve())
+        assert stats.events_dropped == 0
+        assert stats.events_deferred > 0
+        assert stats.events_generated == 96
+        assert stats.events_generated == (stats.events_absorbed
+                                          + stats.events_coalesced)
+
+    def test_rejects_foreign_trace(self):
+        """A trace whose agent ids exceed the fleet is a scenario mismatch,
+        not an index crash."""
+        spec = _serve_spec(rounds=2, serve_events=4)
+        with pytest.raises(ValueError, match="outside the fleet"):
+            run_serve_loop(spec.resolve(),
+                           gen=TraceLoadGen([Event(0.1, 99, 0)]))
+
+    def test_run_scenario_dispatch_and_stats(self):
+        spec = _serve_spec(rounds=2, serve_events=48, queue_capacity=32)
+        _, hist = run_scenario(spec)
+        serve = hist["serve"]
+        for k in ("updates_per_s", "tick_p50_ms", "tick_p99_ms",
+                  "queue_depth_max", "events_dropped",
+                  "model_staleness_mean", "event_wait_mean"):
+            assert k in serve, k
+        assert serve["events_generated"] == 48
+        assert len(hist["acc"]) == len(hist["round"]) > 0
+
+    def test_live_server_probes(self):
+        """The cloud server answers inference probes during ingestion and
+        its snapshot survives the tick's buffer donation."""
+        spec = _serve_spec(rounds=2, serve_events=32)
+        res = spec.resolve()
+        st, _, stats, server = run_serve_loop(
+            res, probe_x=res.test.x[:16])
+        assert stats.serve_requests == stats.n_ticks > 0
+        preds = np.asarray(server.request(res.test.x[:16]))
+        assert preds.shape == (16,)
+        # the published snapshot is the final cloud master
+        np.testing.assert_array_equal(np.asarray(server.snapshot),
+                                      np.asarray(st.cloud_flat))

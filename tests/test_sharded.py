@@ -20,8 +20,9 @@ from repro.core.baselines import h2fed
 from repro.core.heterogeneity import HeterogeneityModel
 from repro.data.partition import scenario_two
 from repro.data.synthetic import mnist_class_task
-from repro.fedsim.simulator import SimConfig, run_simulation
-from repro.fedsim.sharded import make_fleet_mesh, run_sharded_simulation
+from repro.fedsim.simulator import SimConfig
+from repro.fedsim.sharded import make_fleet_mesh
+from repro.fedsim.sweep import adhoc_scenario, run_scenario
 from repro.launch.mesh import agent_axes
 
 train, test = mnist_class_task(n_train=2000, n_test=400, seed=0)
@@ -32,12 +33,16 @@ cfg = SimConfig(n_agents=8, n_rsus=4, batch=16, seed=0)
 hp = h2fed(mu1=0.01, mu2=0.005, lar=2, lr=0.1)
 het = HeterogeneityModel(csr=0.6, lar=hp.lar)
 
-_, h_flat = run_simulation(cfg, hp, het, fed, params, 3,
-                           x_test=test.x, y_test=test.y, engine="flat")
+def run(engine, **kw):
+    mesh = kw.pop("mesh", None)
+    res = adhoc_scenario(cfg, hp, het, fed, n_rounds=3, engine=engine,
+                         x_test=test.x, y_test=test.y, **kw)
+    return run_scenario(res, params, mesh=mesh)
+
+_, h_flat = run("flat")
 mesh = make_fleet_mesh()
 assert len(jax.devices()) == {devices}, len(jax.devices())
-_, h_sh = run_sharded_simulation(cfg, hp, het, fed, params, 3, mesh=mesh,
-                                 x_test=test.x, y_test=test.y)
+_, h_sh = run("sharded", mesh=mesh)
 np.testing.assert_allclose(h_flat["acc"], h_sh["acc"], atol=2e-3)
 print("axes", agent_axes(mesh), "shards-ok")
 """
@@ -51,9 +56,10 @@ from repro.core.baselines import h2fed
 from repro.core.heterogeneity import HeterogeneityModel
 from repro.data.partition import scenario_two
 from repro.data.synthetic import mnist_class_task
-from repro.fedsim.simulator import SimConfig, init_flat_state, run_simulation
+from repro.fedsim.simulator import SimConfig, init_flat_state
 from repro.fedsim.sharded import (make_fleet_mesh, make_sharded_global_round,
-                                  resolve_topology, run_sharded_simulation)
+                                  resolve_topology)
+from repro.fedsim.sweep import adhoc_scenario, run_scenario
 from repro.launch import hlo_analysis as H
 from repro.models import mlp
 
@@ -64,15 +70,18 @@ params = mlp.init_params(MLP_CFG, jax.random.key(0))
 cfg = SimConfig(n_agents={agents}, n_rsus=4, batch=16, seed=0)
 hp = h2fed(mu1=0.01, mu2=0.005, lar=2, lr=0.1)
 het = HeterogeneityModel(csr=0.6, lar=hp.lar)
-_, h_flat = run_simulation(cfg, hp, het, fed, params, 2,
-                           x_test=test.x, y_test=test.y, engine="flat")
+
+def run(engine, mesh=None, **kw):
+    res = adhoc_scenario(cfg, hp, het, fed, n_rounds=2, engine=engine,
+                         x_test=test.x, y_test=test.y, **kw)
+    return run_scenario(res, params, mesh=mesh)
+
+_, h_flat = run("flat")
 
 # acceptance: RSU-sharded == flat for every pod count dividing R
 for pods in {pod_counts}:
     mesh = make_fleet_mesh({devices}, n_pods=pods)
-    _, h_rs = run_sharded_simulation(cfg, hp, het, fed, params, 2,
-                                     mesh=mesh, rsu_sharded=True,
-                                     x_test=test.x, y_test=test.y)
+    _, h_rs = run("sharded", mesh=mesh, rsu_sharded=True)
     np.testing.assert_allclose(h_flat["acc"], h_rs["acc"], atol=2e-3)
     print("pods", pods, "equiv-ok")
 
@@ -177,27 +186,27 @@ class TestSingleDevice:
         engine exactly (same draws, same aggregation algebra)."""
         from repro.core.baselines import h2fed
         from repro.core.heterogeneity import HeterogeneityModel
-        from repro.fedsim.sharded import make_fleet_mesh, \
-            run_sharded_simulation
-        from repro.fedsim.simulator import SimConfig, run_simulation
+        from repro.fedsim.sharded import make_fleet_mesh
+        from repro.fedsim.simulator import SimConfig
+        from repro.fedsim.sweep import adhoc_scenario, run_scenario
         fed, test, params = small_fed
         cfg = SimConfig(n_agents=fed.n_agents, n_rsus=4, batch=16, seed=0)
         hp = h2fed(mu1=0.05, mu2=0.01, lar=2, lr=0.1)
         het = HeterogeneityModel(csr=0.5, lar=hp.lar)
-        _, h_flat = run_simulation(cfg, hp, het, fed, params, 2,
-                                   x_test=test.x, y_test=test.y,
-                                   engine="flat")
-        mesh = make_fleet_mesh(1)
-        _, h_sh = run_sharded_simulation(cfg, hp, het, fed, params, 2,
-                                         mesh=mesh, x_test=test.x,
-                                         y_test=test.y)
+
+        def run(engine, mesh=None, **kw):
+            res = adhoc_scenario(cfg, hp, het, fed, n_rounds=2,
+                                 engine=engine, x_test=test.x,
+                                 y_test=test.y, **kw)
+            return run_scenario(res, params, mesh=mesh)
+
+        _, h_flat = run("flat")
+        _, h_sh = run("sharded", mesh=make_fleet_mesh(1))
         np.testing.assert_allclose(h_flat["acc"], h_sh["acc"], atol=2e-3)
 
         # RSU-sharded on the degenerate single-pod mesh: same anchor
-        mesh1 = make_fleet_mesh(1, n_pods=1)
-        _, h_rs = run_sharded_simulation(cfg, hp, het, fed, params, 2,
-                                         mesh=mesh1, rsu_sharded=True,
-                                         x_test=test.x, y_test=test.y)
+        _, h_rs = run("sharded", mesh=make_fleet_mesh(1, n_pods=1),
+                      rsu_sharded=True)
         np.testing.assert_allclose(h_flat["acc"], h_rs["acc"], atol=2e-3)
 
     def test_empty_rsu_keeps_anchor(self, small_fed):
@@ -207,10 +216,9 @@ class TestSingleDevice:
         import dataclasses
         from repro.core.baselines import h2fed
         from repro.core.heterogeneity import HeterogeneityModel
-        from repro.fedsim.sharded import (make_fleet_mesh,
-                                          resolve_topology,
-                                          run_sharded_simulation)
-        from repro.fedsim.simulator import SimConfig, run_simulation
+        from repro.fedsim.sharded import make_fleet_mesh, resolve_topology
+        from repro.fedsim.simulator import SimConfig
+        from repro.fedsim.sweep import adhoc_scenario, run_scenario
         fed, test, params = small_fed
         # re-home RSU 1's agents onto RSU 0: RSU 1 has an empty cohort
         assign = np.asarray(fed.rsu_assign).copy()
@@ -222,12 +230,12 @@ class TestSingleDevice:
         mesh = make_fleet_mesh(1, n_pods=1)
         topo = resolve_topology(cfg, fed2, mesh, rsu_sharded=True)
         assert (np.bincount(topo.rsu_assign, minlength=4) == 0).any()
-        s_flat, h_flat = run_simulation(cfg, hp, het, fed2, params, 2,
-                                        x_test=test.x, y_test=test.y,
-                                        engine="flat")
-        s_rs, h_rs = run_sharded_simulation(cfg, hp, het, fed2, params, 2,
-                                            mesh=topo, x_test=test.x,
-                                            y_test=test.y)
+        s_flat, h_flat = run_scenario(
+            adhoc_scenario(cfg, hp, het, fed2, n_rounds=2, engine="flat",
+                           x_test=test.x, y_test=test.y), params)
+        s_rs, h_rs = run_scenario(
+            adhoc_scenario(cfg, hp, het, fed2, n_rounds=2, engine="sharded",
+                           x_test=test.x, y_test=test.y), params, mesh=topo)
         np.testing.assert_allclose(h_flat["acc"], h_rs["acc"], atol=2e-3)
         # both engines carry the same (R, N) buffer — including the empty
         # RSU's row, which keeps the round-start cloud anchor (zero-mass

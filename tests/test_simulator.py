@@ -11,8 +11,8 @@ from repro.configs.mnist_mlp import CONFIG as MLP_CFG
 from repro.core.baselines import BASELINES, fedavg, fedprox, h2fed, hierfavg
 from repro.core.h2fed import H2FedParams
 from repro.core.heterogeneity import HeterogeneityModel
-from repro.fedsim.simulator import SimConfig, init_state, make_global_round, \
-    run_simulation
+from repro.fedsim.simulator import SimConfig, init_state, make_global_round
+from repro.fedsim.sweep import adhoc_scenario, run_scenario
 from repro.models import mlp
 
 
@@ -25,8 +25,9 @@ def setup(tiny_task, fed_small):
 
 
 def _run(cfg, fed, params, test, hp, het, rounds=3):
-    return run_simulation(cfg, hp, het, fed, params, rounds,
-                          x_test=test.x, y_test=test.y)
+    res = adhoc_scenario(cfg, hp, het, fed, n_rounds=rounds,
+                         x_test=test.x, y_test=test.y)
+    return run_scenario(res, params)
 
 
 class TestLearning:

@@ -2,7 +2,7 @@
 
 The hard contract: an S-scenario sweep is ONE jitted program (the sweep
 axis is visible in the compiled HLO) and matches S sequential
-``run_simulation`` calls to fp32 tolerance — for the flat engine, the
+``run_scenario`` calls to fp32 tolerance — for the flat engine, the
 semi-async engine (latencies + staleness buffers live), and across
 partitions (including Dirichlet).
 """

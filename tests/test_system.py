@@ -13,7 +13,8 @@ from repro.core.heterogeneity import HeterogeneityModel
 from repro.data.partition import pretrain_split, scenario_two
 from repro.data.synthetic import mnist_class_task
 from repro.fedsim.pretrain import pretrain_to_target, train_centralized
-from repro.fedsim.simulator import SimConfig, run_simulation
+from repro.fedsim.simulator import SimConfig
+from repro.fedsim.sweep import adhoc_scenario, run_scenario
 from repro.models import mlp
 
 
@@ -49,8 +50,9 @@ class TestEndToEnd:
         cfg = SimConfig(n_agents=20, n_rsus=4, batch=16)
         hp = h2fed(mu1=0.01, mu2=0.005, lar=2, lr=0.1)
         het = HeterogeneityModel(csr=0.5, scd=1, lar=hp.lar)
-        _, hist = run_simulation(cfg, hp, het, fed, pre_params, 6,
-                                 x_test=test.x, y_test=test.y)
+        res = adhoc_scenario(cfg, hp, het, fed, n_rounds=6,
+                             x_test=test.x, y_test=test.y)
+        _, hist = run_scenario(res, pre_params)
         assert hist["acc"][-1] > pre_acc + 0.05, (pre_acc, hist["acc"])
 
     def test_centralized_reference_upper_bounds(self, pipeline):
