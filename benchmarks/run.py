@@ -154,6 +154,15 @@ def write_summary(path: Path, bench_dir: Path, since: float) -> None:
             for k in ("sweep_vs_sequential_wall",
                       "sweep_vs_sequential_round", "sweep_trace_count"):
                 summary[k] = rec.get(k)
+            mc, cw = rec.get("mixed_cadence"), rec.get("cold_warm")
+            if mc:       # PR-8: cadence-as-data, one trace for the grid
+                summary["mixed_cadence_trace_count"] = mc.get("trace_count")
+                summary["mixed_cadence_vs_sequential_wall"] = \
+                    mc.get("mixed_cadence_vs_sequential_wall")
+            if cw:       # PR-8: persistent compilation cache, warm start
+                summary["cold_vs_warm_wall"] = cw.get("cold_vs_warm_wall")
+                summary["cold_warm_wall_s"] = {
+                    "cold": cw.get("cold_s"), "warm": cw.get("warm_s")}
         elif name == "streaming_round":
             merge(rec, "streaming_round")
             summary["streaming_agents_per_s"] = rec.get("agents_per_s")

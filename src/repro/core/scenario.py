@@ -113,6 +113,9 @@ class ScenarioSpec:
     eval_every: int = 1
     seed: int = 0        # data / partition / pretrain seed
     sim_seed: int = 0    # connectivity / FSR realization (seed-averaging)
+    # compiled-program caching (core/program_cache, DESIGN.md §10): opt out
+    # to force a fresh trace + compile (debugging, profiling compile time)
+    program_cache: bool = True
 
     # -- validation --------------------------------------------------------
     def validate(self) -> "ScenarioSpec":
@@ -278,17 +281,23 @@ class ResolvedScenario:
     def static_key(self) -> Tuple:
         """Everything that must be EQUAL for scenarios to share one
         compiled sweep program (fedsim/sweep grouping): program structure
-        (shapes, scan lengths, engine flavor) — NOT the per-scenario
-        scalars (csr/fsr/scd/delay_p, μ1/μ2/lr) the sweep batches."""
+        (shapes, engine flavor) — NOT the per-scenario scalars
+        (csr/fsr/scd/delay_p, μ1/μ2/lr) the sweep batches.
+
+        The cadence knobs — ``hp.lar``, ``hp.local_epochs``,
+        ``cloud_every`` — are deliberately ABSENT: the sweep batches them
+        as data too, padding its scans to the group-wide maxima with
+        per-iteration live masks (DESIGN.md §7 "cadence as data"), so
+        mixed-cadence cells land in one program."""
         s = self.spec
         return (s.n_agents, s.n_rsus, s.batch,
                 tuple(self.fed.x.shape),
                 tuple(self.test.x.shape) if self.test is not None else None,
                 s.engine, s.fleet_dtype, s.fused, s.rsu_sharded,
                 s.fleet_store, s.chunk_agents,
-                s.hp.lar, s.hp.local_epochs, s.hp.n_layers,
+                s.hp.n_layers,
                 s.het.max_delay,
-                s.staleness_decay, s.schedule, s.buffer_keep, s.cloud_every,
+                s.staleness_decay, s.schedule, s.buffer_keep,
                 s.rounds, s.eval_every,
                 s.serve_events, s.arrival_rate, s.tick_trigger,
                 s.queue_capacity, s.overload_policy, s.serve_trace)

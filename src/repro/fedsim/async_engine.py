@@ -73,8 +73,9 @@ from repro.data.partition import FederatedData
 from repro.kernels import ops
 from repro.launch.mesh import shard_map
 from repro.models import mlp
-from repro.fedsim.simulator import (SimConfig, _fed_arrays,
-                                    _local_train_flat, round_draws)
+from repro.fedsim.simulator import (Cadence, SimConfig, _fed_arrays,
+                                    _local_train_flat, round_draws,
+                                    round_keys)
 
 PyTree = Any
 
@@ -188,7 +189,8 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
                            het: HeterogeneityModel, fed: FederatedData,
                            spec: flatten.FlatSpec, acfg: AsyncConfig,
                            loss_fn: Callable = mlp.loss_fn, *,
-                           fused: bool = True):
+                           fused: bool = True,
+                           cadence: Optional[Cadence] = None):
     """The un-jitted semi-async global round:
     AsyncSimState -> (AsyncSimState, metrics).
 
@@ -197,9 +199,20 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
     ``buffer_absorb`` merge — as ONE pass over the parameter axis
     (``ops.agg_absorb``); ``fused=False`` keeps the multi-pass program for
     A/B benchmarking (off-TPU both are the same XLA ops, fp32
-    bit-compatible)."""
-    x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
-        _fed_arrays(cfg, hp, fed)
+    bit-compatible).
+
+    ``cadence`` (sweep-only, DESIGN.md §7) pads the tick/minibatch scans to
+    the group-wide static bounds so ``hp.lar``/``hp.local_epochs`` — and
+    ``acfg.cloud_every`` — may be traced per-scenario scalars: dead padded
+    ticks pass the whole carry through unchanged (zero metrics, frozen
+    global-tick clock) and the cloud cadence becomes data (a ``where``-
+    selected fire on ``gtick % cloud_every``, a ``where``-selected
+    round-start re-anchor / round-end aggregation for the ``cloud_every=0``
+    sync-cadence cells)."""
+    x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = _fed_arrays(
+        cfg, hp, fed,
+        epochs_bound=None if cadence is None else cadence.local_epochs)
+    lar_bound = hp.lar if cadence is None else cadence.lar
     A, R, N = cfg.n_agents, cfg.n_rsus, spec.n
     decay = acfg.agent_decay(rsu_assign, R)     # scalar or (A,)
     keep = acfg.rsu_keep(R)                     # scalar or (R,)
@@ -209,9 +222,11 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
             loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
         in_axes=(0, 0, 0, 0, None, 0))
 
-    ce = acfg.cloud_every                       # static cadence (python int)
+    ce = acfg.cloud_every           # cadence: python int, or a traced
+    ce_static = isinstance(ce, (int, np.integer))  # scalar under the sweep
 
-    def tick(carry, key):
+    def tick(carry, inp):
+        key = inp if cadence is None else inp[0]
         (rsu_flat, rsu_mass, cloud_flat, conn, agent_flat,
          pend_x, pend_w, pend_t, cloud_macc, gtick) = carry
 
@@ -273,20 +288,23 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
 
         # 7. cloud cadence on the GLOBAL tick clock (spans round
         #    boundaries): aggregate whatever RSU state exists, weighted by
-        #    the mass absorbed since the last cloud aggregation.  The
-        #    aggregation runs under lax.cond so non-fire ticks pay nothing.
+        #    the mass absorbed since the last cloud aggregation.  Static
+        #    cadence runs under lax.cond so non-fire ticks pay nothing; a
+        #    traced cadence (sweep) where-selects the fire so mixed-cadence
+        #    cells share the one program.
         gtick = gtick + 1
-        if ce:
-            def _fire(args):
-                rsu, macc, cloud = args
-                if fused:
-                    cloud = ops.cloud_blend(rsu, macc, cloud)
-                else:
-                    new_cloud = ops.cloud_agg(rsu, macc)
-                    cloud = jnp.where(jnp.sum(macc) > 0,
-                                      new_cloud.astype(jnp.float32), cloud)
-                return cloud, jnp.zeros_like(macc)
 
+        def _fire(args):
+            rsu, macc, cloud = args
+            if fused:
+                cloud = ops.cloud_blend(rsu, macc, cloud)
+            else:
+                new_cloud = ops.cloud_agg(rsu, macc)
+                cloud = jnp.where(jnp.sum(macc) > 0,
+                                  new_cloud.astype(jnp.float32), cloud)
+            return cloud, jnp.zeros_like(macc)
+
+        if ce_static and ce:
             def _hold(args):
                 _, macc, cloud = args
                 return cloud, macc
@@ -294,6 +312,11 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
             cloud_flat, cloud_macc = jax.lax.cond(
                 (gtick % ce) == 0, _fire, _hold,
                 (rsu_flat, cloud_macc, cloud_flat))
+        elif not ce_static:
+            fire = (ce > 0) & ((gtick % jnp.maximum(ce, 1)) == 0)
+            f_cloud, f_macc = _fire((rsu_flat, cloud_macc, cloud_flat))
+            cloud_flat = jnp.where(fire, f_cloud, cloud_flat)
+            cloud_macc = jnp.where(fire, f_macc, cloud_macc)
 
         tick_metrics = {
             "absorbed_mass": m_i + m_d,                       # (R,)
@@ -301,37 +324,56 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
             "due_mass": jnp.sum(m_d),
             "enqueued_mass": jnp.sum(jnp.where(enq, w_enq, 0.0)),
         }
-        carry = (rsu_flat, rsu_mass, cloud_flat, conn, agent_flat,
-                 pend_x, pend_w, pend_t, cloud_macc, gtick)
-        return carry, tick_metrics
+        new_carry = (rsu_flat, rsu_mass, cloud_flat, conn, agent_flat,
+                     pend_x, pend_w, pend_t, cloud_macc, gtick)
+        if cadence is not None:
+            # dead padded ticks: carry passes through untouched (the tick
+            # clock does NOT advance) and metrics are zero
+            live_i = inp[1]
+            new_carry = jax.tree.map(
+                lambda n, o: jnp.where(live_i, n, o), new_carry, carry)
+            tick_metrics = jax.tree.map(
+                lambda v: jnp.where(live_i, v, jnp.zeros_like(v)),
+                tick_metrics)
+        return new_carry, tick_metrics
 
     def global_round(state: AsyncSimState
                      ) -> Tuple[AsyncSimState, Dict[str, jax.Array]]:
         rng, k_rounds = jax.random.split(state.rng)
-        keys = jax.random.split(k_rounds, hp.lar)
+        keys = round_keys(k_rounds, lar_bound)
+        live = (None if cadence is None
+                else jnp.arange(lar_bound) < hp.lar)     # (lar_bound,)
         # per-round cadence (ce == 0, the sync anchor): RSUs re-anchor to
         # the cloud model at round start (Alg. 2 line 2) and the buffer /
         # cloud-mass accounting restarts with them.  Decoupled cadence
         # (ce > 0): the round boundary is no longer special — RSU buffers,
         # their running mass AND the cloud accumulator all persist, so the
         # mass the eventual cloud aggregation weights by always accounts
-        # for content the buffers still hold.
-        if ce:
-            rsu0, rmass0, macc0 = (state.rsu_flat, state.rsu_mass,
-                                   state.cloud_macc)
-        else:
-            rsu0 = jnp.broadcast_to(spec.to_storage(state.cloud_flat),
+        # for content the buffers still hold.  A traced cadence selects
+        # between the two with ``where`` on ``anchor = (ce == 0)``.
+        anchored = jnp.broadcast_to(spec.to_storage(state.cloud_flat),
                                     (R, N))
-            rmass0 = jnp.zeros((R,), jnp.float32)
-            macc0 = jnp.zeros((R,), jnp.float32)
+        zeros_r = jnp.zeros((R,), jnp.float32)
+        if ce_static:
+            if ce:
+                rsu0, rmass0, macc0 = (state.rsu_flat, state.rsu_mass,
+                                       state.cloud_macc)
+            else:
+                rsu0, rmass0, macc0 = anchored, zeros_r, zeros_r
+        else:
+            anchor = ce == 0
+            rsu0 = jnp.where(anchor, anchored, state.rsu_flat)
+            rmass0 = jnp.where(anchor, zeros_r, state.rsu_mass)
+            macc0 = jnp.where(anchor, zeros_r, state.cloud_macc)
         carry = (rsu0, rmass0, state.cloud_flat,
                  state.conn, state.agent_flat, state.pending_x,
                  state.pending_w, state.pending_t, macc0, state.tick)
-        carry, ticks = jax.lax.scan(tick, carry, keys)
+        carry, ticks = jax.lax.scan(
+            tick, carry, keys if cadence is None else (keys, live))
         (rsu_flat, rsu_mass, cloud_flat, conn, agent_flat,
          pend_x, pend_w, pend_t, cloud_macc, gtick) = carry
 
-        if not ce:
+        if ce_static and not ce:
             # per-round cadence: round-end cloud aggregation over the
             # not-yet-aggregated mass (exactly the sync Alg. 3 line 6).
             if fused:
@@ -343,6 +385,16 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
                                        new_cloud.astype(jnp.float32),
                                        cloud_flat)
             cloud_macc = jnp.zeros((R,), jnp.float32)
+        elif not ce_static:
+            if fused:
+                blended = ops.cloud_blend(rsu_flat, cloud_macc, cloud_flat)
+            else:
+                new_cloud = ops.cloud_agg(rsu_flat, cloud_macc)
+                blended = jnp.where(jnp.sum(cloud_macc) > 0,
+                                    new_cloud.astype(jnp.float32),
+                                    cloud_flat)
+            cloud_flat = jnp.where(anchor, blended, cloud_flat)
+            cloud_macc = jnp.where(anchor, zeros_r, cloud_macc)
 
         out = AsyncSimState(agent_flat=agent_flat, rsu_flat=rsu_flat,
                             rsu_mass=rsu_mass, cloud_flat=cloud_flat,
@@ -558,7 +610,7 @@ def make_sharded_async_global_round(cfg: SimConfig, hp: H2FedParams,
     def global_round(state: AsyncSimState
                      ) -> Tuple[AsyncSimState, Dict[str, jax.Array]]:
         rng, k_rounds = jax.random.split(state.rng)
-        keys = jax.random.split(k_rounds, hp.lar)
+        keys = round_keys(k_rounds, hp.lar)
 
         # draws + latencies on the replicated ORIGINAL agent order (the
         # flat-engine key discipline), permuted onto the pod-block layout

@@ -20,7 +20,8 @@ Event lifecycle (one arrival)::
 
 Tick grouping keeps the batch anchor: every ``hp.lar`` ticks form one
 VIRTUAL ROUND with the exact key discipline of the async engine
-(``rng, k = split(rng); keys = split(k, lar)``), and with ``cloud_every=0``
+(``rng, k = split(rng); keys = round_keys(k, lar)``), and with
+``cloud_every=0``
 the round close runs the same cloud aggregation + RSU re-anchor.  A run
 whose generator delivers every agent exactly once per tick window, with
 decay disabled, therefore equals ``engine="async"`` (and transitively
@@ -56,7 +57,7 @@ from repro.core.load_gen import (Event, PoissonLoadGen, TickTrigger,
 from repro.fedsim.async_engine import AsyncConfig, AsyncSimState, \
     init_async_state
 from repro.fedsim.simulator import _fed_arrays, _local_train_flat, \
-    round_draws
+    round_draws, round_keys
 from repro.kernels import ops
 from repro.models import mlp
 
@@ -423,8 +424,8 @@ def run_serve_loop(res, init_params: Optional[PyTree] = None, *,
     tick_fn = _make_serve_tick(cfg, hp, het, fed, fspec, acfg, loss_fn,
                                fused=s.fused)
     round_close = _make_round_close(fspec, cfg.n_rsus, fused=s.fused)
-    round_keys = jax.jit(
-        lambda rng: (lambda r, k: (r, jax.random.split(k, lar)))(
+    round_keys_fn = jax.jit(
+        lambda rng: (lambda r, k: (r, round_keys(k, lar)))(
             *jax.random.split(rng)))
 
     if eval_fn is None and res.test is not None:
@@ -484,7 +485,7 @@ def run_serve_loop(res, init_params: Optional[PyTree] = None, *,
 
         # ---- drain + fire one tick --------------------------------------
         if tick_in_round == 0:
-            new_rng, keys = round_keys(state.rng)
+            new_rng, keys = round_keys_fn(state.rng)
             state = state._replace(rng=new_rng)
         depth = len(queue)
         batch, coalesced = queue.drain(stats.n_ticks)

@@ -55,7 +55,8 @@ from repro.launch.mesh import agent_axes, shard_map
 from repro.models import mlp
 from repro.fedsim.simulator import (FlatSimState, SimConfig,
                                     _fed_arrays, _local_train_flat,
-                                    init_flat_state, round_draws)
+                                    init_flat_state, round_draws,
+                                    round_keys)
 
 PyTree = Any
 
@@ -192,7 +193,7 @@ def _make_replicated_round(cfg: SimConfig, hp: H2FedParams,
 
     def global_round(state: FlatSimState) -> FlatSimState:
         rng, k_rounds = jax.random.split(state.rng)
-        keys = jax.random.split(k_rounds, hp.lar)
+        keys = round_keys(k_rounds, hp.lar)
         conn, (masks, steps) = jax.lax.scan(draw, state.conn, keys)
         cloud_flat, rsu_flat, agent_flat = smapped(
             state.cloud_flat, state.agent_flat, x_all, y_all,
@@ -274,7 +275,7 @@ def _make_rsu_sharded_round(cfg: SimConfig, hp: H2FedParams,
 
     def global_round(state: FlatSimState) -> FlatSimState:
         rng, k_rounds = jax.random.split(state.rng)
-        keys = jax.random.split(k_rounds, hp.lar)
+        keys = round_keys(k_rounds, hp.lar)
         # draws in the ORIGINAL agent order (the flat-engine key
         # discipline), then permuted onto the pod-block layout
         conn, (masks, steps) = jax.lax.scan(draw, state.conn, keys)

@@ -130,6 +130,40 @@ def from_flat_state(spec: flatten.FlatSpec, state: FlatSimState) -> SimState:
                     conn=state.conn, rng=state.rng)
 
 
+class Cadence(NamedTuple):
+    """Static upper bounds for the cadence knobs (DESIGN.md §7/§10).
+
+    When a round body receives a ``Cadence``, ``hp.lar``/``hp.local_epochs``
+    may be traced per-scenario scalars: the LAR scan runs to ``lar`` and a
+    per-iteration ``live = i < hp.lar`` mask makes padded iterations
+    algebra-neutral (carry and metrics pass through unchanged), while the
+    minibatch scan runs to ``local_epochs``·spe with the existing
+    ``active_steps`` masking.  ``None`` keeps the fully static program."""
+    lar: int
+    local_epochs: int
+
+
+def round_keys(k_rounds, n: int) -> jax.Array:
+    """The ``n`` per-local-round draw keys, cadence-independent.
+
+    Key i is ``fold_in(k_rounds, i)``, so the first k keys of a padded
+    n-bound schedule equal the k keys a lar=k program draws —
+    ``jax.random.split(k, lar)`` does NOT have this prefix property (its
+    counter layout depends on lar).  Every engine derives its local-round
+    keys here so the sweep's masked static-upper-bound padding reproduces
+    sequential execution exactly (tests/test_sweep.py).
+    """
+    return jax.vmap(lambda i: jax.random.fold_in(k_rounds, i))(jnp.arange(n))
+
+
+def _epoch_cap(local_epochs):
+    """randint maxval for the FSR partial-epoch draw; trace-safe (the
+    sweep batches ``local_epochs`` as data, so it may be a tracer)."""
+    if isinstance(local_epochs, (int, np.integer)):
+        return max(int(local_epochs), 1)
+    return jnp.maximum(local_epochs, 1)
+
+
 def round_draws(key, conn: ConnState, het: HeterogeneityModel,
                 hp: H2FedParams, n_agents: int, spe: int):
     """One local round's stochastic realization, shared by every engine.
@@ -144,7 +178,7 @@ def round_draws(key, conn: ConnState, het: HeterogeneityModel,
     epochs = jnp.where(full, hp.local_epochs,
                        jax.random.randint(jax.random.fold_in(k_fsr, 1),
                                           (n_agents,), 0,
-                                          max(hp.local_epochs, 1)))
+                                          _epoch_cap(hp.local_epochs)))
     active_steps = epochs * spe
     mask = connected & (active_steps > 0)
     return conn, mask, active_steps
@@ -208,13 +242,18 @@ def _local_train_flat(loss_fn: Callable, spec: flatten.FlatSpec, x, y,
     return w
 
 
-def _fed_arrays(cfg: SimConfig, hp: H2FedParams, fed: FederatedData):
+def _fed_arrays(cfg: SimConfig, hp: H2FedParams, fed: FederatedData, *,
+                epochs_bound: Optional[int] = None):
     x_all = jnp.asarray(fed.x)
     y_all = jnp.asarray(fed.y)
     n_per_agent = jnp.asarray(fed.n_per_agent, jnp.float32)
     rsu_assign = jnp.asarray(fed.rsu_assign)
     spe = max(int(fed.x.shape[1]) // cfg.batch, 1)       # steps per epoch
-    n_steps = hp.local_epochs * spe                      # static bound
+    # static bound on minibatch steps: when the sweep batches local_epochs
+    # as data, the group-wide maximum (epochs_bound) sizes the scan and
+    # ``active_steps`` masks the tail (DESIGN.md §7)
+    epochs = hp.local_epochs if epochs_bound is None else epochs_bound
+    n_steps = epochs * spe
     return x_all, y_all, n_per_agent, rsu_assign, spe, n_steps
 
 
@@ -222,7 +261,8 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
                           het: HeterogeneityModel, fed: FederatedData,
                           spec: flatten.FlatSpec,
                           loss_fn: Callable = mlp.loss_fn, *,
-                          fused: bool = True):
+                          fused: bool = True,
+                          cadence: Optional[Cadence] = None):
     """The flat-buffer global round body: FlatSimState -> FlatSimState
     (un-jitted — callers compose and jit it).
 
@@ -234,9 +274,17 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
     (aggregation matmul, then the blend) for A/B benchmarking; off-TPU
     both lower to the same XLA ops and are fp32 bit-compatible.  Fleet
     buffers live in ``spec.storage_dtype``; the cloud stays fp32.
+
+    ``cadence`` (sweep-only) pads the LAR/minibatch scans to the group-wide
+    static bounds so ``hp.lar``/``hp.local_epochs`` may be traced scalars:
+    a per-iteration ``live`` mask gates the scan carry and zeroes the
+    per-round masses, so padded iterations are exact no-ops and the padded
+    program reproduces the static one bit-for-bit on live iterations.
     """
-    x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
-        _fed_arrays(cfg, hp, fed)
+    x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = _fed_arrays(
+        cfg, hp, fed,
+        epochs_bound=None if cadence is None else cadence.local_epochs)
+    lar_bound = hp.lar if cadence is None else cadence.lar
 
     train_agents = jax.vmap(
         lambda x, y, w0, wr, wc, act: _local_train_flat(
@@ -248,15 +296,18 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
         # Alg. 2 line 2: RSUs replace w_k with the current cloud model
         rsu_flat = jnp.broadcast_to(spec.to_storage(state.cloud_flat),
                                     (cfg.n_rsus, spec.n))
-        keys = jax.random.split(k_rounds, hp.lar)
+        keys = round_keys(k_rounds, lar_bound)
+        live = (None if cadence is None
+                else jnp.arange(lar_bound) < hp.lar)     # (lar_bound,)
 
-        def local_round(carry, key):
-            rsu_flat, conn, agent_flat = carry
+        def local_round(carry, inp):
+            key = inp if cadence is None else inp[0]
+            rsu_prev, conn_prev, agent_prev = carry
             conn, mask, active_steps = round_draws(
-                key, conn, het, hp, cfg.n_agents, spe)
+                key, conn_prev, het, hp, cfg.n_agents, spe)
 
             # Alg. 2 l.5 / Alg. 1 l.1: every agent starts from its RSU row
-            w_start = jnp.take(rsu_flat, rsu_assign, axis=0)     # (A, N)
+            w_start = jnp.take(rsu_prev, rsu_assign, axis=0)     # (A, N)
             agent_flat = spec.to_storage(
                 train_agents(x_all, y_all, w_start, w_start,
                              state.cloud_flat, active_steps))
@@ -265,18 +316,28 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
             if fused:
                 rsu_flat, mass = ops.agg_blend(
                     agent_flat, n_per_agent, mask.astype(jnp.float32),
-                    rsu_assign, cfg.n_rsus, rsu_flat)
+                    rsu_assign, cfg.n_rsus, rsu_prev)
             else:
                 new_rsu, mass = ops.masked_hier_agg(
                     agent_flat, n_per_agent, mask.astype(jnp.float32),
                     rsu_assign, cfg.n_rsus)
                 rsu_flat = jnp.where((mass > 0)[:, None], new_rsu,
-                                     rsu_flat).astype(rsu_flat.dtype)
+                                     rsu_prev).astype(rsu_prev.dtype)
+            if cadence is not None:
+                # padded LAR iterations are exact no-ops: carry passes
+                # through untouched and the round contributes zero mass
+                live_i = inp[1]
+                rsu_flat, conn, agent_flat = jax.tree.map(
+                    lambda n, o: jnp.where(live_i, n, o),
+                    (rsu_flat, conn, agent_flat),
+                    (rsu_prev, conn_prev, agent_prev))
+                mass = jnp.where(live_i, mass, 0.0)
             return (rsu_flat, conn, agent_flat), mass
 
         (rsu_flat, conn, agent_flat), masses = jax.lax.scan(
             local_round,
-            (rsu_flat, state.conn, state.agent_flat), keys)
+            (rsu_flat, state.conn, state.agent_flat),
+            keys if cadence is None else (keys, live))
 
         # Alg. 3 line 6: cloud aggregation — the (1, R) @ (R, N) matmul
         total_mass = jnp.sum(masses, axis=0)                     # (R,)
@@ -346,7 +407,7 @@ def _make_tree_global_round(cfg: SimConfig, hp: H2FedParams,
         rng, k_rounds = jax.random.split(state.rng)
         # Alg. 2 line 2: RSUs replace w_k with the current cloud model
         rsu_params = broadcast_to_agents(state.cloud_params, cfg.n_rsus)
-        keys = jax.random.split(k_rounds, hp.lar)
+        keys = round_keys(k_rounds, hp.lar)
         (rsu_params, conn, _), (masses, agent_params) = jax.lax.scan(
             local_round, (rsu_params, state.conn, state.cloud_params), keys)
         # Alg. 3 line 6: cloud aggregation, weighted by surviving data mass

@@ -64,7 +64,8 @@ from repro.data.partition import FederatedData
 from repro.kernels import ops
 from repro.models import mlp
 from repro.fedsim.async_engine import _LATENCY_FOLD, AsyncConfig
-from repro.fedsim.simulator import SimConfig, _local_train_flat, round_draws
+from repro.fedsim.simulator import (SimConfig, _local_train_flat,
+                                    round_draws, round_keys)
 
 PyTree = Any
 
@@ -217,7 +218,7 @@ def make_streamed_flat_round(cfg: SimConfig, hp: H2FedParams,
         """One global round's stochastic realization, padded to the chunk
         grid: (conn', rng', weights (LAR, A_pad), steps (LAR, A_pad))."""
         rng, k_rounds = jax.random.split(rng)
-        keys = jax.random.split(k_rounds, hp.lar)
+        keys = round_keys(k_rounds, hp.lar)
 
         def draw(conn, key):
             conn, mask, act = round_draws(key, conn, het, hp, A, spe)
@@ -380,7 +381,7 @@ def make_streamed_async_round(cfg: SimConfig, hp: H2FedParams,
     @jax.jit
     def draws_fn(conn, rng):
         rng, k_rounds = jax.random.split(rng)
-        keys = jax.random.split(k_rounds, hp.lar)
+        keys = round_keys(k_rounds, hp.lar)
 
         def draw(conn, key):
             conn, mask, act = round_draws(key, conn, het, hp, A, spe)

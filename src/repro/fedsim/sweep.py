@@ -27,9 +27,14 @@ a handful of scalars.  This module makes the GRID the compiled unit:
     device-mapping table in DESIGN.md §7).
 
 ``run_scenarios`` is the one entry point the experiment layer needs: it
-resolves specs, groups them by ``static_key``, sweeps each group (falling
-back to sequential execution for singleton groups and the tree/sharded
-engines), and returns per-scenario histories in input order.
+resolves specs, groups them by ``static_key``, sweeps each group — the
+cadence knobs (``lar`` / ``local_epochs`` / ``cloud_every``) batch as
+(S,) data under masked static upper bounds, so mixed-cadence cells share
+ONE program — falling back to sequential execution only for the
+tree/sharded/streamed/serve engines, and returns per-scenario histories
+in input order.  Built programs are memoized in the
+``core/program_cache`` registry (and, with ``REPRO_CACHE_DIR`` set, in
+JAX's persistent compilation cache), so re-runs skip tracing/compiling.
 """
 from __future__ import annotations
 
@@ -41,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import flatten
+from repro.core import flatten, program_cache
 from repro.core.heterogeneity import ConnState
 from repro.core.scenario import ResolvedScenario, ScenarioSpec
 from repro.data.partition import FederatedData
@@ -55,6 +60,12 @@ PyTree = Any
 # group (enforced by grouping on ResolvedScenario.static_key)
 DYN_HP = ("mu1", "mu2", "lr")
 DYN_HET = ("csr", "fsr", "scd", "delay_p")
+# cadence knobs batched as (S,) int32 data under masked static upper
+# bounds (DESIGN.md §7 "cadence as data"): the scans pad to the group
+# maxima and live masks neutralize the tail, so mixed-cadence cells
+# share ONE program instead of one trace per cadence
+DYN_CADENCE = ("lar", "local_epochs")        # hp.* int fields
+DYN_SPEC = ("cloud_every",)                  # spec.* int fields (async)
 
 # engines whose round body vmaps over the sweep axis
 SWEEPABLE = ("flat", "async")
@@ -90,6 +101,8 @@ def run_scenario(res, init_params: Optional[PyTree] = None, *,
     if isinstance(res, ScenarioSpec):
         res = res.resolve()
     s = res.spec.validate()
+    if s.program_cache:
+        program_cache.enable_persistent_cache()
     if init_params is None:
         from repro.configs.mnist_mlp import CONFIG
         init_params = mlp.init_params(CONFIG, jax.random.key(s.seed))
@@ -171,21 +184,46 @@ def _stack_or_share(arrays):
     return jnp.stack([jnp.asarray(a) for a in arrays]), 0
 
 
-def _dyn_scalars(specs: Sequence[ScenarioSpec]) -> Dict[str, jax.Array]:
-    """(S,)-batched hp/het scalars — only the fields that actually differ
-    across the group (equal fields stay baked into the template, so a pure
-    seed-average compiles the identical body the single run does)."""
+def _dyn_scalars(specs: Sequence[ScenarioSpec],
+                 force: Sequence[str] = ()) -> Dict[str, jax.Array]:
+    """(S,)-batched hp/het/cadence scalars — the fields that actually
+    differ across the group (equal fields stay baked into the template, so
+    a pure seed-average compiles the identical body the single run does).
+
+    ``force`` names fields to batch even when equal within ``specs`` —
+    ``run_scenarios`` passes the whole group's varying set so every
+    ``max_sweep`` chunk of one group (including a constant tail chunk)
+    traces the identical program."""
+    force = set(force)
     dyn: Dict[str, jax.Array] = {}
+
+    def _add(key, vals, dtype):
+        if key in force or any(v != vals[0] for v in vals[1:]):
+            dyn[key] = jnp.asarray(vals, dtype)
+
     for name in DYN_HP:
-        vals = [getattr(s.hp, name) for s in specs]
-        if any(v != vals[0] for v in vals[1:]):
-            dyn[f"hp.{name}"] = jnp.asarray(vals, jnp.float32)
+        _add(f"hp.{name}", [getattr(s.hp, name) for s in specs],
+             jnp.float32)
+    for name in DYN_CADENCE:
+        _add(f"hp.{name}", [getattr(s.hp, name) for s in specs], jnp.int32)
     for name in DYN_HET:
-        vals = [getattr(s.het, name) for s in specs]
-        if any(v != vals[0] for v in vals[1:]):
-            dyn[f"het.{name}"] = jnp.asarray(
-                vals, jnp.int32 if name == "scd" else jnp.float32)
+        _add(f"het.{name}", [getattr(s.het, name) for s in specs],
+             jnp.int32 if name == "scd" else jnp.float32)
+    for name in DYN_SPEC:
+        _add(f"spec.{name}", [getattr(s, name) for s in specs], jnp.int32)
     return dyn
+
+
+def _cadence_bounds(specs: Sequence[ScenarioSpec],
+                    dyn_names: Sequence[str]
+                    ) -> Optional[simulator.Cadence]:
+    """Group-wide static scan bounds when any cadence knob is batched;
+    None keeps the fully static (ungated) round body."""
+    if not any(f"hp.{n}" in dyn_names for n in DYN_CADENCE):
+        return None
+    return simulator.Cadence(
+        lar=max(s.hp.lar for s in specs),
+        local_epochs=max(s.hp.local_epochs for s in specs))
 
 
 # --------------------------------------------------------------------------
@@ -226,14 +264,42 @@ def _shard_sweep(tree, mesh):
     return jax.tree.map(put, tree)
 
 
+def _baked_scalars(s0: ScenarioSpec, dyn_names) -> tuple:
+    """The hp/het/cadence values a trace bakes in as constants — every
+    sweepable scalar NOT batched in ``dyn``.  Part of the program-cache
+    key: two groups may share one registry entry exactly when their baked
+    constants (and everything else in the key) agree."""
+    baked = []
+    for name in DYN_HP + DYN_CADENCE:
+        if f"hp.{name}" not in dyn_names:
+            baked.append((f"hp.{name}", getattr(s0.hp, name)))
+    for name in DYN_HET:
+        if f"het.{name}" not in dyn_names:
+            baked.append((f"het.{name}", getattr(s0.het, name)))
+    for name in DYN_SPEC:
+        if f"spec.{name}" not in dyn_names:
+            baked.append((f"spec.{name}", getattr(s0, name)))
+    return tuple(baked)
+
+
 def build_sweep(group: Sequence[ResolvedScenario], init_params,
                 *, loss_fn: Callable = mlp.loss_fn,
-                shard: bool = True) -> SweepProgram:
+                shard: bool = True,
+                force_dyn: Sequence[str] = (),
+                cadence: Optional[simulator.Cadence] = None
+                ) -> SweepProgram:
     """Stack a static-compatible scenario group into one vmapped, jitted
     round program (the ONE jit trace a grid pays).
 
     ``init_params``: a single parameter pytree shared by every scenario or
     a per-scenario list; sweep state is built from its ravel.
+
+    ``force_dyn`` / ``cadence`` let ``run_scenarios`` pin the batched-field
+    set and the scan bounds group-wide, so every ``max_sweep`` chunk of one
+    group reuses the identical program (core/program_cache registry hit).
+    When the spec opts in (``program_cache=True``, the default) the built
+    round/eval programs are memoized under a :class:`ProgramKey` — a
+    repeated grid, a later chunk, or a singleton re-run skips tracing.
     """
     specs = [r.spec for r in group]
     s0, cfg = specs[0], group[0].cfg
@@ -272,7 +338,9 @@ def build_sweep(group: Sequence[ResolvedScenario], init_params,
     for name in ("x", "y", "n_per_agent", "rsu_assign"):
         data[name], data_axes[name] = _stack_or_share(
             [getattr(f, name) for f in feds])
-    dyn = _dyn_scalars(specs)
+    dyn = _dyn_scalars(specs, force=force_dyn)
+    if cadence is None:
+        cadence = _cadence_bounds(specs, dyn)
 
     hp0, het0 = s0.hp, s0.het
 
@@ -285,12 +353,20 @@ def build_sweep(group: Sequence[ResolvedScenario], init_params,
         het = dataclasses.replace(het0, **het_kw) if het_kw else het0
         return hp, het
 
+    # eval axes enter the program key too (shared vs stacked test set is
+    # a different eval trace)
+    x_t, ax_x = _stack_or_share([r.test.x for r in group])
+    y_t, ax_y = _stack_or_share([r.test.y for r in group])
+    mesh = sweep_mesh(S) if shard else None
+
     if engine == "flat":
         def one_round(state, data_i, dyn_i):
+            program_cache.note_trace("sweep_round")
             hp, het = _materialize(dyn_i)
             fed = FederatedData(**data_i)
             body = simulator._make_flat_round_body(
-                cfg, hp, het, fed, fspec, loss_fn, fused=s0.fused)
+                cfg, hp, het, fed, fspec, loss_fn, fused=s0.fused,
+                cadence=cadence)
             return body(state)
 
         sv = fspec.to_storage(vecs)
@@ -304,10 +380,16 @@ def build_sweep(group: Sequence[ResolvedScenario], init_params,
         acfg = async_config(s0).validate()
 
         def one_round(state, data_i, dyn_i):
+            program_cache.note_trace("sweep_round")
             hp, het = _materialize(dyn_i)
+            a = acfg
+            if "spec.cloud_every" in dyn_i:
+                a = dataclasses.replace(
+                    acfg, cloud_every=dyn_i["spec.cloud_every"])
             fed = FederatedData(**data_i)
             body = async_engine._make_async_round_body(
-                cfg, hp, het, fed, fspec, acfg, loss_fn, fused=s0.fused)
+                cfg, hp, het, fed, fspec, a, loss_fn, fused=s0.fused,
+                cadence=cadence)
             return body(state)
 
         sv = fspec.to_storage(vecs)
@@ -324,19 +406,35 @@ def build_sweep(group: Sequence[ResolvedScenario], init_params,
             cloud_macc=jnp.zeros((S, R), jnp.float32),
             tick=jnp.zeros((S,), jnp.int32))
 
-    round_fn = jax.jit(jax.vmap(one_round, in_axes=(0, data_axes, 0)),
-                       donate_argnums=(0,))
+    def _build_programs():
+        round_fn = jax.jit(jax.vmap(one_round, in_axes=(0, data_axes, 0)),
+                           donate_argnums=(0,))
+        # batched eval on the (S, N) cloud master — shared test set when
+        # every scenario references the same arrays
+        eval_fn = jax.jit(jax.vmap(
+            lambda v, x, y: mlp.accuracy(fspec.unravel(v), x, y),
+            in_axes=(0, ax_x, ax_y)))
+        return round_fn, eval_fn
 
-    # batched eval on the (S, N) cloud master — shared test set when every
-    # scenario references the same arrays
-    x_t, ax_x = _stack_or_share([r.test.x for r in group])
-    y_t, ax_y = _stack_or_share([r.test.y for r in group])
-    eval_fn = jax.jit(jax.vmap(
-        lambda v, x, y: mlp.accuracy(fspec.unravel(v), x, y),
-        in_axes=(0, ax_x, ax_y)))
+    if s0.program_cache:
+        program_cache.enable_persistent_cache()
+    prog_key = program_cache.ProgramKey(
+        kind="sweep",
+        static_key=group[0].static_key,
+        n_scenarios=S,
+        dyn_names=tuple(sorted(dyn)),
+        baked=(_baked_scalars(s0, dyn), loss_fn),
+        cadence=cadence,
+        data_axes=(tuple(sorted(data_axes.items(),
+                                key=lambda kv: kv[0])), ax_x, ax_y),
+        donation=(0,),
+        devices=program_cache.device_fingerprint(),
+        mesh=program_cache.mesh_fingerprint(mesh),
+        flags=program_cache.ops_flags(s0.fused))
+    round_fn, eval_fn = program_cache.get_or_build(
+        prog_key, _build_programs, enabled=s0.program_cache)
     eval_closed = lambda cloud: eval_fn(cloud, x_t, y_t)    # noqa: E731
 
-    mesh = sweep_mesh(S) if shard else None
     if mesh is not None:
         state = _shard_sweep(state, mesh)
         dyn = _shard_sweep(dyn, mesh)
@@ -352,11 +450,14 @@ def build_sweep(group: Sequence[ResolvedScenario], init_params,
 
 def run_sweep(group: Sequence[ResolvedScenario], init_params, *,
               loss_fn: Callable = mlp.loss_fn, shard: bool = True,
+              force_dyn: Sequence[str] = (),
+              cadence: Optional[simulator.Cadence] = None,
               ) -> List[Dict[str, np.ndarray]]:
     """Run one static-compatible group as a single compiled sweep; returns
     per-scenario histories (same schema as ``run_simulation``'s; async
     scenarios additionally record absorbed/pending mass)."""
-    prog = build_sweep(group, init_params, loss_fn=loss_fn, shard=shard)
+    prog = build_sweep(group, init_params, loss_fn=loss_fn, shard=shard,
+                       force_dyn=force_dyn, cadence=cadence)
     s0 = group[0].spec
     state = prog.state
     accs, rounds = [], []
@@ -388,13 +489,19 @@ def run_scenarios(specs_or_resolved: Sequence, init_params, *,
                   max_sweep: int = 0) -> List[Dict[str, np.ndarray]]:
     """Run a whole grid: group by ``static_key``, sweep every compatible
     group as one compiled program, fall back to sequential execution for
-    singleton groups and non-sweepable engines.  Returns histories in
-    input order.
+    non-sweepable engines.  Returns histories in input order.
+
+    Sweepable singleton groups run through the (cached) one-cell sweep
+    program rather than the sequential engines, so a lone spec re-run is a
+    warm program-cache hit (DESIGN.md §10).
 
     ``init_params``: one shared pytree, a per-scenario list, or a callable
     ``spec -> pytree`` (e.g. the per-dataset pretrained model).
     ``max_sweep`` > 0 chunks oversized groups (memory bound: the sweep
-    state is S× the single-scenario fleet).
+    state is S× the single-scenario fleet).  A short tail chunk is padded
+    to ``max_sweep`` with duplicates of its last cell (results sliced
+    off), and the batched-field set + cadence bounds are pinned group-wide,
+    so every chunk of a group runs the SAME compiled program.
     """
     resolved = [s.resolve() if isinstance(s, ScenarioSpec) else s
                 for s in specs_or_resolved]
@@ -409,22 +516,34 @@ def run_scenarios(specs_or_resolved: Sequence, init_params, *,
 
     out: List[Optional[Dict[str, np.ndarray]]] = [None] * len(resolved)
     for idx in group_indices(resolved):
+        s0 = resolved[idx[0]].spec
+        if (s0.engine not in SWEEPABLE or s0.fleet_store != "device"
+                or s0.chunk_agents or s0.serve_events):
+            for i in idx:
+                _, hist = run_scenario(resolved[i], params_list[i],
+                                       loss_fn=loss_fn)
+                out[i] = hist
+            continue
+        # pin the batched fields + cadence bounds across the WHOLE group
+        # so every max_sweep chunk traces (or registry-hits) one program
+        group_specs = [resolved[i].spec for i in idx]
+        force_dyn = tuple(sorted(_dyn_scalars(group_specs)))
+        cadence = _cadence_bounds(group_specs, force_dyn)
         chunks = ([idx] if not max_sweep else
                   [idx[i:i + max_sweep]
                    for i in range(0, len(idx), max_sweep)])
         for chunk in chunks:
-            group = [resolved[i] for i in chunk]
-            s0 = group[0].spec
-            if (len(chunk) == 1 or s0.engine not in SWEEPABLE
-                    or s0.fleet_store != "device" or s0.chunk_agents
-                    or s0.serve_events):
-                for i in chunk:
-                    _, hist = run_scenario(resolved[i], params_list[i],
-                                           loss_fn=loss_fn)
-                    out[i] = hist
-            else:
-                hists = run_sweep(group, [params_list[i] for i in chunk],
-                                  loss_fn=loss_fn, shard=shard)
-                for i, h in zip(chunk, hists):
-                    out[i] = h
+            # pad a short tail chunk to max_sweep with duplicates of its
+            # last cell — same program as the full chunks; the duplicate
+            # lanes are algebra-neutral (vmap lanes are independent) and
+            # their histories are sliced off below
+            pad = (max_sweep - len(chunk)
+                   if max_sweep and len(idx) > max_sweep else 0)
+            cidx = list(chunk) + [chunk[-1]] * pad
+            hists = run_sweep([resolved[i] for i in cidx],
+                              [params_list[i] for i in cidx],
+                              loss_fn=loss_fn, shard=shard,
+                              force_dyn=force_dyn, cadence=cadence)
+            for i, h in zip(chunk, hists):
+                out[i] = h
     return out

@@ -54,6 +54,14 @@ def _interpret() -> bool:
     return _backend_interpret()
 
 
+def interpret_mode() -> bool:
+    """The effective Pallas interpret flag (force > env > backend) — part
+    of the compiled-program cache key (core/program_cache, DESIGN.md §10):
+    programs traced under different interpret modes are different programs.
+    """
+    return _interpret()
+
+
 def _xla_agg_matmul(weight_matrix, stacked):
     """The aggregation matmul as one XLA dot — same contract as
     ``masked_hier_agg.weighted_agg_matmul`` (fp32 accumulate, param dtype

@@ -33,6 +33,7 @@ PERTURB = {
     "tick_trigger": "deadline:1.0", "queue_capacity": 128,
     "overload_policy": "backpressure", "serve_trace": "trace.jsonl",
     "rounds": 5, "eval_every": 2, "seed": 1, "sim_seed": 1,
+    "program_cache": False,
 }
 
 
@@ -101,8 +102,17 @@ class TestResolve:
         a = BASE.resolve()
         assert a.static_key == BASE.replace(
             het=HeterogeneityModel(csr=0.2)).resolve().static_key
-        assert a.static_key != BASE.replace(
+        # cadence knobs batch as data (DESIGN.md §7): lar / local_epochs /
+        # cloud_every do NOT split a group anymore
+        assert a.static_key == BASE.replace(
             hp=H2FedParams(lar=3)).resolve().static_key
+        assert a.static_key == BASE.replace(
+            hp=H2FedParams(local_epochs=2)).resolve().static_key
+        assert a.static_key == BASE.replace(
+            cloud_every=3).resolve().static_key
+        # true program structure still splits
+        assert a.static_key != BASE.replace(
+            hp=H2FedParams(n_layers=1)).resolve().static_key
         assert a.static_key != BASE.replace(engine="async").resolve() \
             .static_key
 

@@ -15,6 +15,7 @@ import numpy as np
 import pytest
 
 from repro.configs.mnist_mlp import CONFIG as MLP_CFG
+from repro.core import program_cache
 from repro.core.h2fed import H2FedParams
 from repro.core.heterogeneity import HeterogeneityModel
 from repro.core.scenario import ScenarioSpec
@@ -179,3 +180,82 @@ class TestGrouping:
         res = BASE.replace(engine="tree").resolve()
         with pytest.raises(ValueError, match="not sweepable"):
             sweep.build_sweep([res], params)
+
+
+class TestMixedCadence:
+    """The PR-8 contract: cadence knobs (lar / local_epochs / cloud_every)
+    batch as data under masked static upper bounds, so a mixed-cadence grid
+    is ONE traced program that matches sequential runs exactly."""
+
+    def test_flat_mixed_cadence_one_trace(self, params):
+        program_cache.clear()
+        specs = [BASE.replace(
+            hp=dataclasses.replace(BASE.hp, lar=l, local_epochs=e),
+            het=dataclasses.replace(BASE.het, csr=c))
+            for (l, e, c) in ((2, 1, 0.8), (3, 2, 0.5), (1, 2, 1.0))]
+        assert len(sweep.group_indices([s.resolve() for s in specs])) == 1
+        _assert_matches_sequential(specs, params)
+        assert program_cache.trace_count("sweep_round") == 1
+
+    def test_async_mixed_cadence_one_trace(self, params):
+        """lar, local_epochs AND cloud_every (incl. the 0 = per-round
+        anchor) all vary inside one vmapped async program; staleness
+        buffers and in-flight mass still match sequential."""
+        program_cache.clear()
+        base = BASE.replace(
+            engine="async",
+            het=dataclasses.replace(BASE.het, max_delay=2, delay_p=0.4),
+            staleness_decay=0.6, buffer_keep=0.25)
+        specs = [base.replace(
+            hp=dataclasses.replace(base.hp, lar=l, local_epochs=e),
+            cloud_every=ce)
+            for (l, e, ce) in ((2, 1, 0), (3, 2, 2), (1, 2, 3))]
+        assert len(sweep.group_indices([s.resolve() for s in specs])) == 1
+        seq, hists = _assert_matches_sequential(specs, params)
+        for a, b in zip(seq, hists):
+            np.testing.assert_allclose(a["absorbed_mass"],
+                                       b["absorbed_mass"], rtol=1e-5)
+            np.testing.assert_allclose(a["pending_mass"],
+                                       b["pending_mass"], rtol=1e-5)
+        assert program_cache.trace_count("sweep_round") == 1
+
+    def test_mixed_cadence_hlo_is_one_program(self, params):
+        """The cadence scalars enter the compiled program as (S,) params,
+        not as baked constants — the whole group shares one HLO."""
+        specs = [BASE.replace(
+            hp=dataclasses.replace(BASE.hp, lar=l, local_epochs=e))
+            for (l, e) in ((1, 1), (2, 2), (3, 1))]
+        prog = sweep.build_sweep([s.resolve() for s in specs], params)
+        assert set(prog.dyn) == {"hp.lar", "hp.local_epochs"}
+        txt = prog.round_fn.lower(prog.state, prog.data,
+                                  prog.dyn).compile().as_text()
+        shapes = hlo_analysis.param_shapes(txt).values()
+        n = prog.fspec.n
+        assert any(f"f32[3,8,{n}]" in v for v in shapes), sorted(shapes)
+        assert any("s32[3]" in v for v in shapes), sorted(shapes)
+
+    def test_max_sweep_tail_padding_reuses_program(self, params):
+        """5 cells at max_sweep=2: the odd tail chunk is padded to width 2
+        (results sliced off), so every chunk replays one trace."""
+        program_cache.clear()
+        specs = [BASE.replace(
+            het=dataclasses.replace(BASE.het, csr=c))
+            for c in (1.0, 0.8, 0.6, 0.4, 0.2)]
+        seq = [sweep.run_scenario(s, params)[1] for s in specs]
+        hists = sweep.run_scenarios(specs, params, max_sweep=2)
+        assert len(hists) == len(specs)
+        for a, b in zip(seq, hists):
+            np.testing.assert_allclose(a["acc"], b["acc"], atol=2e-5)
+        assert program_cache.trace_count("sweep_round") == 1
+
+    def test_singleton_routes_through_cached_program(self, params):
+        """A 1-cell group runs as an S=1 sweep; a re-run is a registry hit
+        (no retrace) and reproduces the exact same history."""
+        program_cache.clear()
+        spec = BASE.replace(sim_seed=3)
+        h1 = sweep.run_scenarios([spec], params)[0]
+        assert program_cache.trace_count("sweep_round") == 1
+        h2 = sweep.run_scenarios([spec], params)[0]
+        assert program_cache.trace_count("sweep_round") == 1
+        assert program_cache.stats()["hits"] >= 1
+        np.testing.assert_array_equal(h1["acc"], h2["acc"])
