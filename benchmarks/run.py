@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows for:
               fleet cell (DESIGN.md §8)
   serving — continuous-serving event loop: Poisson load, overload policies,
             batch↔serving anchor + trace-replay determinism (DESIGN.md §9)
+  chaos   — deterministic fault injection: 90%-disconnect + RSU outage +
+            NaN convergence vs clean, quarantine counters, serve-loop
+            event-conservation identity (DESIGN.md §11)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline]
                                                 [--json results/bench/bench.json]
@@ -96,6 +99,11 @@ def bench_serving():
     return serving_loop.run()
 
 
+def bench_chaos():
+    from benchmarks import chaos
+    return chaos.run()
+
+
 SUITES = {
     "fig2": bench_fig2,
     "fig3": bench_fig3,
@@ -109,6 +117,7 @@ SUITES = {
     "sweep": bench_sweep,
     "streaming": bench_streaming,
     "serving": bench_serving,
+    "chaos": bench_chaos,
 }
 
 
@@ -183,6 +192,16 @@ def write_summary(path: Path, bench_dir: Path, since: float) -> None:
                 "model_staleness_mean", "serve_p50_ms", "final_acc",
                 "serving_equals_async", "trace_replay_deterministic")}
             summary["serving_overload"] = rec.get("overload")
+        elif name == "chaos":
+            merge(rec, "chaos")
+            # PR-9: the robustness headline — faulted-vs-clean accuracy
+            # gap + quarantine counter, asserted by CI from the summary
+            for k in ("faulted_vs_clean_final_acc", "quarantined_updates",
+                      "clean_final_acc", "faulted_final_acc",
+                      "faulted_acc_at_clean_horizon", "pretrain_acc",
+                      "disconnect_frac", "fault_accounting_identity"):
+                summary[k] = rec.get(k)
+            summary["serving_chaos"] = rec.get("serving_chaos")
     path.write_text(json.dumps(summary, indent=1))
     print(f"[summary] {path}", file=sys.stderr)
 

@@ -1,13 +1,21 @@
-"""Dependency-free pytree checkpoint store (npz payload + json manifest).
+"""Dependency-free pytree checkpoint store (single npz payload per step).
 
-Layout per step:  <dir>/step_<n>/manifest.json + arrays.npz
-The manifest records the treedef (as a nested structure of Nones) and leaf
-dtypes so restore round-trips exactly.  Atomic via tmp-dir rename.
+Layout per step:  <dir>/step_<n>.npz holding the leaf arrays plus an
+embedded ``__manifest__`` JSON blob recording the treedef (as a string and,
+when possible, a serialized proto) and leaf dtypes so restore round-trips
+exactly.
+
+Crash safety: the npz is written to a temp file in the same directory and
+committed with ``os.replace`` (atomic on POSIX), so a reader either sees the
+complete previous checkpoint or the complete new one — never a torn file.
+A legacy directory layout (``step_<n>/manifest.json`` + ``arrays.npz``) is
+still readable for checkpoints written by older versions.
 """
 from __future__ import annotations
 
 import json
-import shutil
+import os
+import tempfile
 from pathlib import Path
 from typing import Any, Optional
 
@@ -16,6 +24,8 @@ import ml_dtypes
 import numpy as np
 
 PyTree = Any
+
+_MANIFEST_KEY = "__manifest__"
 
 
 def _to_storable(a: np.ndarray) -> np.ndarray:
@@ -38,17 +48,7 @@ def _flatten(tree: PyTree):
     return leaves, treedef
 
 
-def save(directory: str | Path, step: int, tree: PyTree) -> Path:
-    directory = Path(directory)
-    final = directory / f"step_{step:08d}"
-    tmp = directory / f".tmp_step_{step:08d}"
-    if tmp.exists():
-        shutil.rmtree(tmp)
-    tmp.mkdir(parents=True)
-    leaves, treedef = _flatten(tree)
-    arrays = {f"leaf_{i}": _to_storable(np.asarray(l))
-              for i, l in enumerate(leaves)}
-    np.savez(tmp / "arrays.npz", **arrays)
+def _build_manifest(step: int, tree: PyTree, leaves) -> dict:
     try:
         structure = jax.tree_util.tree_structure(
             tree).serialize_using_proto().hex()
@@ -56,27 +56,81 @@ def save(directory: str | Path, step: int, tree: PyTree) -> Path:
         # user-defined pytree nodes (e.g. ConnState) cannot be
         # proto-serialized — restore then needs ``like=``
         structure = None
-    manifest = {
+    return {
         "step": step,
         "n_leaves": len(leaves),
-        "treedef": str(treedef),
+        "treedef": str(jax.tree_util.tree_structure(tree)),
         "structure": structure,
         "dtypes": [str(np.asarray(l).dtype) for l in leaves],
         "shapes": [list(np.asarray(l).shape) for l in leaves],
     }
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
-    if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)
+
+
+def save(directory: str | Path, step: int, tree: PyTree) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}.npz"
+    leaves, _ = _flatten(tree)
+    arrays = {f"leaf_{i}": _to_storable(np.asarray(l))
+              for i, l in enumerate(leaves)}
+    manifest = _build_manifest(step, tree, leaves)
+    arrays[_MANIFEST_KEY] = np.frombuffer(
+        json.dumps(manifest).encode(), dtype=np.uint8).copy()
+    # Write-then-replace: a crash mid-write leaves only an orphan temp file;
+    # the committed checkpoint is always complete.
+    fd, tmp_name = tempfile.mkstemp(
+        prefix=f".tmp_step_{step:08d}_", suffix=".npz", dir=directory)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp_name, final)
+    except BaseException:
+        try:
+            os.unlink(tmp_name)
+        except OSError:
+            pass
+        raise
     return final
+
+
+def _step_of(p: Path) -> Optional[int]:
+    stem = p.name[:-len(".npz")] if p.name.endswith(".npz") else p.name
+    if stem.startswith("."):
+        return None
+    try:
+        return int(stem.split("_")[1])
+    except (IndexError, ValueError):
+        return None
 
 
 def latest_step(directory: str | Path) -> Optional[int]:
     directory = Path(directory)
     if not directory.exists():
         return None
-    steps = [int(p.name.split("_")[1]) for p in directory.glob("step_*")]
+    steps = [s for p in directory.glob("step_*")
+             if (s := _step_of(p)) is not None]
     return max(steps) if steps else None
+
+
+def _load_payload(directory: Path, step: int):
+    """Return (manifest, leaves) for a step, reading either layout."""
+    file_path = directory / f"step_{step:08d}.npz"
+    legacy_dir = directory / f"step_{step:08d}"
+    if file_path.exists():
+        with np.load(file_path) as z:
+            manifest = json.loads(bytes(z[_MANIFEST_KEY]).decode())
+            leaves = [z[f"leaf_{i}"].astype(_resolve_dtype(dt))
+                      for i, dt in enumerate(manifest["dtypes"])]
+        return manifest, leaves
+    if legacy_dir.is_dir():
+        manifest = json.loads((legacy_dir / "manifest.json").read_text())
+        with np.load(legacy_dir / "arrays.npz") as z:
+            leaves = [z[f"leaf_{i}"].astype(_resolve_dtype(dt))
+                      for i, dt in enumerate(manifest["dtypes"])]
+        return manifest, leaves
+    raise FileNotFoundError(f"no checkpoint for step {step} under {directory}")
 
 
 def restore(directory: str | Path, step: Optional[int] = None,
@@ -88,11 +142,7 @@ def restore(directory: str | Path, step: Optional[int] = None,
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
-    path = directory / f"step_{step:08d}"
-    manifest = json.loads((path / "manifest.json").read_text())
-    with np.load(path / "arrays.npz") as z:
-        leaves = [z[f"leaf_{i}"].astype(_resolve_dtype(dt))
-                  for i, dt in enumerate(manifest["dtypes"])]
+    manifest, leaves = _load_payload(directory, step)
     if like is not None:
         treedef = jax.tree_util.tree_structure(like)
     elif manifest.get("structure"):
@@ -100,6 +150,6 @@ def restore(directory: str | Path, step: Optional[int] = None,
             jax.tree_util.default_registry, bytes.fromhex(manifest["structure"]))
     else:
         raise ValueError(
-            f"checkpoint {path} holds user-defined pytree nodes; pass "
-            f"``like=`` with a matching template to restore")
+            f"checkpoint step {step} under {directory} holds user-defined "
+            f"pytree nodes; pass ``like=`` with a matching template to restore")
     return jax.tree_util.tree_unflatten(treedef, leaves)

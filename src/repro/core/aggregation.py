@@ -171,6 +171,44 @@ def buffer_absorb(buf: jax.Array, buf_mass: jax.Array, num: jax.Array,
     return out.astype(buf.dtype), total
 
 
+def screen_updates(payload: jax.Array, ref: jax.Array, weights: jax.Array,
+                   *, nonfinite: bool = True, norm_clip: float = 0.0,
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quarantine gate for submitted updates (DESIGN.md §11).
+
+    payload: (A, N) trained rows about to enter aggregation; ref: (A, N)
+    the rows each agent trained *from* (its RSU model at dispatch);
+    weights: (A,) the unguarded aggregation weights (used only to count
+    quarantines — a zero-weight corrupt row is not a quarantine event).
+
+    Screens: ``nonfinite`` rejects rows with any NaN/Inf entry;
+    ``norm_clip > 0`` additionally rejects rows whose update norm
+    ``||payload - ref||₂`` exceeds the clip (byzantine blow-ups; a
+    non-finite delta compares False, so it is rejected here too).
+
+    Returns ``(clean, okf, n_quarantined)``: quarantined rows are
+    *scrubbed* back to ``ref`` (0·NaN = NaN would otherwise poison the
+    aggregation matmul even at zero weight), ``okf`` is the (A,) float32
+    survival mask the caller folds into its weight-matrix mask — mass
+    accounting stays conserved because the mass IS the sum of guarded
+    weights — and ``n_quarantined`` counts rejected rows that carried
+    weight.  With every row surviving, ``clean`` is bitwise ``payload``
+    and ``okf`` all-ones (the zero-fault anchor relies on this).
+    """
+    p32 = payload.astype(jnp.float32)
+    ok = jnp.ones((payload.shape[0],), bool)
+    if nonfinite:
+        ok = ok & jnp.all(jnp.isfinite(p32), axis=1)
+    if norm_clip > 0.0:
+        delta = p32 - ref.astype(jnp.float32)
+        nrm = jnp.sqrt(jnp.sum(delta * delta, axis=1))
+        ok = ok & (nrm <= jnp.float32(norm_clip))
+    clean = jnp.where(ok[:, None], payload, ref.astype(payload.dtype))
+    n_quarantined = jnp.sum(
+        ((weights.astype(jnp.float32) > 0) & ~ok).astype(jnp.int32))
+    return clean, ok.astype(jnp.float32), n_quarantined
+
+
 def masked_weighted_mean(stacked: PyTree, weights: jax.Array,
                          mask: Optional[jax.Array] = None) -> PyTree:
     """Σ_a m_a·w_a·x_a / Σ_a m_a·w_a over the leading axis.

@@ -1,0 +1,294 @@
+"""Deterministic fault-injection subsystem (DESIGN.md §11).
+
+A :class:`FaultPlan` is a declarative, seeded, fully reproducible fault
+schedule for one scenario: per-agent churn windows (hard disconnects
+beyond the benign latency model), whole-RSU outage intervals,
+corrupted-update injection (NaN/Inf payloads, scaled/byzantine payloads,
+replayed stale rows) and event-queue perturbations for the serve loop
+(duplicate admissions, clock skew).  Plans hash into
+``ScenarioSpec.cache_key`` and are **lowered to mask data, not program
+structure**: :meth:`FaultPlan.lower` produces a :class:`FaultSchedule`
+of per-tick numpy arrays that ride into the jitted round/tick programs
+as ordinary operands, so a grid of different fault plans still compiles
+to ONE sweep program (only :meth:`FaultPlan.static_fingerprint` — the
+guard *structure* — is part of ``static_key``).
+
+The benign lowering is a bitwise no-op by construction: every fold the
+engines apply is of the form ``w * 1.0`` (exact in every IEEE format),
+``mask & True`` or ``where(False, x, y) == y``, so an empty/disabled
+plan leaves each engine bit-identical to the fault-free program — the
+zero-fault anchor in ``tests/test_faults.py`` pins exactly this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "ChurnWindow", "RsuOutage", "CorruptSpec", "FaultPlan",
+    "FaultSchedule", "FAULT_FIELDS", "apply_corruption",
+    "skewed_time", "duplicate_count",
+]
+
+_CORRUPT_KINDS = ("nan", "inf", "scale", "stale")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnWindow:
+    """A seeded fraction of the fleet is hard-disconnected for ticks
+    ``[start, stop)`` (``stop <= 0`` = never reconnects).  Which agents
+    go dark is a seeded without-replacement draw — reproducible and
+    independent of evaluation order."""
+    frac: float
+    start: int = 0
+    stop: int = 0
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RsuOutage:
+    """RSU ``rsu`` is unreachable for ticks ``[start, stop)`` — uploads
+    to it are dropped, its buffer ages under ``buffer_keep``, and it is
+    excluded from cloud aggregation via the existing mass-guard.  On the
+    recovery tick it re-anchors to the cloud master (``stop <= 0`` =
+    dark forever, no re-anchor)."""
+    rsu: int
+    start: int = 0
+    stop: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CorruptSpec:
+    """Per-tick seeded corruption of submitted updates during ticks
+    ``[start, stop)``: each tick an independent ``frac`` of agents is
+    drawn (``default_rng([plan.seed, seed, i, tick])``) and their
+    trained payload is replaced/perturbed before aggregation.
+
+    kinds: ``nan`` / ``inf`` — payload filled with the non-finite value
+    (screened by ``guard_nonfinite``); ``scale`` — payload multiplied by
+    ``scale`` (a byzantine blow-up, screened by ``norm_clip``);
+    ``stale`` — the agent replays its previous round's row."""
+    kind: str
+    frac: float
+    start: int = 0
+    stop: int = 0
+    scale: float = 10.0
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative fault schedule + guard configuration for one scenario.
+
+    ``churn`` / ``outages`` / ``corrupt`` are tick-indexed schedules
+    lowered to data masks; ``dup_frac`` / ``clock_skew`` perturb the
+    serve loop's event queue host-side (per-event seeded, stateless — so
+    crash-resume replays them identically).  ``guard_nonfinite`` and
+    ``norm_clip`` configure the quarantine gate (the only *structural*
+    part of the plan — see :meth:`static_fingerprint`)."""
+    churn: Tuple[ChurnWindow, ...] = ()
+    outages: Tuple[RsuOutage, ...] = ()
+    corrupt: Tuple[CorruptSpec, ...] = ()
+    dup_frac: float = 0.0
+    clock_skew: float = 0.0
+    guard_nonfinite: bool = True
+    norm_clip: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "churn", tuple(
+            c if isinstance(c, ChurnWindow) else ChurnWindow(**dict(c))
+            for c in self.churn))
+        object.__setattr__(self, "outages", tuple(
+            o if isinstance(o, RsuOutage) else RsuOutage(**dict(o))
+            for o in self.outages))
+        object.__setattr__(self, "corrupt", tuple(
+            c if isinstance(c, CorruptSpec) else CorruptSpec(**dict(c))
+            for c in self.corrupt))
+
+    # -- validation ------------------------------------------------------
+    def validate(self, n_rsus: Optional[int] = None) -> "FaultPlan":
+        for w in self.churn:
+            assert 0.0 <= w.frac <= 1.0, f"churn frac {w.frac} not in [0,1]"
+            assert w.start >= 0, "churn start must be >= 0"
+        for o in self.outages:
+            assert o.rsu >= 0, "outage rsu must be >= 0"
+            if n_rsus is not None:
+                assert o.rsu < n_rsus, \
+                    f"outage rsu {o.rsu} outside fleet of {n_rsus} RSUs"
+            assert o.start >= 0, "outage start must be >= 0"
+        for c in self.corrupt:
+            assert c.kind in _CORRUPT_KINDS, \
+                f"corrupt kind {c.kind!r} not in {_CORRUPT_KINDS}"
+            assert 0.0 <= c.frac <= 1.0, f"corrupt frac {c.frac} not in [0,1]"
+        assert 0.0 <= self.dup_frac < 1.0, "dup_frac must be in [0, 1)"
+        assert self.clock_skew >= 0.0, "clock_skew must be >= 0"
+        assert self.norm_clip >= 0.0, "norm_clip must be >= 0"
+        return self
+
+    # -- program-structure fingerprint ----------------------------------
+    @property
+    def static_fingerprint(self) -> tuple:
+        """The part of the plan that is baked into the traced program:
+        the guard algebra flag and the exact clip threshold (a compiled
+        constant inside ``screen_updates``).  Schedules (churn / outages /
+        corruption) are pure data and deliberately absent, so a fault
+        GRID — many plans, one guard config — shares one compiled
+        program (trace-count-pinned in tests/test_faults.py)."""
+        return (bool(self.guard_nonfinite), float(self.norm_clip))
+
+    @property
+    def injects(self) -> bool:
+        return bool(self.churn or self.outages or self.corrupt)
+
+    @property
+    def corrupts(self) -> bool:
+        return bool(self.corrupt)
+
+    # -- (de)serialization ----------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultPlan":
+        d = dict(d)
+        d["churn"] = tuple(ChurnWindow(**dict(c)) for c in d.get("churn", ()))
+        d["outages"] = tuple(RsuOutage(**dict(o))
+                             for o in d.get("outages", ()))
+        d["corrupt"] = tuple(CorruptSpec(**dict(c))
+                             for c in d.get("corrupt", ()))
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown FaultPlan fields: {sorted(unknown)}")
+        return cls(**d)
+
+    # -- lowering --------------------------------------------------------
+    def lower(self, n_agents: int, n_rsus: int,
+              n_ticks: int) -> "FaultSchedule":
+        """Lower the declarative schedule to per-tick mask arrays over a
+        global tick clock of ``n_ticks`` ticks (rounds × lar for the
+        round engines, an event-count bound for serving).  Ticks beyond
+        ``n_ticks`` clip to the last row (schedules are frozen there)."""
+        A, R, T = int(n_agents), int(n_rsus), max(1, int(n_ticks))
+        agent_up = np.ones((T, A), np.float32)
+        rsu_up = np.ones((T, R), np.float32)
+        reanchor = np.zeros((T, R), np.float32)
+        poison_mask = np.zeros((T, A), np.float32)
+        poison_val = np.zeros((T, A), np.float32)
+        scale = np.ones((T, A), np.float32)
+        stale = np.zeros((T, A), np.float32)
+        for wi, w in enumerate(self.churn):
+            k = int(round(w.frac * A))
+            rng = np.random.default_rng([self.seed, w.seed, wi, 0xC4])
+            idx = rng.choice(A, size=min(k, A), replace=False)
+            stop = w.stop if w.stop > 0 else T
+            agent_up[w.start:stop, idx] = 0.0
+        for o in self.outages:
+            if o.rsu >= R:
+                continue
+            stop = o.stop if o.stop > 0 else T
+            rsu_up[o.start:stop, o.rsu] = 0.0
+            if o.start < stop < T:
+                reanchor[stop, o.rsu] = 1.0
+        for ci, c in enumerate(self.corrupt):
+            stop = c.stop if c.stop > 0 else T
+            fill = np.float32("nan") if c.kind == "nan" \
+                else np.float32("inf")
+            for t in range(max(0, c.start), min(stop, T)):
+                rng = np.random.default_rng([self.seed, c.seed, ci, t])
+                hit = rng.random(A) < c.frac
+                if c.kind in ("nan", "inf"):
+                    poison_mask[t, hit] = 1.0
+                    poison_val[t, hit] = fill
+                elif c.kind == "scale":
+                    scale[t, hit] = np.float32(c.scale)
+                else:  # stale replay
+                    stale[t, hit] = 1.0
+        return FaultSchedule(agent_up, rsu_up, reanchor, poison_mask,
+                             poison_val, scale, stale)
+
+
+# field order matters: it is the canonical key order everywhere the
+# schedule crosses a jit boundary (scan xs, vmapped sweep operands).
+FAULT_FIELDS = ("agent_up", "rsu_up", "reanchor", "poison_mask",
+                "poison_val", "scale", "stale")
+
+
+class FaultSchedule(NamedTuple):
+    """Lowered per-tick fault masks.  (T, A) float32 agent-side arrays,
+    (T, R) float32 RSU-side arrays.  The benign schedule is all-ones
+    up/scale and all-zeros reanchor/poison/stale — every engine fold of
+    these values is a bitwise identity."""
+    agent_up: np.ndarray     # (T, A)  1 = connected
+    rsu_up: np.ndarray       # (T, R)  1 = reachable
+    reanchor: np.ndarray     # (T, R)  1 = re-anchor to cloud this tick
+    poison_mask: np.ndarray  # (T, A)  1 = payload replaced by poison_val
+    poison_val: np.ndarray   # (T, A)  NaN/Inf fill value
+    scale: np.ndarray        # (T, A)  payload multiplier (1 = benign)
+    stale: np.ndarray        # (T, A)  1 = replay previous round's row
+
+    @classmethod
+    def benign(cls, n_agents: int, n_rsus: int,
+               n_ticks: int) -> "FaultSchedule":
+        return FaultPlan().lower(n_agents, n_rsus, n_ticks)
+
+    @property
+    def n_ticks(self) -> int:
+        return self.agent_up.shape[0]
+
+    def tick_slice(self, t: int) -> dict:
+        """Per-tick (A,)/(R,) mask vectors; ticks past the end clip."""
+        t = min(int(t), self.n_ticks - 1)
+        return {k: getattr(self, k)[t] for k in FAULT_FIELDS}
+
+    def round_slice(self, r: int, lar: int) -> dict:
+        """Per-round (lar, A)/(lar, R) stacks for the scan-based round
+        engines; rows past the end clip to the last tick."""
+        idx = np.minimum(np.arange(r * lar, (r + 1) * lar),
+                         self.n_ticks - 1)
+        return {k: getattr(self, k)[idx] for k in FAULT_FIELDS}
+
+    def stacked_rounds(self, rounds: int, lar: int) -> dict:
+        """All rounds at once: dict of (rounds, lar, ·) arrays — the
+        sweep engine's per-scenario fault operand."""
+        return {k: np.stack([self.round_slice(r, lar)[k]
+                             for r in range(rounds)])
+                for k in FAULT_FIELDS}
+
+
+def apply_corruption(trained, prev_rows, f):
+    """Apply the lowered per-tick corruption masks to freshly trained
+    agent rows (device-side, inside the round/tick program).  ``f`` is a
+    tick slice of :data:`FAULT_FIELDS` arrays; ``prev_rows`` is the
+    agent buffer before this tick's update (the stale-replay payload).
+    Benign masks (scale=1, poison=0, stale=0) are a bitwise no-op."""
+    dt = trained.dtype
+    out = trained * f["scale"][:, None].astype(dt)
+    out = jnp.where(f["poison_mask"][:, None] > 0,
+                    f["poison_val"][:, None].astype(dt), out)
+    return jnp.where(f["stale"][:, None] > 0, prev_rows.astype(dt), out)
+
+
+# -- serve-loop queue perturbations (host-side, per-event seeded) --------
+
+def skewed_time(plan: FaultPlan, loop_seed: int, seq: int,
+                t: float) -> float:
+    """Clock-skewed admission time for event ``seq``.  Seeded per event
+    (stateless), so a resumed serve loop replays the identical skew."""
+    if plan.clock_skew <= 0.0:
+        return t
+    rng = np.random.default_rng([plan.seed, loop_seed, int(seq), 0x5E])
+    return float(t + rng.normal(0.0, plan.clock_skew))
+
+
+def duplicate_count(plan: FaultPlan, loop_seed: int, seq: int) -> int:
+    """Number of duplicate admissions for event ``seq`` (0 or 1), seeded
+    per event so replay/resume see the same duplicates."""
+    if plan.dup_frac <= 0.0:
+        return 0
+    rng = np.random.default_rng([plan.seed, loop_seed, int(seq), 0xD0])
+    return int(rng.random() < plan.dup_frac)

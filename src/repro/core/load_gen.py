@@ -168,8 +168,9 @@ class TraceLoadGen:
                              "(the monotonic event clock)")
 
     @classmethod
-    def from_jsonl(cls, path, limit: int = 0) -> "TraceLoadGen":
-        return cls(read_trace(path, limit=limit))
+    def from_jsonl(cls, path, limit: int = 0,
+                   n_agents: Optional[int] = None) -> "TraceLoadGen":
+        return cls(read_trace(path, limit=limit, n_agents=n_agents))
 
     def events(self) -> Iterator[Event]:
         return iter(self._events)
@@ -201,14 +202,38 @@ def write_trace(events: Iterable[Event], path) -> None:
             f.write(json.dumps({"t": ev.t, "agent": ev.agent}) + "\n")
 
 
-def read_trace(path, limit: int = 0) -> List[Event]:
+def read_trace(path, limit: int = 0,
+               n_agents: Optional[int] = None) -> List[Event]:
+    """Read a JSONL trace, validating every record as it is parsed.
+
+    A trace is external input (often hand-edited or produced by another
+    tool), so malformed records fail loudly HERE with the 1-based line
+    number — not ticks later as a NaN sim-clock or a device-side scatter
+    out of bounds.  Rejected: unparseable JSON, missing ``t``/``agent``
+    keys, non-finite timestamps, negative agent ids, and (when
+    ``n_agents`` is given) agents outside the fleet.
+    """
     out: List[Event] = []
     with open(path) as f:
         for i, line in enumerate(f):
             if not line.strip():
                 continue
-            d = json.loads(line)
-            out.append(Event(t=float(d["t"]), agent=int(d["agent"]), seq=i))
+            where = f"{path}:{i + 1}"
+            try:
+                d = json.loads(line)
+                t, agent = float(d["t"]), int(d["agent"])
+            except (ValueError, KeyError, TypeError) as e:
+                raise ValueError(f"bad trace record at {where}: {e}") from None
+            if not np.isfinite(t):
+                raise ValueError(
+                    f"non-finite timestamp {t!r} at {where} — the event "
+                    f"clock must stay finite and monotonic")
+            if agent < 0 or (n_agents is not None and agent >= n_agents):
+                bound = f"[0, {n_agents})" if n_agents is not None else ">= 0"
+                raise ValueError(
+                    f"agent id {agent} at {where} outside the fleet "
+                    f"(want {bound}) — trace from a different scenario?")
+            out.append(Event(t=t, agent=agent, seq=i))
             if limit and len(out) >= limit:
                 break
     return out

@@ -25,7 +25,7 @@ Two layers kill redundant compilation:
 
 Trace accounting: round bodies call :func:`note_trace` from inside their
 Python trace, so ``trace_count(label)`` counts actual (re)traces — the
-number benchmarks/CI pin to 1 for a mixed-cadence group (BENCH_PR8.json).
+number benchmarks/CI pin to 1 for a mixed-cadence group (BENCH_PR9.json).
 """
 from __future__ import annotations
 

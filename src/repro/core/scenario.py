@@ -34,6 +34,7 @@ import hashlib
 import json
 from typing import Any, Dict, Optional, Tuple, Union
 
+from repro.core.faults import FaultPlan
 from repro.core.h2fed import H2FedParams
 from repro.core.heterogeneity import HeterogeneityModel
 
@@ -108,6 +109,13 @@ class ScenarioSpec:
     overload_policy: str = "drop_oldest"   # drop_oldest | backpressure
     serve_trace: str = ""             # JSONL trace path ("" = Poisson)
 
+    # -- fault injection (core/faults, DESIGN.md §11): a declarative seeded
+    # fault schedule (churn / RSU outages / corrupted updates / queue
+    # perturbations) + the quarantine-guard configuration.  None = the
+    # fault-free programs; FaultPlan() = the fault-gated programs under the
+    # benign all-ones lowering (bit-identical, anchor-pinned).
+    faults: Optional[FaultPlan] = None
+
     # -- run ---------------------------------------------------------------
     rounds: int = 24
     eval_every: int = 1
@@ -149,6 +157,17 @@ class ScenarioSpec:
             assert not self.rsu_sharded, "serving is not rsu-sharded"
             from repro.core.load_gen import parse_trigger
             parse_trigger(self.tick_trigger, self.n_agents)
+        if self.faults is not None:
+            assert self.engine in ("flat", "async"), \
+                (f"fault injection requires engine 'flat'|'async', "
+                 f"got {self.engine!r}")
+            assert not self.rsu_sharded, \
+                "fault injection is not threaded through the rsu-sharded path"
+            self.faults.validate(self.n_rsus)
+            if self.fleet_store != "device" or self.chunk_agents:
+                assert not self.faults.corrupts, \
+                    ("corrupted-update injection is not supported on the "
+                     "cohort-streamed engines (churn/outage/guards are)")
         assert self.rounds >= 1 and self.eval_every >= 1
         return self
 
@@ -242,6 +261,8 @@ class ScenarioSpec:
             d["hp"] = H2FedParams(**d["hp"])
         if "het" in d and isinstance(d["het"], dict):
             d["het"] = HeterogeneityModel(**d["het"])
+        if isinstance(d.get("faults"), dict):
+            d["faults"] = FaultPlan.from_dict(d["faults"])
         for k in ("excluded_labels", "staleness_decay", "buffer_keep"):
             if isinstance(d.get(k), list):
                 d[k] = tuple(d[k])
@@ -300,7 +321,11 @@ class ResolvedScenario:
                 s.staleness_decay, s.schedule, s.buffer_keep,
                 s.rounds, s.eval_every,
                 s.serve_events, s.arrival_rate, s.tick_trigger,
-                s.queue_capacity, s.overload_policy, s.serve_trace)
+                s.queue_capacity, s.overload_policy, s.serve_trace,
+                # fault plans are DATA (lowered masks ride into the vmap);
+                # only presence + guard structure shape the program, so a
+                # fault grid still groups into ONE compiled sweep.
+                None if s.faults is None else s.faults.static_fingerprint)
 
 
 def _digest(obj: Any) -> str:

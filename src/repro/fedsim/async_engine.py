@@ -63,8 +63,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import faults as faults_mod
 from repro.core import flatten
-from repro.core.aggregation import buffer_absorb, staleness_weights
+from repro.core.aggregation import (buffer_absorb, screen_updates,
+                                    staleness_weights)
 from repro.core.h2fed import H2FedParams
 from repro.core.heterogeneity import (ConnState, HeterogeneityModel,
                                       init_conn_state, sample_latency)
@@ -190,7 +192,8 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
                            spec: flatten.FlatSpec, acfg: AsyncConfig,
                            loss_fn: Callable = mlp.loss_fn, *,
                            fused: bool = True,
-                           cadence: Optional[Cadence] = None):
+                           cadence: Optional[Cadence] = None,
+                           faults: Optional[faults_mod.FaultPlan] = None):
     """The un-jitted semi-async global round:
     AsyncSimState -> (AsyncSimState, metrics).
 
@@ -208,7 +211,23 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
     global-tick clock) and the cloud cadence becomes data (a ``where``-
     selected fire on ``gtick % cloud_every``, a ``where``-selected
     round-start re-anchor / round-end aggregation for the ``cloud_every=0``
-    sync-cadence cells)."""
+    sync-cadence cells).
+
+    ``faults`` (``core.faults.FaultPlan``) switches to the fault-gated
+    tick algebra ``(state, fault_r) -> (state, metrics)`` with ``fault_r``
+    a per-round dict of lowered (lar, A)/(lar, R) mask DATA
+    (``FaultSchedule.round_slice``): churned agents hard-disconnect,
+    uploads (immediate AND due deliveries) to a dark RSU are dropped
+    (the in-flight slot still frees — that update is lost, counted in
+    ``metrics["blocked_mass"]``), the dark buffer ages under
+    ``buffer_keep`` and is excluded from cloud fires via its zeroed fire
+    mass, then re-anchors to the cloud master on the recovery tick;
+    corrupted submissions are injected post-training and screened by
+    ``core.aggregation.screen_updates`` (scrubbed + weight-masked +
+    barred from enqueue, so cohort-mass accounting stays conserved),
+    counted in ``metrics["quarantined"]``.  Only the guard flags shape
+    the program; the benign lowering is bitwise identical to the
+    fault-free body (anchor-pinned in tests/test_faults.py)."""
     x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = _fed_arrays(
         cfg, hp, fed,
         epochs_bound=None if cadence is None else cadence.local_epochs)
@@ -226,9 +245,23 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
     ce_static = isinstance(ce, (int, np.integer))  # scalar under the sweep
 
     def tick(carry, inp):
-        key = inp if cadence is None else inp[0]
+        key = inp if (cadence is None and faults is None) else inp[0]
+        f = inp[-1] if faults is not None else None
         (rsu_flat, rsu_mass, cloud_flat, conn, agent_flat,
          pend_x, pend_w, pend_t, cloud_macc, gtick) = carry
+
+        if faults is not None:
+            # 0. outage recovery: a recovering RSU re-anchors to the
+            #    current cloud master, its aged buffer content and any
+            #    not-yet-aggregated mass discarded (benign lowering:
+            #    reanchor == 0 everywhere — where(False, ...) identity).
+            ra = f["reanchor"] > 0
+            rsu_flat = jnp.where(
+                ra[:, None],
+                jnp.broadcast_to(spec.to_storage(cloud_flat), (R, N)),
+                rsu_flat)
+            rsu_mass = jnp.where(ra, 0.0, rsu_mass)
+            cloud_macc = jnp.where(ra, 0.0, cloud_macc)
 
         # 1. in-flight countdown: due updates deliver this tick; agents
         #    still computing stay busy and train nothing new.
@@ -243,6 +276,9 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
         conn, mask, active_steps = round_draws(key, conn, het, hp, A, spe)
         delays = sample_latency(jax.random.fold_in(key, _LATENCY_FOLD),
                                 A, het)
+        if faults is not None:
+            # churned agents are hard-disconnected this tick
+            mask = mask & (f["agent_up"] > 0)
         maskf = mask.astype(jnp.float32)
         free = ~busy                                  # may start new work
 
@@ -252,6 +288,20 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
         w_start = jnp.take(rsu_flat, rsu_assign, axis=0)       # (A, N)
         trained = spec.to_storage(
             train_agents(x_all, y_all, w_start, w_start, cloud_flat, act))
+
+        if faults is not None:
+            # corrupted submissions (NaN/Inf, byzantine scale, stale
+            # replay) enter post-training; the quarantine gate scrubs
+            # rejected rows back to w_start and zeroes their weight —
+            # they are never absorbed and never enqueue.
+            up_a = jnp.take(f["rsu_up"], rsu_assign)           # (A,)
+            trained = faults_mod.apply_corruption(trained, agent_flat, f)
+            w_submit = (n_per_agent * maskf * free.astype(jnp.float32)
+                        * up_a)
+            trained, okf, nq = screen_updates(
+                trained, w_start, w_submit,
+                nonfinite=faults.guard_nonfinite,
+                norm_clip=faults.norm_clip)
         agent_flat = jnp.where(busy[:, None], agent_flat, trained)
 
         # 4.+5. arrivals + staleness-buffer merge: the zero-latency cohort
@@ -262,6 +312,13 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
         w_imm = (n_per_agent * maskf * free
                  * (delays == 0).astype(jnp.float32))          # (A,)
         w_due = jnp.where(due, pend_w, 0.0)
+        if faults is not None:
+            # uploads to a dark RSU are dropped — immediate arrivals AND
+            # due deliveries (the in-flight slot frees regardless); the
+            # full lost upload mass is observable as blocked_mass
+            blocked = jnp.sum((w_imm + w_due) * (1.0 - up_a))
+            w_imm = w_imm * up_a * okf
+            w_due = w_due * up_a
         m_i = jax.ops.segment_sum(w_imm, rsu_assign, num_segments=R)
         m_d = jax.ops.segment_sum(w_due, rsu_assign, num_segments=R)
         if fused:
@@ -281,6 +338,8 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
         #    the delivery weight is decayed at enqueue — s(d) is known and
         #    the rate may be per-RSU (gathered through rsu_assign).
         enq = mask & free & (delays > 0)
+        if faults is not None:
+            enq = enq & (okf > 0)      # quarantined rows never enqueue
         pend_x = jnp.where(enq[:, None], trained, pend_x)
         w_enq = n_per_agent * maskf * acfg.weight(delays, decay=decay)
         pend_w = jnp.where(enq, w_enq, pend_w)
@@ -293,28 +352,33 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
         #    traced cadence (sweep) where-selects the fire so mixed-cadence
         #    cells share the one program.
         gtick = gtick + 1
+        # a dark RSU's not-yet-aggregated mass is zeroed at fire time so
+        # the mass-guard excludes it from the blend (benign: macc · 1.0)
+        macc_fire = (cloud_macc if faults is None
+                     else cloud_macc * f["rsu_up"])
 
         def _fire(args):
-            rsu, macc, cloud = args
+            rsu, maccf, cloud, macc_keep = args
             if fused:
-                cloud = ops.cloud_blend(rsu, macc, cloud)
+                cloud = ops.cloud_blend(rsu, maccf, cloud)
             else:
-                new_cloud = ops.cloud_agg(rsu, macc)
-                cloud = jnp.where(jnp.sum(macc) > 0,
+                new_cloud = ops.cloud_agg(rsu, maccf)
+                cloud = jnp.where(jnp.sum(maccf) > 0,
                                   new_cloud.astype(jnp.float32), cloud)
-            return cloud, jnp.zeros_like(macc)
+            return cloud, jnp.zeros_like(macc_keep)
 
         if ce_static and ce:
             def _hold(args):
-                _, macc, cloud = args
-                return cloud, macc
+                _, _, cloud, macc_keep = args
+                return cloud, macc_keep
 
             cloud_flat, cloud_macc = jax.lax.cond(
                 (gtick % ce) == 0, _fire, _hold,
-                (rsu_flat, cloud_macc, cloud_flat))
+                (rsu_flat, macc_fire, cloud_flat, cloud_macc))
         elif not ce_static:
             fire = (ce > 0) & ((gtick % jnp.maximum(ce, 1)) == 0)
-            f_cloud, f_macc = _fire((rsu_flat, cloud_macc, cloud_flat))
+            f_cloud, f_macc = _fire((rsu_flat, macc_fire, cloud_flat,
+                                     cloud_macc))
             cloud_flat = jnp.where(fire, f_cloud, cloud_flat)
             cloud_macc = jnp.where(fire, f_macc, cloud_macc)
 
@@ -324,6 +388,9 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
             "due_mass": jnp.sum(m_d),
             "enqueued_mass": jnp.sum(jnp.where(enq, w_enq, 0.0)),
         }
+        if faults is not None:
+            tick_metrics["quarantined"] = nq
+            tick_metrics["blocked_mass"] = blocked
         new_carry = (rsu_flat, rsu_mass, cloud_flat, conn, agent_flat,
                      pend_x, pend_w, pend_t, cloud_macc, gtick)
         if cadence is not None:
@@ -337,7 +404,7 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
                 tick_metrics)
         return new_carry, tick_metrics
 
-    def global_round(state: AsyncSimState
+    def global_round(state: AsyncSimState, fault_r=None
                      ) -> Tuple[AsyncSimState, Dict[str, jax.Array]]:
         rng, k_rounds = jax.random.split(state.rng)
         keys = round_keys(k_rounds, lar_bound)
@@ -368,29 +435,42 @@ def _make_async_round_body(cfg: SimConfig, hp: H2FedParams,
         carry = (rsu0, rmass0, state.cloud_flat,
                  state.conn, state.agent_flat, state.pending_x,
                  state.pending_w, state.pending_t, macc0, state.tick)
-        carry, ticks = jax.lax.scan(
-            tick, carry, keys if cadence is None else (keys, live))
+        if faults is None:
+            xs = keys if cadence is None else (keys, live)
+        else:
+            xs = ((keys, fault_r) if cadence is None
+                  else (keys, live, fault_r))
+        carry, ticks = jax.lax.scan(tick, carry, xs)
         (rsu_flat, rsu_mass, cloud_flat, conn, agent_flat,
          pend_x, pend_w, pend_t, cloud_macc, gtick) = carry
+
+        if faults is not None:
+            # round-end fire mass excludes RSUs dark at the round's last
+            # live tick (benign: an all-ones row — bitwise identity)
+            up_last = fault_r["rsu_up"][hp.lar - 1]
+            cloud_macc_end = cloud_macc * up_last
+        else:
+            cloud_macc_end = cloud_macc
 
         if ce_static and not ce:
             # per-round cadence: round-end cloud aggregation over the
             # not-yet-aggregated mass (exactly the sync Alg. 3 line 6).
             if fused:
-                cloud_flat = ops.cloud_blend(rsu_flat, cloud_macc,
+                cloud_flat = ops.cloud_blend(rsu_flat, cloud_macc_end,
                                              cloud_flat)
             else:
-                new_cloud = ops.cloud_agg(rsu_flat, cloud_macc)
-                cloud_flat = jnp.where(jnp.sum(cloud_macc) > 0,
+                new_cloud = ops.cloud_agg(rsu_flat, cloud_macc_end)
+                cloud_flat = jnp.where(jnp.sum(cloud_macc_end) > 0,
                                        new_cloud.astype(jnp.float32),
                                        cloud_flat)
             cloud_macc = jnp.zeros((R,), jnp.float32)
         elif not ce_static:
             if fused:
-                blended = ops.cloud_blend(rsu_flat, cloud_macc, cloud_flat)
+                blended = ops.cloud_blend(rsu_flat, cloud_macc_end,
+                                          cloud_flat)
             else:
-                new_cloud = ops.cloud_agg(rsu_flat, cloud_macc)
-                blended = jnp.where(jnp.sum(cloud_macc) > 0,
+                new_cloud = ops.cloud_agg(rsu_flat, cloud_macc_end)
+                blended = jnp.where(jnp.sum(cloud_macc_end) > 0,
                                     new_cloud.astype(jnp.float32),
                                     cloud_flat)
             cloud_flat = jnp.where(anchor, blended, cloud_flat)
@@ -413,17 +493,19 @@ def make_async_global_round(cfg: SimConfig, hp: H2FedParams,
                             spec: flatten.FlatSpec,
                             acfg: Optional[AsyncConfig] = None,
                             loss_fn: Callable = mlp.loss_fn, *,
-                            fused: bool = True):
+                            fused: bool = True, faults=None):
     """Build the jitted semi-async round: AsyncSimState -> (state, metrics).
 
     The input state's buffers are DONATED (updated in place at scale) —
     callers must rebind, ``state, m = round_fn(state)``, and never reuse the
     consumed input.  ``fused=False`` keeps the multi-pass tick program for
-    A/B benchmarking (benchmarks/async_round).
+    A/B benchmarking (benchmarks/async_round).  With ``faults`` the round
+    is ``(state, fault_r) -> (state, metrics)`` (see
+    ``_make_async_round_body``).
     """
     acfg = (acfg or AsyncConfig()).validate()
     body = _make_async_round_body(cfg, hp, het, fed, spec, acfg, loss_fn,
-                                  fused=fused)
+                                  fused=fused, faults=faults)
     return jax.jit(body, donate_argnums=(0,))
 
 
@@ -706,19 +788,35 @@ def _run_async(res, init_params: PyTree, *,
         init_params, storage_dtype=flatten.resolve_storage_dtype(fleet_dtype))
     state = init_async_state(cfg, spec, init_params, key)
     if topo is not None:
+        assert s.faults is None, \
+            "fault injection is not threaded through the rsu-sharded path"
         round_fn = make_sharded_async_global_round(cfg, hp, het, fed, spec,
                                                    topo, acfg, loss_fn)
     else:
         round_fn = make_async_global_round(cfg, hp, het, fed, spec, acfg,
-                                           loss_fn, fused=fused)
+                                           loss_fn, fused=fused,
+                                           faults=s.faults)
     if eval_fn is None and x_test is not None:
         x_test, y_test = jnp.asarray(x_test), jnp.asarray(y_test)
         eval_fn = jax.jit(lambda p: mlp.accuracy(p, x_test, y_test))
 
+    # fault schedules lower once to per-tick mask data over the global
+    # tick clock (rounds x lar); each round consumes its slice as DATA
+    sched = (None if s.faults is None
+             else s.faults.lower(cfg.n_agents, cfg.n_rsus,
+                                 n_rounds * hp.lar))
+
     def run_rounds(state):
         accs, rounds, absorbed, pending = [], [], [], []
+        quarantined, blocked = [], []
         for r in range(n_rounds):
-            state, metrics = round_fn(state)
+            if sched is None:
+                state, metrics = round_fn(state)
+            else:
+                state, metrics = round_fn(state,
+                                          sched.round_slice(r, hp.lar))
+                quarantined.append(int(jnp.sum(metrics["quarantined"])))
+                blocked.append(float(jnp.sum(metrics["blocked_mass"])))
             absorbed.append(float(jnp.sum(metrics["absorbed_mass"])))
             pending.append(float(metrics["pending_mass"]))
             if eval_fn is not None and (r % cfg.eval_every == 0
@@ -728,6 +826,9 @@ def _run_async(res, init_params: PyTree, *,
         history = {"round": np.asarray(rounds), "acc": np.asarray(accs),
                    "absorbed_mass": np.asarray(absorbed),
                    "pending_mass": np.asarray(pending)}
+        if sched is not None:
+            history["quarantined"] = np.asarray(quarantined)
+            history["blocked_mass"] = np.asarray(blocked)
         return state, history
 
     if topo is None:

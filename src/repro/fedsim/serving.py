@@ -38,6 +38,30 @@ coalesce counters, and two staleness-under-load signals: the sim-time each
 absorbed event waited in the queue, and the age in ticks of the served
 cloud snapshot.  ``benchmarks/serving_loop.py`` turns these into the
 BENCH_PR7 flow.
+
+Fault injection (DESIGN.md §11): when the spec carries a ``FaultPlan`` the
+loop splits it across the host/device seam.  Host-side, per-event seeded
+and stateless: clock skew perturbs admission times, duplicate admissions
+re-enter the ingress queue, churned agents' events are dropped at the door
+(``events_lost_churn``), and stale sequence numbers are rejected at drain
+(``events_stale_rejected``).  Device-side, the lowered per-tick mask slice
+rides into the jitted tick as data: corruption is applied to trained rows,
+the quarantine gate scrubs and zero-weights rejected updates
+(``quarantined_updates``), uploads to dark RSUs are blocked
+(``blocked_mass``) and their held mass is excluded from every cloud blend,
+and a recovering RSU re-anchors to the cloud master.  The benign plan is a
+bitwise no-op (the zero-fault anchor in tests/test_faults.py).
+
+Crash-resume: ``snapshot_dir``/``snapshot_every`` periodically checkpoint
+the ENTIRE loop state — device state, round keys, queue/ingress contents,
+stats, sim clock, and the count of events pulled from the generator —
+through ``checkpoint/ckpt`` (atomic single-file commits).  Because every
+source of randomness is either in the snapshotted rng state or seeded per
+event, ``resume_from=`` replays the remaining trace to a bit-identical
+continuation of the uninterrupted run (test-pinned).  An exception or
+signal mid-loop raises :class:`ServeLoopInterrupted` carrying the final
+stats, history, and a last-effort snapshot path — the loop never exits
+without accounting for the events it absorbed.
 """
 from __future__ import annotations
 
@@ -50,8 +74,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import ckpt
+from repro.core import faults as faults_mod
 from repro.core import flatten
-from repro.core.aggregation import buffer_absorb
+from repro.core.aggregation import buffer_absorb, screen_updates
 from repro.core.load_gen import (Event, PoissonLoadGen, TickTrigger,
                                  TraceLoadGen, agent_rates, parse_trigger)
 from repro.fedsim.async_engine import AsyncConfig, AsyncSimState, \
@@ -111,15 +137,29 @@ class EventQueue:
 
     def drain(self, tick: int) -> Tuple[List[Tuple[Event, int]], int]:
         """Take everything queued, coalescing same-agent duplicates to the
-        NEWEST event (an agent's later update supersedes its earlier one).
+        NEWEST event (an agent's later update supersedes its earlier one;
+        highest seq wins, so an injected duplicate of an old event can
+        never shadow a genuinely newer one).
         Returns (absorbed [(event, age_ticks)], n_coalesced)."""
         newest: Dict[int, Tuple[Event, int]] = {}
         n = len(self._q)
         while self._q:
             ev, admit = self._q.popleft()
-            newest[ev.agent] = (ev, tick - admit)
+            held = newest.get(ev.agent)
+            if held is None or ev.seq >= held[0].seq:
+                newest[ev.agent] = (ev, tick - admit)
         batch = sorted(newest.values(), key=lambda p: p[0].seq)
         return batch, n - len(batch)
+
+    # -- snapshot seam (crash-resume) ------------------------------------
+    def entries(self) -> List[Tuple[Event, int]]:
+        """The queued (event, admit_tick) pairs, head first."""
+        return list(self._q)
+
+    def load(self, entries: List[Tuple[Event, int]], dropped: int) -> None:
+        """Restore queue contents + drop counter from a snapshot."""
+        self._q = deque(entries)
+        self.dropped = int(dropped)
 
 
 # --------------------------------------------------------------------------
@@ -134,6 +174,12 @@ class ServeLoopStats:
     events_dropped: int = 0
     events_deferred: int = 0
     events_coalesced: int = 0
+    # fault-injection accounting (all zero on a benign run)
+    events_lost_churn: int = 0       # dropped at admission: agent churned
+    events_duplicated: int = 0       # duplicate admissions injected
+    events_stale_rejected: int = 0   # stale seq rejected at drain
+    quarantined_updates: int = 0     # non-finite / norm-clipped updates
+    blocked_mass: float = 0.0        # upload mass lost to dark RSUs
     n_ticks: int = 0
     n_rounds: int = 0
     n_cloud_aggs: int = 0
@@ -176,6 +222,11 @@ class ServeLoopStats:
             "events_dropped": self.events_dropped,
             "events_deferred": self.events_deferred,
             "events_coalesced": self.events_coalesced,
+            "events_lost_churn": self.events_lost_churn,
+            "events_duplicated": self.events_duplicated,
+            "events_stale_rejected": self.events_stale_rejected,
+            "quarantined_updates": self.quarantined_updates,
+            "blocked_mass": self.blocked_mass,
             "n_ticks": self.n_ticks,
             "n_rounds": self.n_rounds,
             "n_cloud_aggs": self.n_cloud_aggs,
@@ -202,6 +253,48 @@ class ServeLoopStats:
             "serve_p50_ms": (float(np.percentile(self.serve_latency_s, 50))
                              * 1e3 if self.serve_latency_s else 0.0),
         }
+
+
+def _stats_to_tree(stats: ServeLoopStats) -> Dict[str, np.ndarray]:
+    """ServeLoopStats as a flat dict of numpy arrays (snapshot leaf)."""
+    out = {}
+    for f in dataclasses.fields(ServeLoopStats):
+        v = getattr(stats, f.name)
+        out[f.name] = np.asarray(v)
+    return out
+
+
+def _stats_from_tree(tree: Dict[str, np.ndarray]) -> ServeLoopStats:
+    stats = ServeLoopStats()
+    for f in dataclasses.fields(ServeLoopStats):
+        v = np.asarray(tree[f.name])
+        if f.default is dataclasses.MISSING:        # list-valued field
+            setattr(stats, f.name, list(v.tolist()))
+        elif isinstance(f.default, int):
+            setattr(stats, f.name, int(v))
+        else:
+            setattr(stats, f.name, float(v))
+    return stats
+
+
+class ServeLoopInterrupted(RuntimeError):
+    """Raised when the serve loop dies mid-run (exception or signal).
+
+    Graceful shutdown: the loop drains its accounting before re-raising —
+    the exception carries the finalized ``stats``/``history``, the last
+    ``state``/``server`` (which may reference donated buffers if the tick
+    dispatch itself died), and the path of a last-effort snapshot (or
+    ``None`` if none could be written) so a supervisor can
+    ``run_serve_loop(resume_from=...)`` it."""
+
+    def __init__(self, msg: str, *, state=None, history=None, stats=None,
+                 server=None, snapshot_path=None):
+        super().__init__(msg)
+        self.state = state
+        self.history = history
+        self.stats = stats
+        self.server = server
+        self.snapshot_path = snapshot_path
 
 
 class CloudModelServer:
@@ -248,9 +341,9 @@ class CloudModelServer:
 
 def _make_serve_tick(cfg, hp, het, fed, spec: flatten.FlatSpec,
                      acfg: AsyncConfig, loss_fn: Callable = mlp.loss_fn, *,
-                     fused: bool = True):
+                     fused: bool = True, faults=None):
     """One event-driven tick, jitted with the state donated:
-    ``(state, key, arrive (A,) f32, age (A,) i32) -> (state, metrics)``.
+    ``(state, key, arrive (A,) f32, age (A,) i32[, f]) -> (state, metrics)``.
 
     Identical to the async engine's tick with the in-flight machinery
     replaced by the event gate: arriving agents train from their RSU row
@@ -258,6 +351,19 @@ def _make_serve_tick(cfg, hp, het, fed, spec: flatten.FlatSpec,
     (``s`` the staleness schedule over the event's queue age in ticks);
     non-arriving agents keep their row and contribute nothing.  The cloud
     cadence (``cloud_every`` on the global tick clock) is unchanged.
+
+    With ``faults`` (a validated ``FaultPlan``) the tick takes a fifth
+    operand ``f`` — one :data:`core.faults.FAULT_FIELDS` tick slice — and
+    runs the degraded-mode algebra: recovering RSUs re-anchor to the cloud
+    master first; trained rows pass through ``apply_corruption`` and the
+    ``screen_updates`` quarantine gate (rejected rows are scrubbed back to
+    their dispatch model and zero-weighted — counted in
+    ``metrics["quarantined"]``); uploads to dark RSUs are blocked BEFORE
+    mass accounting (``metrics["blocked_mass"]``), so conservation holds
+    by construction; and a dark RSU's held mass is excluded from the
+    cloud-cadence blend.  Churn is enforced host-side at admission, not
+    here.  The benign slice (ones/zeros) makes every fold a bitwise
+    identity.
     """
     x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
         _fed_arrays(cfg, hp, fed)
@@ -271,9 +377,20 @@ def _make_serve_tick(cfg, hp, het, fed, spec: flatten.FlatSpec,
             loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
         in_axes=(0, 0, 0, 0, None, 0))
 
-    def tick(state: AsyncSimState, key, arrive, age):
+    def tick(state: AsyncSimState, key, arrive, age, f=None):
         rsu_flat, rsu_mass = state.rsu_flat, state.rsu_mass
         cloud_flat, cloud_macc = state.cloud_flat, state.cloud_macc
+
+        if faults is not None:
+            # recovery re-anchor: an RSU coming back from an outage
+            # rejoins at the current cloud master with an empty buffer
+            ra = f["reanchor"] > 0
+            rsu_flat = jnp.where(
+                ra[:, None],
+                jnp.broadcast_to(spec.to_storage(cloud_flat), (R, N)),
+                rsu_flat)
+            rsu_mass = jnp.where(ra, 0.0, rsu_mass)
+            cloud_macc = jnp.where(ra, 0.0, cloud_macc)
 
         # stochastic realization — the flat/async engines' key discipline,
         # so the once-per-window schedule reproduces their draws exactly
@@ -288,11 +405,21 @@ def _make_serve_tick(cfg, hp, het, fed, spec: flatten.FlatSpec,
         w_start = jnp.take(rsu_flat, rsu_assign, axis=0)
         trained = spec.to_storage(
             train_agents(x_all, y_all, w_start, w_start, cloud_flat, act))
-        agent_flat = jnp.where(arrived[:, None], trained, state.agent_flat)
 
         # absorption: one cohort, weighted by data volume x connectivity
         # mask x the staleness schedule over the event's queue age
         w = n_per_agent * maskf * arrive * acfg.weight(age, decay=decay)
+        if faults is not None:
+            up_a = jnp.take(f["rsu_up"], rsu_assign)
+            trained = faults_mod.apply_corruption(trained,
+                                                  state.agent_flat, f)
+            trained, okf, n_quar = screen_updates(
+                trained, w_start, w * up_a,
+                nonfinite=faults.guard_nonfinite,
+                norm_clip=faults.norm_clip)
+            blocked = jnp.sum(w * (1.0 - up_a))
+            w = w * up_a * okf
+        agent_flat = jnp.where(arrived[:, None], trained, state.agent_flat)
         m = jax.ops.segment_sum(w, rsu_assign, num_segments=R)
         if fused:
             rsu_flat, rsu_mass, _ = ops.agg_absorb(
@@ -306,29 +433,37 @@ def _make_serve_tick(cfg, hp, het, fed, spec: flatten.FlatSpec,
         cloud_macc = cloud_macc + m
 
         # cloud cadence on the global tick clock (ce == 0 defers to the
-        # virtual-round close outside)
+        # virtual-round close outside); a dark RSU's held mass sits out
+        # the blend but is NOT forgotten (it re-enters after recovery
+        # unless the recovery re-anchor clears it)
         gtick = state.tick + 1
         if ce:
+            macc_fire = cloud_macc if faults is None \
+                else cloud_macc * f["rsu_up"]
+
             def _fire(args):
-                rsu, macc, cloud = args
+                rsu, maccf, cloud, macc_keep = args
                 if fused:
-                    cloud = ops.cloud_blend(rsu, macc, cloud)
+                    cloud = ops.cloud_blend(rsu, maccf, cloud)
                 else:
-                    new_cloud = ops.cloud_agg(rsu, macc)
-                    cloud = jnp.where(jnp.sum(macc) > 0,
+                    new_cloud = ops.cloud_agg(rsu, maccf)
+                    cloud = jnp.where(jnp.sum(maccf) > 0,
                                       new_cloud.astype(jnp.float32), cloud)
-                return cloud, jnp.zeros_like(macc)
+                return cloud, jnp.zeros_like(macc_keep)
 
             def _hold(args):
-                _, macc, cloud = args
-                return cloud, macc
+                _, _, cloud, macc_keep = args
+                return cloud, macc_keep
 
             cloud_flat, cloud_macc = jax.lax.cond(
                 (gtick % ce) == 0, _fire, _hold,
-                (rsu_flat, cloud_macc, cloud_flat))
+                (rsu_flat, macc_fire, cloud_flat, cloud_macc))
 
         metrics = {"absorbed_mass": m,                         # (R,)
                    "absorbed_weight": jnp.sum(w)}
+        if faults is not None:
+            metrics["quarantined"] = n_quar
+            metrics["blocked_mass"] = blocked
         out = state._replace(agent_flat=agent_flat, rsu_flat=rsu_flat,
                              rsu_mass=rsu_mass, cloud_flat=cloud_flat,
                              conn=conn, cloud_macc=cloud_macc, tick=gtick)
@@ -338,29 +473,41 @@ def _make_serve_tick(cfg, hp, het, fed, spec: flatten.FlatSpec,
 
 
 def _make_round_close(spec: flatten.FlatSpec, n_rsus: int, *,
-                      fused: bool = True):
+                      fused: bool = True, faulted: bool = False):
     """Virtual-round close for the per-round cloud cadence
     (``cloud_every=0``): aggregate the round's absorbed mass into the fp32
     master, then re-anchor the RSU buffers to it — the exact round
     boundary of the async engine's ``global_round`` (there the re-anchor
     happens at round START; the state between rounds is identical, and the
-    initial ``init_async_state`` is already anchored)."""
+    initial ``init_async_state`` is already anchored).
 
-    def close(state: AsyncSimState) -> AsyncSimState:
+    When ``faulted``, the close takes the closing tick's ``rsu_up`` mask:
+    a dark RSU's held mass is excluded from the blend via the existing
+    mass-guard, and the RSU keeps its (aging) buffer instead of
+    re-anchoring — it cannot hear the cloud; recovery re-anchoring is the
+    tick's job.  The benign mask (all ones) is a bitwise no-op."""
+
+    def close(state: AsyncSimState, up=None) -> AsyncSimState:
+        macc = state.cloud_macc if not faulted else state.cloud_macc * up
         if fused:
-            cloud = ops.cloud_blend(state.rsu_flat, state.cloud_macc,
-                                    state.cloud_flat)
+            cloud = ops.cloud_blend(state.rsu_flat, macc, state.cloud_flat)
         else:
-            new_cloud = ops.cloud_agg(state.rsu_flat, state.cloud_macc)
-            cloud = jnp.where(jnp.sum(state.cloud_macc) > 0,
+            new_cloud = ops.cloud_agg(state.rsu_flat, macc)
+            cloud = jnp.where(jnp.sum(macc) > 0,
                               new_cloud.astype(jnp.float32),
                               state.cloud_flat)
-        return state._replace(
-            cloud_flat=cloud,
-            rsu_flat=jnp.broadcast_to(spec.to_storage(cloud),
-                                      (n_rsus, spec.n)),
-            rsu_mass=jnp.zeros((n_rsus,), jnp.float32),
-            cloud_macc=jnp.zeros((n_rsus,), jnp.float32))
+        anchored = jnp.broadcast_to(spec.to_storage(cloud),
+                                    (n_rsus, spec.n))
+        zeros = jnp.zeros((n_rsus,), jnp.float32)
+        if faulted:
+            upb = up > 0
+            return state._replace(
+                cloud_flat=cloud,
+                rsu_flat=jnp.where(upb[:, None], anchored, state.rsu_flat),
+                rsu_mass=jnp.where(upb, zeros, state.rsu_mass),
+                cloud_macc=jnp.where(upb, zeros, state.cloud_macc))
+        return state._replace(cloud_flat=cloud, rsu_flat=anchored,
+                              rsu_mass=zeros, cloud_macc=zeros)
 
     return jax.jit(close, donate_argnums=(0,))
 
@@ -373,6 +520,8 @@ def run_serve_loop(res, init_params: Optional[PyTree] = None, *,
                    loss_fn: Callable = mlp.loss_fn,
                    eval_fn: Optional[Callable] = None,
                    gen=None, probe_x=None,
+                   snapshot_dir=None, snapshot_every: int = 0,
+                   resume_from=None, resume_step: Optional[int] = None,
                    ) -> Tuple[AsyncSimState, Dict[str, np.ndarray],
                               ServeLoopStats, CloudModelServer]:
     """Drive a serve-mode scenario end-to-end; returns
@@ -385,6 +534,17 @@ def run_serve_loop(res, init_params: Optional[PyTree] = None, *,
     ingestion.  History carries the per-virtual-round accuracy curve and
     absorbed mass (the async engine's schema) plus the stats summary under
     ``history["serve"]``.
+
+    ``snapshot_dir`` + ``snapshot_every=k`` checkpoint the full loop state
+    every ``k`` ticks (atomic — see ``checkpoint/ckpt``);
+    ``resume_from=<dir>`` restores the latest (or ``resume_step``)
+    snapshot and continues the SAME run: the generator is replayed up to
+    the snapshot's event cursor and every later tick reproduces the
+    uninterrupted run bit-for-bit (requires the same spec/generator; pass
+    the trace, not a live Poisson stream, if the run must survive process
+    death).  A mid-loop exception or signal raises
+    :class:`ServeLoopInterrupted` after finalizing stats and writing a
+    last-effort snapshot.
     """
     from repro.core.scenario import ScenarioSpec
     if isinstance(res, ScenarioSpec):
@@ -395,6 +555,7 @@ def run_serve_loop(res, init_params: Optional[PyTree] = None, *,
                          "(or an explicit gen)")
     cfg, hp, het, fed = res.cfg, s.hp, s.het, res.fed
     A, lar, ce = cfg.n_agents, hp.lar, s.cloud_every
+    plan = s.faults
 
     if init_params is None:
         from repro.configs.mnist_mlp import CONFIG
@@ -414,16 +575,25 @@ def run_serve_loop(res, init_params: Optional[PyTree] = None, *,
     if gen is None:
         if s.serve_trace:
             gen = TraceLoadGen.from_jsonl(s.serve_trace,
-                                          limit=s.serve_events)
+                                          limit=s.serve_events,
+                                          n_agents=A)
         else:
             gen = PoissonLoadGen(
                 agent_rates(het, A, s.arrival_rate, seed=cfg.seed),
                 seed=cfg.seed, n_events=s.serve_events)
     stream = iter(gen.events())
 
+    # lowered fault schedule over a generous tick bound (ticks beyond it
+    # clip to the last row, so an over-estimate is harmless)
+    sched = None
+    if plan is not None:
+        n_ev = s.serve_events or (len(gen) if hasattr(gen, "__len__") else 0)
+        sched = plan.lower(A, cfg.n_rsus, 2 * max(n_ev, 1) + lar + 2)
+
     tick_fn = _make_serve_tick(cfg, hp, het, fed, fspec, acfg, loss_fn,
-                               fused=s.fused)
-    round_close = _make_round_close(fspec, cfg.n_rsus, fused=s.fused)
+                               fused=s.fused, faults=plan)
+    round_close = _make_round_close(fspec, cfg.n_rsus, fused=s.fused,
+                                    faulted=plan is not None)
     round_keys_fn = jax.jit(
         lambda rng: (lambda r, k: (r, round_keys(k, lar)))(
             *jax.random.split(rng)))
@@ -444,106 +614,254 @@ def run_serve_loop(res, init_params: Optional[PyTree] = None, *,
     rounds: List[int] = []
     round_absorbed: List[float] = []
     absorbed_acc = 0.0
-    pending_ev: Optional[Event] = None
+    ingress: Deque[Event] = deque()     # deferred + injected-dup events
+    last_seq: Dict[int, int] = {}       # per-agent last absorbed seq
+    stream_pos = 0                      # events pulled from the generator
     stream_done = False
     now = 0.0
+    wall_offset = 0.0
+
+    def _key_placeholder():
+        return np.zeros((lar, 2), np.uint32)
+
+    def _loop_tree():
+        """The FULL loop state as one snapshot pytree (all numpy-able)."""
+        return {
+            "state": state._replace(rng=jax.random.key_data(state.rng)),
+            "keys": (np.asarray(jax.random.key_data(keys))
+                     if keys is not None else _key_placeholder()),
+            "scalars": np.asarray(
+                [float(keys is not None), float(tick_in_round),
+                 float(last_cloud_tick), float(stream_pos),
+                 float(stream_done), float(queue.dropped)], np.float64),
+            "clock": np.asarray([now, absorbed_acc, wall_offset
+                                 + time.perf_counter() - t_loop],
+                                np.float64),
+            "queue": np.asarray(
+                [[e.t, e.agent, e.seq, adm] for e, adm in queue.entries()],
+                np.float64).reshape(-1, 4),
+            "ingress": np.asarray([[e.t, e.agent, e.seq] for e in ingress],
+                                  np.float64).reshape(-1, 3),
+            "last_seq": np.asarray(sorted(last_seq.items()),
+                                   np.int64).reshape(-1, 2),
+            "accs": np.asarray(accs, np.float64),
+            "rounds": np.asarray(rounds, np.int64),
+            "round_absorbed": np.asarray(round_absorbed, np.float64),
+            "stats": _stats_to_tree(stats),
+        }
+
     t_loop = time.perf_counter()
+    if resume_from is not None:
+        tree = ckpt.restore(resume_from, step=resume_step,
+                            like=_loop_tree())
+        raw = tree["state"]
+        state = jax.tree.map(jnp.asarray, raw)._replace(
+            rng=jax.random.wrap_key_data(
+                jnp.asarray(np.asarray(raw.rng, np.uint32))))
+        sc = tree["scalars"]
+        if bool(sc[0]):
+            keys = jax.random.wrap_key_data(
+                jnp.asarray(np.asarray(tree["keys"], np.uint32)))
+        tick_in_round = int(sc[1])
+        last_cloud_tick = int(sc[2])
+        stream_pos = int(sc[3])
+        stream_done = bool(sc[4])
+        queue.load([(Event(t=float(r[0]), agent=int(r[1]), seq=int(r[2])),
+                     int(r[3])) for r in tree["queue"]], dropped=int(sc[5]))
+        ingress.extend(Event(t=float(r[0]), agent=int(r[1]), seq=int(r[2]))
+                       for r in tree["ingress"])
+        last_seq.update({int(a): int(q) for a, q in tree["last_seq"]})
+        now, absorbed_acc, wall_offset = (float(v) for v in tree["clock"])
+        accs = [float(v) for v in tree["accs"]]
+        rounds = [int(v) for v in tree["rounds"]]
+        round_absorbed = [float(v) for v in tree["round_absorbed"]]
+        stats = _stats_from_tree(tree["stats"])
+        # replay the generator up to the snapshot's cursor — every event
+        # before it was already admitted (or deliberately dropped)
+        for _ in range(stream_pos):
+            next(stream, None)
+        server.publish(state.cloud_flat, last_cloud_tick)
 
     def _eval_round(r: int):
         if eval_fn is not None:
             accs.append(float(eval_fn(fspec.unravel(state.cloud_flat))))
             rounds.append(r + 1)
 
-    while True:
-        # ---- admit events until a trigger fires (or the stream ends) ----
-        while not stream_done:
-            if trigger.batch and len(queue) >= trigger.batch:
-                break
-            ev = pending_ev if pending_ev is not None else \
-                next(stream, None)
-            pending_ev = None
-            if ev is None:
-                stream_done = True
-                break
-            if not 0 <= ev.agent < A:
-                raise ValueError(
-                    f"event agent {ev.agent} outside the fleet "
-                    f"(n_agents={A}) — trace from a different scenario?")
-            if (trigger.deadline and len(queue)
-                    and ev.t - queue.oldest_t >= trigger.deadline):
-                pending_ev = ev            # fire first, admit after
-                break
-            if queue.push(ev, stats.n_ticks):
-                stats.events_generated += 1
-                now = ev.t
-            else:                          # backpressure: defer + fire
-                pending_ev = ev
-                stats.events_deferred += 1
-                break
-        if not len(queue):
-            break                          # stream drained, queue empty
+    def _next_event() -> Optional[Event]:
+        """Pull from the ingress queue first, then the generator —
+        applying the plan's per-event-seeded clock skew and duplicate
+        injection at the generator boundary (stateless: a resumed loop
+        replays them identically)."""
+        nonlocal stream_pos
+        if ingress:
+            return ingress.popleft()
+        ev = next(stream, None)
+        if ev is None:
+            return None
+        stream_pos += 1
+        if plan is not None:
+            if plan.clock_skew > 0.0:
+                ev = Event(t=faults_mod.skewed_time(plan, cfg.seed, ev.seq,
+                                                    ev.t),
+                           agent=ev.agent, seq=ev.seq)
+            for _ in range(faults_mod.duplicate_count(plan, cfg.seed,
+                                                      ev.seq)):
+                ingress.append(Event(t=ev.t, agent=ev.agent, seq=ev.seq))
+                stats.events_duplicated += 1
+        return ev
 
-        # ---- drain + fire one tick --------------------------------------
-        if tick_in_round == 0:
-            new_rng, keys = round_keys_fn(state.rng)
-            state = state._replace(rng=new_rng)
-        depth = len(queue)
-        batch, coalesced = queue.drain(stats.n_ticks)
-        stats.events_coalesced += coalesced
-        arrive = np.zeros((A,), np.float32)
-        age = np.zeros((A,), np.int32)
-        for e, a_ticks in batch:
-            arrive[e.agent] = 1.0
-            age[e.agent] = a_ticks
-            stats.event_wait.append(now - e.t)
-            stats.event_age_ticks.append(a_ticks)
+    def _rsu_up_at(t: int):
+        return jnp.asarray(sched.tick_slice(t)["rsu_up"])
 
-        t0 = time.perf_counter()
-        state, tm = tick_fn(state, keys[tick_in_round],
-                            jnp.asarray(arrive), jnp.asarray(age))
-        if probe_x is not None:
-            t_req = time.perf_counter()
-            preds = server.request(probe_x)    # overlaps the tick compute
-        jax.block_until_ready(state.rsu_mass)
-        lat = time.perf_counter() - t0
-        if probe_x is not None:
-            jax.block_until_ready(preds)
-            stats.serve_latency_s.append(time.perf_counter() - t_req)
-            stats.serve_requests += 1
+    try:
+        while True:
+            # ---- admit events until a trigger fires (or stream ends) ----
+            while not (stream_done and not ingress):
+                if trigger.batch and len(queue) >= trigger.batch:
+                    break
+                ev = _next_event()
+                if ev is None:
+                    stream_done = True
+                    break
+                if not 0 <= ev.agent < A:
+                    raise ValueError(
+                        f"event agent {ev.agent} outside the fleet "
+                        f"(n_agents={A}) — trace from a different "
+                        f"scenario?")
+                if (sched is not None and sched.agent_up[
+                        min(stats.n_ticks, sched.n_ticks - 1),
+                        ev.agent] == 0.0):
+                    # churned agent: the event never reaches the queue
+                    stats.events_generated += 1
+                    stats.events_lost_churn += 1
+                    now = max(now, ev.t)
+                    continue
+                if (trigger.deadline and len(queue)
+                        and ev.t - queue.oldest_t >= trigger.deadline):
+                    ingress.appendleft(ev)     # fire first, admit after
+                    break
+                if queue.push(ev, stats.n_ticks):
+                    stats.events_generated += 1
+                    now = max(now, ev.t)
+                else:                          # backpressure: defer + fire
+                    ingress.appendleft(ev)
+                    stats.events_deferred += 1
+                    break
+            if not len(queue):
+                break                          # stream drained, queue empty
 
-        absorbed_acc += float(tm["absorbed_weight"])
-        stats.tick_latency_s.append(lat)
-        stats.queue_depth.append(depth)
-        stats.drain_sizes.append(len(batch))
-        stats.events_absorbed += len(batch)
-        stats.n_ticks += 1
-        tick_in_round += 1
-        if ce and stats.n_ticks % ce == 0:
-            last_cloud_tick = stats.n_ticks
-            stats.n_cloud_aggs += 1
-            server.publish(state.cloud_flat, stats.n_ticks)
-        stats.model_staleness.append(stats.n_ticks - last_cloud_tick)
+            # ---- drain + fire one tick ------------------------------------
+            if tick_in_round == 0:
+                new_rng, keys = round_keys_fn(state.rng)
+                state = state._replace(rng=new_rng)
+            depth = len(queue)
+            batch, coalesced = queue.drain(stats.n_ticks)
+            stats.events_coalesced += coalesced
+            if plan is not None:
+                kept = []
+                for e, a_ticks in batch:
+                    if e.seq <= last_seq.get(e.agent, -1):
+                        stats.events_stale_rejected += 1   # replayed dup
+                    else:
+                        kept.append((e, a_ticks))
+                        last_seq[e.agent] = e.seq
+                batch = kept
+            arrive = np.zeros((A,), np.float32)
+            age = np.zeros((A,), np.int32)
+            for e, a_ticks in batch:
+                arrive[e.agent] = 1.0
+                age[e.agent] = a_ticks
+                stats.event_wait.append(now - e.t)
+                stats.event_age_ticks.append(a_ticks)
 
-        # ---- virtual-round boundary -------------------------------------
-        if tick_in_round == lar:
-            if not ce:
-                state = round_close(state)
+            t0 = time.perf_counter()
+            tick_args = (state, keys[tick_in_round],
+                         jnp.asarray(arrive), jnp.asarray(age))
+            if sched is not None:
+                fslice = {k: jnp.asarray(v) for k, v in
+                          sched.tick_slice(stats.n_ticks).items()}
+                state, tm = tick_fn(*tick_args, fslice)
+            else:
+                state, tm = tick_fn(*tick_args)
+            if probe_x is not None:
+                t_req = time.perf_counter()
+                preds = server.request(probe_x)  # overlaps tick compute
+            jax.block_until_ready(state.rsu_mass)
+            lat = time.perf_counter() - t0
+            if probe_x is not None:
+                jax.block_until_ready(preds)
+                stats.serve_latency_s.append(time.perf_counter() - t_req)
+                stats.serve_requests += 1
+
+            absorbed_acc += float(tm["absorbed_weight"])
+            if plan is not None:
+                stats.quarantined_updates += int(tm["quarantined"])
+                stats.blocked_mass += float(tm["blocked_mass"])
+            stats.tick_latency_s.append(lat)
+            stats.queue_depth.append(depth)
+            stats.drain_sizes.append(len(batch))
+            stats.events_absorbed += len(batch)
+            stats.n_ticks += 1
+            tick_in_round += 1
+            if ce and stats.n_ticks % ce == 0:
                 last_cloud_tick = stats.n_ticks
                 stats.n_cloud_aggs += 1
                 server.publish(state.cloud_flat, stats.n_ticks)
-            r = stats.n_rounds
-            stats.n_rounds += 1
-            round_absorbed.append(absorbed_acc)
-            absorbed_acc = 0.0
-            if r % cfg.eval_every == 0:
-                _eval_round(r)
-            tick_in_round = 0
+            stats.model_staleness.append(stats.n_ticks - last_cloud_tick)
+
+            # ---- virtual-round boundary -----------------------------------
+            if tick_in_round == lar:
+                if not ce:
+                    state = round_close(state) if sched is None else \
+                        round_close(state, _rsu_up_at(stats.n_ticks - 1))
+                    last_cloud_tick = stats.n_ticks
+                    stats.n_cloud_aggs += 1
+                    server.publish(state.cloud_flat, stats.n_ticks)
+                r = stats.n_rounds
+                stats.n_rounds += 1
+                round_absorbed.append(absorbed_acc)
+                absorbed_acc = 0.0
+                if r % cfg.eval_every == 0:
+                    _eval_round(r)
+                tick_in_round = 0
+
+            if (snapshot_dir is not None and snapshot_every
+                    and stats.n_ticks % snapshot_every == 0):
+                ckpt.save(snapshot_dir, stats.n_ticks, _loop_tree())
+
+    except BaseException as exc:
+        if isinstance(exc, ValueError):
+            raise   # input/config validation, not an operational failure
+        # graceful shutdown: finalize the accounting, write a last-effort
+        # snapshot, and hand everything to the caller on the exception
+        stats.events_dropped = queue.dropped
+        stats.sim_time = now
+        stats.wall_s = wall_offset + time.perf_counter() - t_loop
+        history = {"round": np.asarray(rounds), "acc": np.asarray(accs),
+                   "absorbed_mass": np.asarray(round_absorbed),
+                   "serve": stats.summary()}
+        snap_path = None
+        if snapshot_dir is not None:
+            try:
+                # may fail if the tick dispatch itself died (the donated
+                # state buffers are then invalid) — a stale-but-complete
+                # earlier snapshot is still on disk
+                snap_path = ckpt.save(snapshot_dir, stats.n_ticks,
+                                      _loop_tree())
+            except Exception:
+                snap_path = None
+        raise ServeLoopInterrupted(
+            f"serve loop interrupted at tick {stats.n_ticks} "
+            f"({stats.events_absorbed} events absorbed): {exc!r}",
+            state=state, history=history, stats=stats, server=server,
+            snapshot_path=snap_path) from exc
 
     # partial final round: close it so trailing absorbed mass reaches the
     # cloud master (then eval once more if the last round wasn't)
     if tick_in_round:
         if not ce:
-            state = round_close(state)
+            state = round_close(state) if sched is None else \
+                round_close(state, _rsu_up_at(stats.n_ticks - 1))
             last_cloud_tick = stats.n_ticks
             stats.n_cloud_aggs += 1
         server.publish(state.cloud_flat, stats.n_ticks)
@@ -556,10 +874,12 @@ def run_serve_loop(res, init_params: Optional[PyTree] = None, *,
 
     stats.events_dropped = queue.dropped
     stats.sim_time = now
-    stats.wall_s = time.perf_counter() - t_loop
+    stats.wall_s = wall_offset + time.perf_counter() - t_loop
     history = {"round": np.asarray(rounds), "acc": np.asarray(accs),
                "absorbed_mass": np.asarray(round_absorbed),
                "serve": stats.summary()}
+    if snapshot_dir is not None and snapshot_every:
+        ckpt.save(snapshot_dir, stats.n_ticks, _loop_tree())
     return state, history, stats, server
 
 

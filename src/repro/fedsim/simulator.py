@@ -48,10 +48,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as faults_mod
 from repro.core import flatten
 from repro.core.aggregation import (blend_on_mass, broadcast_to_agents,
                                     gather_rsu_for_agents, masked_weighted_mean,
-                                    rsu_aggregate)
+                                    rsu_aggregate, screen_updates)
 from repro.core.h2fed import H2FedParams
 from repro.core.heterogeneity import (ConnState, HeterogeneityModel,
                                       init_conn_state, step_connectivity)
@@ -262,7 +263,8 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
                           spec: flatten.FlatSpec,
                           loss_fn: Callable = mlp.loss_fn, *,
                           fused: bool = True,
-                          cadence: Optional[Cadence] = None):
+                          cadence: Optional[Cadence] = None,
+                          faults: Optional[faults_mod.FaultPlan] = None):
     """The flat-buffer global round body: FlatSimState -> FlatSimState
     (un-jitted — callers compose and jit it).
 
@@ -280,6 +282,17 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
     a per-iteration ``live`` mask gates the scan carry and zeroes the
     per-round masses, so padded iterations are exact no-ops and the padded
     program reproduces the static one bit-for-bit on live iterations.
+
+    ``faults`` (a ``core.faults.FaultPlan``) switches to the fault-gated
+    program ``(state, fault_r) -> (state, metrics)``: ``fault_r`` is a
+    per-round dict of lowered (lar, A)/(lar, R) mask DATA
+    (``FaultSchedule.round_slice``) — churn folds into the connectivity
+    mask, RSU outages zero upload weights, corrupted payloads are
+    injected post-training and screened by ``screen_updates`` (scrubbed
+    + weight-masked, so cohort-mass accounting stays conserved), and
+    ``metrics["quarantined"]`` counts rejected weighted rows.  Only the
+    plan's guard flags shape the program; the benign lowering is
+    bitwise identical to the fault-free body (anchor-pinned).
     """
     x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = _fed_arrays(
         cfg, hp, fed,
@@ -291,7 +304,7 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
             loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
         in_axes=(0, 0, 0, 0, None, 0))
 
-    def global_round(state: FlatSimState) -> FlatSimState:
+    def global_round(state: FlatSimState, fault_r=None):
         rng, k_rounds = jax.random.split(state.rng)
         # Alg. 2 line 2: RSUs replace w_k with the current cloud model
         rsu_flat = jnp.broadcast_to(spec.to_storage(state.cloud_flat),
@@ -301,10 +314,16 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
                 else jnp.arange(lar_bound) < hp.lar)     # (lar_bound,)
 
         def local_round(carry, inp):
-            key = inp if cadence is None else inp[0]
+            key = inp if (cadence is None and faults is None) else inp[0]
+            f = inp[-1] if faults is not None else None
             rsu_prev, conn_prev, agent_prev = carry
             conn, mask, active_steps = round_draws(
                 key, conn_prev, het, hp, cfg.n_agents, spe)
+            if faults is not None:
+                # churned agents are hard-disconnected this tick
+                # (benign lowering: mask & True — identity)
+                mask = mask & (f["agent_up"] > 0)
+            maskf = mask.astype(jnp.float32)
 
             # Alg. 2 l.5 / Alg. 1 l.1: every agent starts from its RSU row
             w_start = jnp.take(rsu_prev, rsu_assign, axis=0)     # (A, N)
@@ -312,14 +331,29 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
                 train_agents(x_all, y_all, w_start, w_start,
                              state.cloud_flat, active_steps))
 
+            nq = None
+            if faults is not None:
+                # corrupted submissions (NaN/Inf, byzantine scale, stale
+                # replay) enter here, then the quarantine gate scrubs +
+                # weight-masks them; uploads to a dark RSU are dropped
+                agent_flat = faults_mod.apply_corruption(
+                    agent_flat, agent_prev, f)
+                up_a = jnp.take(f["rsu_up"], rsu_assign)         # (A,)
+                w_pre = n_per_agent * maskf * up_a
+                agent_flat, okf, nq = screen_updates(
+                    agent_flat, w_start, w_pre,
+                    nonfinite=faults.guard_nonfinite,
+                    norm_clip=faults.norm_clip)
+                maskf = maskf * up_a * okf
+
             # Alg. 2 line 8: one (R, A) @ (A, N) pass over the fleet
             if fused:
                 rsu_flat, mass = ops.agg_blend(
-                    agent_flat, n_per_agent, mask.astype(jnp.float32),
+                    agent_flat, n_per_agent, maskf,
                     rsu_assign, cfg.n_rsus, rsu_prev)
             else:
                 new_rsu, mass = ops.masked_hier_agg(
-                    agent_flat, n_per_agent, mask.astype(jnp.float32),
+                    agent_flat, n_per_agent, maskf,
                     rsu_assign, cfg.n_rsus)
                 rsu_flat = jnp.where((mass > 0)[:, None], new_rsu,
                                      rsu_prev).astype(rsu_prev.dtype)
@@ -332,12 +366,19 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
                     (rsu_flat, conn, agent_flat),
                     (rsu_prev, conn_prev, agent_prev))
                 mass = jnp.where(live_i, mass, 0.0)
-            return (rsu_flat, conn, agent_flat), mass
+                if nq is not None:
+                    nq = jnp.where(live_i, nq, 0)
+            out = mass if faults is None else (mass, nq)
+            return (rsu_flat, conn, agent_flat), out
 
-        (rsu_flat, conn, agent_flat), masses = jax.lax.scan(
-            local_round,
-            (rsu_flat, state.conn, state.agent_flat),
-            keys if cadence is None else (keys, live))
+        if faults is None:
+            xs = keys if cadence is None else (keys, live)
+        else:
+            xs = ((keys, fault_r) if cadence is None
+                  else (keys, live, fault_r))
+        (rsu_flat, conn, agent_flat), out = jax.lax.scan(
+            local_round, (rsu_flat, state.conn, state.agent_flat), xs)
+        masses = out if faults is None else out[0]
 
         # Alg. 3 line 6: cloud aggregation — the (1, R) @ (R, N) matmul
         total_mass = jnp.sum(masses, axis=0)                     # (R,)
@@ -349,8 +390,11 @@ def _make_flat_round_body(cfg: SimConfig, hp: H2FedParams,
             cloud_flat = jnp.where(jnp.sum(total_mass) > 0,
                                    new_cloud.astype(jnp.float32),
                                    state.cloud_flat)
-        return FlatSimState(agent_flat=agent_flat, rsu_flat=rsu_flat,
-                            cloud_flat=cloud_flat, conn=conn, rng=rng)
+        new_state = FlatSimState(agent_flat=agent_flat, rsu_flat=rsu_flat,
+                                 cloud_flat=cloud_flat, conn=conn, rng=rng)
+        if faults is None:
+            return new_state
+        return new_state, {"quarantined": jnp.sum(out[1])}
 
     return global_round
 
@@ -359,7 +403,7 @@ def make_flat_global_round(cfg: SimConfig, hp: H2FedParams,
                            het: HeterogeneityModel, fed: FederatedData,
                            spec: flatten.FlatSpec,
                            loss_fn: Callable = mlp.loss_fn, *,
-                           fused: bool = True):
+                           fused: bool = True, faults=None):
     """The flat-buffer global round: FlatSimState -> FlatSimState, jitted.
 
     The input state's buffers are DONATED: the (A, N)/(R, N)/(N,) update is
@@ -368,9 +412,11 @@ def make_flat_global_round(cfg: SimConfig, hp: H2FedParams,
     Callers must rebind — ``state = round_fn(state)`` — and never touch the
     consumed input again.  ``fused=False`` keeps the two-pass aggregation
     program for A/B benchmarking (benchmarks/async_round, topology_round).
+    With ``faults`` the round is ``(state, fault_r) -> (state, metrics)``
+    (see ``_make_flat_round_body``).
     """
     return jax.jit(_make_flat_round_body(cfg, hp, het, fed, spec, loss_fn,
-                                         fused=fused),
+                                         fused=fused, faults=faults),
                    donate_argnums=(0,))
 
 
@@ -515,7 +561,7 @@ def _run_sync(res, init_params: PyTree, *,
             storage_dtype=flatten.resolve_storage_dtype(fleet_dtype))
         state = init_flat_state(cfg, spec, init_params, key)
         round_fn = make_flat_global_round(cfg, hp, het, fed, spec, loss_fn,
-                                          fused=fused)
+                                          fused=fused, faults=s.faults)
         # eval_fn is called eagerly (unravel is cheap outside jit) so
         # user-supplied non-traceable metrics keep working; the built-in
         # accuracy eval_fn above is already jitted.
@@ -532,12 +578,24 @@ def _run_sync(res, init_params: PyTree, *,
         raise ValueError(
             f"unknown engine {engine!r} (want 'flat'|'tree'|'async')")
 
-    accs, rounds = [], []
+    # fault schedules lower once per run to per-tick mask data over the
+    # global tick clock (rounds x lar); each round consumes its slice
+    sched = None
+    if s.faults is not None and engine == "flat":
+        sched = s.faults.lower(cfg.n_agents, cfg.n_rsus, n_rounds * hp.lar)
+
+    accs, rounds, quarantined = [], [], []
     for r in range(n_rounds):
-        state = round_fn(state)
+        if sched is None:
+            state = round_fn(state)
+        else:
+            state, fm = round_fn(state, sched.round_slice(r, hp.lar))
+            quarantined.append(int(fm["quarantined"]))
         if eval_state is not None and (r % cfg.eval_every == 0
                                        or r == n_rounds - 1):
             accs.append(float(eval_state(state)))
             rounds.append(r + 1)
     history = {"round": np.asarray(rounds), "acc": np.asarray(accs)}
+    if sched is not None:
+        history["quarantined"] = np.asarray(quarantined)
     return finalize(state), history

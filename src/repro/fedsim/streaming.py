@@ -43,6 +43,19 @@ Entry points: ``fedsim.run_scenario`` dispatches here whenever the spec
 sets ``fleet_store="host"`` or ``chunk_agents > 0``;
 ``run_streamed_simulation`` is the direct-call twin of
 ``run_simulation`` for callers with their own arrays (benchmarks).
+
+Fault injection (DESIGN.md §11): streamed rounds accept a lowered
+``FaultSchedule`` round slice.  Churn and RSU outages are *weight data* —
+folded into the per-tick aggregation weights host-side (``agent_up`` and
+the agent's RSU ``rsu_up`` multiply the draw weights), so dark agents/RSUs
+contribute zero mass without touching the compiled chunk program — plus a
+per-tick recovery re-anchor and an outage-masked cloud blend in the async
+round.  The non-finite quarantine guard runs inside ``chunk_step`` (gated
+by plan presence, like the resident engines).  Corrupted-update injection
+is NOT supported here (``ScenarioSpec.validate`` rejects it): the streamed
+store writebacks are row-masked host ops and cannot stage per-tick payload
+corruption without materializing the fleet.  The benign schedule is a
+bitwise no-op (``w * 1.0`` folds), pinned by the zero-fault anchor.
 """
 from __future__ import annotations
 
@@ -185,11 +198,22 @@ def init_stream_state(cfg: SimConfig, spec: flatten.FlatSpec,
         rng=key)
 
 
+def _fault_weight_fold(fault_r, rsu_assign_np, pad: int):
+    """Host-side (lar, A_pad) weight multiplier from one round's fault
+    slice: churned agents and agents behind a dark RSU contribute zero
+    mass.  Benign schedules fold to all-ones (``w * 1.0`` is exact)."""
+    up_a = fault_r["rsu_up"][:, rsu_assign_np]           # (lar, A)
+    fold = fault_r["agent_up"] * up_a
+    if pad:
+        fold = np.pad(fold, ((0, 0), (0, pad)), constant_values=1.0)
+    return jnp.asarray(fold, jnp.float32)
+
+
 def make_streamed_flat_round(cfg: SimConfig, hp: H2FedParams,
                              het: HeterogeneityModel, fed: FederatedData,
                              spec: flatten.FlatSpec,
                              loss_fn: Callable = mlp.loss_fn, *,
-                             chunk_agents: int = 0):
+                             chunk_agents: int = 0, faults=None):
     """Build the streamed synchronous global round:
     StreamSimState -> StreamSimState.
 
@@ -200,6 +224,12 @@ def make_streamed_flat_round(cfg: SimConfig, hp: H2FedParams,
     ``normalize_blend``.  In the sync round agent rows are WRITE-only
     (training starts from RSU rows), so the store is never gathered —
     only the trained rows flow back.
+
+    With ``faults`` (a ``FaultPlan``), ``global_round(state, fault_r)``
+    takes one ``FaultSchedule.round_slice``: churn/outage fold into the
+    draw weights host-side (see ``_fault_weight_fold``) and the
+    non-finite guard screens each chunk inside ``chunk_step``; the round
+    then also returns a ``{"quarantined": ...}`` metrics dict.
     """
     A, R, N = cfg.n_agents, cfg.n_rsus, spec.n
     spe = max(int(fed.x.shape[1]) // cfg.batch, 1)
@@ -207,6 +237,8 @@ def make_streamed_flat_round(cfg: SimConfig, hp: H2FedParams,
     plan = make_chunk_plan(A, chunk_agents)
     chunks = _data_chunks(fed, plan)
     n_per_agent = jnp.asarray(np.asarray(fed.n_per_agent), jnp.float32)
+    rsu_assign_np = np.asarray(fed.rsu_assign, np.int32)
+    guard = faults is not None and faults.guard_nonfinite
 
     train_agents = jax.vmap(
         lambda x, y, w0, wr, wc, act: _local_train_flat(
@@ -238,8 +270,17 @@ def make_streamed_flat_round(cfg: SimConfig, hp: H2FedParams,
         w_start = jnp.take(rsu_flat, assign_c, axis=0)     # (chunk, N)
         stored = spec.to_storage(
             train_agents(x_c, y_c, w_start, w_start, cloud_flat, act_c))
+        nq = jnp.zeros((), jnp.int32)
+        if guard:
+            # quarantine gate, chunk-shaped: non-finite rows are scrubbed
+            # back to their RSU start and zero-weighted (benign data all
+            # finite -> ok all-True, a bitwise no-op)
+            ok = jnp.all(jnp.isfinite(stored.astype(jnp.float32)), axis=1)
+            stored = jnp.where(ok[:, None], stored, w_start)
+            nq = jnp.sum(((w_c > 0) & ~ok).astype(jnp.int32))
+            w_c = w_c * ok.astype(jnp.float32)
         num, mass = ops.chunk_agg(stored, w_c, assign_c, R)
-        return num_acc + num, mass_acc + mass, stored
+        return num_acc + num, mass_acc + mass, stored, nq
 
     @jax.jit
     def rsu_update(num_acc, mass_acc, rsu_flat):
@@ -252,13 +293,17 @@ def make_streamed_flat_round(cfg: SimConfig, hp: H2FedParams,
     def put_chunk(c: int):
         return jax.device_put(chunks[c])
 
-    def global_round(state: StreamSimState) -> StreamSimState:
+    def global_round(state: StreamSimState, fault_r=None):
         store = state.store
         conn, rng, weights, steps = draws_fn(state.conn, state.rng)
+        if faults is not None:
+            weights = weights * _fault_weight_fold(fault_r, rsu_assign_np,
+                                                   plan.pad)
         # Alg. 2 line 2: RSUs re-anchor to the cloud model
         rsu_flat = jnp.broadcast_to(spec.to_storage(state.cloud_flat),
                                     (R, N))
         total_mass = jnp.zeros((R,), jnp.float32)
+        n_quar = jnp.zeros((), jnp.int32)
         for l in range(hp.lar):
             num_acc = jnp.zeros((R, N), jnp.float32)
             mass_acc = jnp.zeros((R,), jnp.float32)
@@ -271,9 +316,10 @@ def make_streamed_flat_round(cfg: SimConfig, hp: H2FedParams,
                     # before the current chunk's compute is enqueued
                     nxt = put_chunk(c + 1)
                 sl = slice(c * plan.chunk, (c + 1) * plan.chunk)
-                num_acc, mass_acc, stored = chunk_step(
+                num_acc, mass_acc, stored, nq = chunk_step(
                     num_acc, mass_acc, rsu_flat, state.cloud_flat, *cur,
                     weights[l, sl], steps[l, sl])
+                n_quar = n_quar + nq
                 if wb is not None:
                     # deferred-by-one writeback: the (blocking) d2h read of
                     # chunk c-1 overlaps chunk c's dispatched compute
@@ -285,8 +331,11 @@ def make_streamed_flat_round(cfg: SimConfig, hp: H2FedParams,
             total_mass = total_mass + mass_acc
         # Alg. 3 line 6: cloud aggregation over the surviving mass
         cloud_flat = cloud_update(rsu_flat, total_mass, state.cloud_flat)
-        return StreamSimState(store=store, rsu_flat=rsu_flat,
-                              cloud_flat=cloud_flat, conn=conn, rng=rng)
+        out = StreamSimState(store=store, rsu_flat=rsu_flat,
+                             cloud_flat=cloud_flat, conn=conn, rng=rng)
+        if faults is not None:
+            return out, {"quarantined": n_quar}
+        return out
 
     global_round.plan = plan
     global_round.chunk_step = chunk_step
@@ -346,7 +395,7 @@ def make_streamed_async_round(cfg: SimConfig, hp: H2FedParams,
                               spec: flatten.FlatSpec,
                               acfg: Optional[AsyncConfig] = None,
                               loss_fn: Callable = mlp.loss_fn, *,
-                              chunk_agents: int = 0):
+                              chunk_agents: int = 0, faults=None):
     """Build the streamed semi-async global round:
     AsyncStreamState -> (AsyncStreamState, metrics).
 
@@ -360,6 +409,13 @@ def make_streamed_async_round(cfg: SimConfig, hp: H2FedParams,
     without gathering them first.  Draw/key discipline matches the
     resident engine (latency keys folded with ``_LATENCY_FOLD``), so at
     small A streamed == resident to fp32 tolerance (test-pinned).
+
+    With ``faults``, ``global_round(state, fault_r)`` takes one
+    ``FaultSchedule.round_slice``: churn folds into the connectivity
+    masks (gating training, immediate uploads AND enqueues), outages
+    zero both arrival cohorts' weights and mask the cloud blend, a
+    recovering RSU re-anchors at its tick, and the non-finite guard
+    screens both cohorts inside ``chunk_step``.
     """
     acfg = (acfg or AsyncConfig()).validate()
     A, R, N = cfg.n_agents, cfg.n_rsus, spec.n
@@ -369,6 +425,8 @@ def make_streamed_async_round(cfg: SimConfig, hp: H2FedParams,
     chunks = _data_chunks(fed, plan)
     n_per_agent = jnp.asarray(np.asarray(fed.n_per_agent), jnp.float32)
     rsu_assign = jnp.asarray(np.asarray(fed.rsu_assign), jnp.int32)
+    rsu_assign_np = np.asarray(fed.rsu_assign, np.int32)
+    guard = faults is not None and faults.guard_nonfinite
     decay = acfg.agent_decay(rsu_assign, R)
     keep = acfg.rsu_keep(R)
     ce = acfg.cloud_every
@@ -422,9 +480,24 @@ def make_streamed_async_round(cfg: SimConfig, hp: H2FedParams,
         w_start = jnp.take(rsu_flat, assign_c, axis=0)
         trained = spec.to_storage(
             train_agents(x_c, y_c, w_start, w_start, cloud_flat, act_c))
+        nq = jnp.zeros((), jnp.int32)
+        if guard:
+            # quarantine gate over BOTH arrival cohorts: fresh trained
+            # rows are scrubbed back to their RSU start; non-finite
+            # pending deliveries are zero-weighted (their store rows
+            # expire with the delivery)
+            ok_t = jnp.all(jnp.isfinite(trained.astype(jnp.float32)),
+                           axis=1)
+            trained = jnp.where(ok_t[:, None], trained, w_start)
+            ok_p = jnp.all(jnp.isfinite(pend_rows.astype(jnp.float32)),
+                           axis=1)
+            nq = (jnp.sum(((w_imm_c > 0) & ~ok_t).astype(jnp.int32))
+                  + jnp.sum(((w_due_c > 0) & ~ok_p).astype(jnp.int32)))
+            w_imm_c = w_imm_c * ok_t.astype(jnp.float32)
+            w_due_c = w_due_c * ok_p.astype(jnp.float32)
         num_i, m_i = ops.chunk_agg(trained, w_imm_c, assign_c, R)
         num_d, m_d = ops.chunk_agg(pend_rows, w_due_c, assign_c, R)
-        return num_acc + num_i + num_d, mass_acc + m_i + m_d, trained
+        return num_acc + num_i + num_d, mass_acc + m_i + m_d, trained, nq
 
     @jax.jit
     def tick_finish(rsu_flat, rsu_mass, num_acc, mass_acc, cloud_macc):
@@ -442,10 +515,15 @@ def make_streamed_async_round(cfg: SimConfig, hp: H2FedParams,
         pend = _pad_tail(pending_store.gather(lo, lo + valid), plan.chunk)
         return jax.device_put((x, y, a, pend))
 
-    def global_round(state: AsyncStreamState
+    def global_round(state: AsyncStreamState, fault_r=None
                      ) -> Tuple[AsyncStreamState, Dict[str, np.ndarray]]:
         store, pending_store = state.store, state.pending_store
         conn, rng, masks, steps, delays = draws_fn(state.conn, state.rng)
+        if faults is not None:
+            # churn: hard-disconnect beyond the benign latency model —
+            # gates immediate uploads and enqueues (due deliveries were
+            # dispatched before the disconnect and still land)
+            masks = masks * jnp.asarray(fault_r["agent_up"], jnp.float32)
         if ce:
             # decoupled cadence: buffers/mass/accumulator persist across
             # the round boundary (see async_engine for the rationale)
@@ -460,9 +538,31 @@ def make_streamed_async_round(cfg: SimConfig, hp: H2FedParams,
         pend_w, pend_t, gtick = state.pending_w, state.pending_t, state.tick
         absorbed = []
 
+        n_quar = jnp.zeros((), jnp.int32)
         for l in range(hp.lar):
+            if faults is not None:
+                # recovery re-anchor: an RSU coming back from an outage
+                # rejoins at the current cloud master, buffer cleared
+                ra = jnp.asarray(fault_r["reanchor"][l]) > 0
+                rsu_flat = jnp.where(
+                    ra[:, None],
+                    jnp.broadcast_to(spec.to_storage(cloud_flat), (R, N)),
+                    rsu_flat)
+                rsu_mass = jnp.where(ra, 0.0, rsu_mass)
+                cloud_macc = jnp.where(ra, 0.0, cloud_macc)
             act, w_imm, w_due, free, enq, pend_w, pend_t = tick_prep(
                 pend_w, pend_t, masks[l], steps[l], delays[l])
+            if faults is not None:
+                # outage: uploads to a dark RSU are dropped — both fresh
+                # and due arrival cohorts lose their weight BEFORE the
+                # mass partial sums, so conservation holds by construction
+                up_a_l = fault_r["rsu_up"][l][rsu_assign_np]
+                if plan.pad:
+                    up_a_l = np.pad(up_a_l, (0, plan.pad),
+                                    constant_values=1.0)
+                up_a_l = jnp.asarray(up_a_l, jnp.float32)
+                w_imm = w_imm * up_a_l
+                w_due = w_due * up_a_l
             free_h, enq_h = np.asarray(free), np.asarray(enq)
             num_acc = jnp.zeros((R, N), jnp.float32)
             mass_acc = jnp.zeros((R,), jnp.float32)
@@ -473,9 +573,10 @@ def make_streamed_async_round(cfg: SimConfig, hp: H2FedParams,
                 if c + 1 < plan.n_chunks:
                     nxt = put_chunk(c + 1, pending_store)
                 sl = slice(c * plan.chunk, (c + 1) * plan.chunk)
-                num_acc, mass_acc, trained = chunk_step(
+                num_acc, mass_acc, trained, nq = chunk_step(
                     num_acc, mass_acc, rsu_flat, cloud_flat, *cur,
                     act[sl], w_imm[sl], w_due[sl])
+                n_quar = n_quar + nq
                 if wb is not None:
                     _flush_async_wb(store, pending_store, *wb)
                 rows = trained if valid == plan.chunk else trained[:valid]
@@ -487,11 +588,17 @@ def make_streamed_async_round(cfg: SimConfig, hp: H2FedParams,
             absorbed.append(mass_acc)
             gtick += 1
             if ce and gtick % ce == 0:
-                cloud_flat = cloud_update(rsu_flat, cloud_macc, cloud_flat)
+                macc_fire = cloud_macc if faults is None else \
+                    cloud_macc * jnp.asarray(fault_r["rsu_up"][l],
+                                             jnp.float32)
+                cloud_flat = cloud_update(rsu_flat, macc_fire, cloud_flat)
                 cloud_macc = jnp.zeros((R,), jnp.float32)
 
         if not ce:
-            cloud_flat = cloud_update(rsu_flat, cloud_macc, cloud_flat)
+            macc_end = cloud_macc if faults is None else \
+                cloud_macc * jnp.asarray(fault_r["rsu_up"][hp.lar - 1],
+                                         jnp.float32)
+            cloud_flat = cloud_update(rsu_flat, macc_end, cloud_flat)
             cloud_macc = jnp.zeros((R,), jnp.float32)
 
         out = AsyncStreamState(
@@ -503,6 +610,8 @@ def make_streamed_async_round(cfg: SimConfig, hp: H2FedParams,
             "absorbed_mass": jnp.stack(absorbed),            # (LAR, R)
             "pending_mass": jnp.sum(pend_w * (pend_t > 0)),
         }
+        if faults is not None:
+            metrics["quarantined"] = n_quar
         return out, metrics
 
     global_round.plan = plan
@@ -532,7 +641,7 @@ def run_streamed_simulation(cfg: SimConfig, hp: H2FedParams,
                             x_test=None, y_test=None,
                             loss_fn: Callable = mlp.loss_fn,
                             eval_fn: Optional[Callable] = None,
-                            fleet_dtype=None,
+                            fleet_dtype=None, faults=None,
                             ) -> Tuple[Any, Dict[str, np.ndarray]]:
     """Cohort-streamed twin of ``run_simulation``: same rounds and history
     schema, with the (A, N) fleet in a FleetStore and the device working
@@ -559,20 +668,33 @@ def run_streamed_simulation(cfg: SimConfig, hp: H2FedParams,
                                        fleet_store=fleet_store)
         round_fn = make_streamed_flat_round(cfg, hp, het, fed, spec,
                                             loss_fn,
-                                            chunk_agents=chunk_agents)
+                                            chunk_agents=chunk_agents,
+                                            faults=faults)
     else:
         state = init_async_stream_state(cfg, spec, init_params, key,
                                         fleet_store=fleet_store)
         round_fn = make_streamed_async_round(cfg, hp, het, fed, spec, acfg,
                                              loss_fn,
-                                             chunk_agents=chunk_agents)
+                                             chunk_agents=chunk_agents,
+                                             faults=faults)
+    sched = None
+    if faults is not None:
+        sched = faults.validate(cfg.n_rsus).lower(cfg.n_agents, cfg.n_rsus,
+                                                  n_rounds * hp.lar)
 
-    accs, rounds, absorbed, pending = [], [], [], []
+    accs, rounds, absorbed, pending, quarantined = [], [], [], [], []
     for r in range(n_rounds):
+        fr = None if sched is None else sched.round_slice(r, hp.lar)
         if engine == "async":
-            state, metrics = round_fn(state)
+            state, metrics = (round_fn(state) if sched is None
+                              else round_fn(state, fr))
             absorbed.append(float(jnp.sum(metrics["absorbed_mass"])))
             pending.append(float(metrics["pending_mass"]))
+            if sched is not None:
+                quarantined.append(int(metrics["quarantined"]))
+        elif sched is not None:
+            state, metrics = round_fn(state, fr)
+            quarantined.append(int(metrics["quarantined"]))
         else:
             state = round_fn(state)
         if eval_fn is not None and (r % cfg.eval_every == 0
@@ -583,6 +705,8 @@ def run_streamed_simulation(cfg: SimConfig, hp: H2FedParams,
     if engine == "async":
         history["absorbed_mass"] = np.asarray(absorbed)
         history["pending_mass"] = np.asarray(pending)
+    if sched is not None:
+        history["quarantined"] = np.asarray(quarantined)
     return state, history
 
 
@@ -603,4 +727,5 @@ def _run_streamed(res, init_params: PyTree, *,
         res.cfg, s.hp, s.het, res.fed, init_params, s.rounds,
         engine=s.engine, acfg=acfg, fleet_store=s.fleet_store,
         chunk_agents=s.chunk_agents, x_test=x_test, y_test=y_test,
-        loss_fn=loss_fn, eval_fn=eval_fn, fleet_dtype=s.fleet_dtype)
+        loss_fn=loss_fn, eval_fn=eval_fn, fleet_dtype=s.fleet_dtype,
+        faults=s.faults)

@@ -19,6 +19,10 @@ a handful of scalars.  This module makes the GRID the compiled unit:
   * scenarios that share a dataset / partition (same ``partition_key`` —
     e.g. a μ sweep over one realization) pass the (A, n, D) data block
     UNBATCHED (``in_axes=None``): no S× data copy;
+  * fault plans (``core.faults.FaultPlan``) lower to per-round mask DATA
+    stacked along the sweep axis — a grid of different fault schedules
+    (one guard config, enforced by ``static_key``'s fingerprint) compiles
+    to ONE program, trace-count-pinned in tests/test_faults.py;
   * when several host devices are visible and S divides them, the sweep
     axis is laid over a 1-D ('sweep',) mesh — pure data parallelism, zero
     collectives (``sweep_mesh``).  Composed with a
@@ -47,6 +51,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import flatten, program_cache
+from repro.core import faults as faults_mod
 from repro.core.heterogeneity import ConnState
 from repro.core.scenario import ResolvedScenario, ScenarioSpec
 from repro.data.partition import FederatedData
@@ -214,6 +219,34 @@ def _dyn_scalars(specs: Sequence[ScenarioSpec],
     return dyn
 
 
+def _stack_fault_rounds(group: Sequence[ResolvedScenario],
+                        lar_bound: int) -> Dict[str, np.ndarray]:
+    """Per-scenario lowered fault schedules stacked over the sweep axis:
+    dict of (S, rounds, lar_bound, A|R) float32 host arrays — the fault
+    masks ride the vmapped round as ORDINARY DATA, so a grid of different
+    :class:`~repro.core.faults.FaultPlan` schedules (same guard
+    fingerprint, enforced by ``static_key`` grouping) still compiles to
+    one sweep program.
+
+    Each scenario's plan lowers over its OWN tick clock (``rounds × its
+    lar``).  When the group batches cadence, rows are padded to the
+    group-wide scan bound by clipping to the round's last live tick —
+    those scan iterations are masked dead, so the clipped values never
+    land (the same neutrality argument as the cadence live masks)."""
+    out: Dict[str, list] = {k: [] for k in faults_mod.FAULT_FIELDS}
+    for r in group:
+        s = r.spec
+        lar = s.hp.lar
+        sched = s.faults.validate(s.n_rsus).lower(
+            s.n_agents, s.n_rsus, s.rounds * lar)
+        pad = np.minimum(np.arange(lar_bound), lar - 1)          # (L,)
+        idx = np.minimum(np.arange(s.rounds)[:, None] * lar + pad[None, :],
+                         sched.n_ticks - 1)                      # (rounds, L)
+        for k in faults_mod.FAULT_FIELDS:
+            out[k].append(getattr(sched, k)[idx])
+    return {k: np.stack(v) for k, v in out.items()}
+
+
 def _cadence_bounds(specs: Sequence[ScenarioSpec],
                     dyn_names: Sequence[str]
                     ) -> Optional[simulator.Cadence]:
@@ -232,7 +265,9 @@ def _cadence_bounds(specs: Sequence[ScenarioSpec],
 
 class SweepProgram(NamedTuple):
     """One compiled sweep: ``state = round_fn(state, data, dyn)`` advances
-    every scenario one global round (async: returns (state, metrics))."""
+    every scenario one global round (async: returns (state, metrics)).
+    Faulted sweeps take a 4th operand — the round's (S, lar, ·) fault
+    mask slice — and always return (state, metrics)."""
     round_fn: Callable        # jitted, state donated
     state: Any                # (S,)-batched FlatSimState / AsyncSimState
     data: Dict[str, jax.Array]
@@ -241,6 +276,9 @@ class SweepProgram(NamedTuple):
     engine: str
     fspec: flatten.FlatSpec
     n_scenarios: int
+    # (S, rounds, lar_bound, A|R) lowered fault masks (host numpy; None
+    # for fault-free groups) — run_sweep slices round r and vmaps it in
+    fault_rounds: Optional[Dict[str, np.ndarray]] = None
 
 
 def sweep_mesh(n_scenarios: int):
@@ -342,6 +380,15 @@ def build_sweep(group: Sequence[ResolvedScenario], init_params,
     if cadence is None:
         cadence = _cadence_bounds(specs, dyn)
 
+    # fault plans: guard structure (fingerprint) is in static_key, so the
+    # group is all-faulted or all-clean with ONE guard config; the
+    # schedules themselves become a per-round vmapped data operand
+    plan0 = s0.faults
+    fault_rounds = None
+    if plan0 is not None:
+        fault_rounds = _stack_fault_rounds(
+            group, cadence.lar if cadence is not None else s0.hp.lar)
+
     hp0, het0 = s0.hp, s0.het
 
     def _materialize(dyn_i):
@@ -360,14 +407,14 @@ def build_sweep(group: Sequence[ResolvedScenario], init_params,
     mesh = sweep_mesh(S) if shard else None
 
     if engine == "flat":
-        def one_round(state, data_i, dyn_i):
+        def one_round(state, data_i, dyn_i, fault_i=None):
             program_cache.note_trace("sweep_round")
             hp, het = _materialize(dyn_i)
             fed = FederatedData(**data_i)
             body = simulator._make_flat_round_body(
                 cfg, hp, het, fed, fspec, loss_fn, fused=s0.fused,
-                cadence=cadence)
-            return body(state)
+                cadence=cadence, faults=plan0)
+            return body(state) if plan0 is None else body(state, fault_i)
 
         sv = fspec.to_storage(vecs)
         state: Any = simulator.FlatSimState(
@@ -379,7 +426,7 @@ def build_sweep(group: Sequence[ResolvedScenario], init_params,
     else:
         acfg = async_config(s0).validate()
 
-        def one_round(state, data_i, dyn_i):
+        def one_round(state, data_i, dyn_i, fault_i=None):
             program_cache.note_trace("sweep_round")
             hp, het = _materialize(dyn_i)
             a = acfg
@@ -389,8 +436,8 @@ def build_sweep(group: Sequence[ResolvedScenario], init_params,
             fed = FederatedData(**data_i)
             body = async_engine._make_async_round_body(
                 cfg, hp, het, fed, fspec, a, loss_fn, fused=s0.fused,
-                cadence=cadence)
-            return body(state)
+                cadence=cadence, faults=plan0)
+            return body(state) if plan0 is None else body(state, fault_i)
 
         sv = fspec.to_storage(vecs)
         state = async_engine.AsyncSimState(
@@ -407,7 +454,9 @@ def build_sweep(group: Sequence[ResolvedScenario], init_params,
             tick=jnp.zeros((S,), jnp.int32))
 
     def _build_programs():
-        round_fn = jax.jit(jax.vmap(one_round, in_axes=(0, data_axes, 0)),
+        axes = ((0, data_axes, 0) if plan0 is None
+                else (0, data_axes, 0, 0))
+        round_fn = jax.jit(jax.vmap(one_round, in_axes=axes),
                            donate_argnums=(0,))
         # batched eval on the (S, N) cloud master — shared test set when
         # every scenario references the same arrays
@@ -445,7 +494,7 @@ def build_sweep(group: Sequence[ResolvedScenario], init_params,
 
     return SweepProgram(round_fn=round_fn, state=state, data=data, dyn=dyn,
                         eval_fn=eval_closed, engine=engine, fspec=fspec,
-                        n_scenarios=S)
+                        n_scenarios=S, fault_rounds=fault_rounds)
 
 
 def run_sweep(group: Sequence[ResolvedScenario], init_params, *,
@@ -455,21 +504,37 @@ def run_sweep(group: Sequence[ResolvedScenario], init_params, *,
               ) -> List[Dict[str, np.ndarray]]:
     """Run one static-compatible group as a single compiled sweep; returns
     per-scenario histories (same schema as ``run_simulation``'s; async
-    scenarios additionally record absorbed/pending mass)."""
+    scenarios additionally record absorbed/pending mass, faulted ones the
+    per-round quarantine counts)."""
     prog = build_sweep(group, init_params, loss_fn=loss_fn, shard=shard,
                        force_dyn=force_dyn, cadence=cadence)
     s0 = group[0].spec
     state = prog.state
+    faulted = prog.fault_rounds is not None
     accs, rounds = [], []
     absorbed, pending = [], []
+    quar, blocked = [], []
     for r in range(s0.rounds):
+        args = (state, prog.data, prog.dyn)
+        if faulted:
+            # round r's (S, lar, ·) mask slice rides in as vmapped data
+            args += ({k: jnp.asarray(v[:, r])
+                      for k, v in prog.fault_rounds.items()},)
         if prog.engine == "async":
-            state, metrics = prog.round_fn(state, prog.data, prog.dyn)
+            state, metrics = prog.round_fn(*args)
             absorbed.append(np.asarray(
                 jnp.sum(metrics["absorbed_mass"], axis=(1, 2))))   # (S,)
             pending.append(np.asarray(metrics["pending_mass"]))    # (S,)
+            if faulted:
+                quar.append(np.asarray(
+                    jnp.sum(metrics["quarantined"], axis=1)))      # (S,)
+                blocked.append(np.asarray(
+                    jnp.sum(metrics["blocked_mass"], axis=1)))
+        elif faulted:
+            state, metrics = prog.round_fn(*args)
+            quar.append(np.asarray(metrics["quarantined"]))        # (S,)
         else:
-            state = prog.round_fn(state, prog.data, prog.dyn)
+            state = prog.round_fn(*args)
         if r % s0.eval_every == 0 or r == s0.rounds - 1:
             accs.append(np.asarray(prog.eval_fn(state.cloud_flat)))
             rounds.append(r + 1)
@@ -480,6 +545,10 @@ def run_sweep(group: Sequence[ResolvedScenario], init_params, *,
         if prog.engine == "async":
             h["absorbed_mass"] = np.asarray([a[i] for a in absorbed])
             h["pending_mass"] = np.asarray([p[i] for p in pending])
+        if faulted:
+            h["quarantined"] = np.asarray([q[i] for q in quar])
+            if prog.engine == "async":
+                h["blocked_mass"] = np.asarray([b[i] for b in blocked])
         out.append(h)
     return out
 

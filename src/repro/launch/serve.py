@@ -12,7 +12,13 @@ Two modes:
       schedule for bit-exact replay.
 
         PYTHONPATH=src python -m repro.launch.serve --serve-loop \
-            [--scenario-json spec.json] [--events 480] [--dump-trace t.jsonl]
+            [--scenario-json spec.json] [--events 480] [--dump-trace t.jsonl] \
+            [--snapshot-dir d --snapshot-every 64] [--resume d]
+
+      ``--snapshot-dir``/``--snapshot-every`` periodically checkpoint the
+      FULL loop state (fleet + queue + stats + rng) through the atomic
+      ``checkpoint.ckpt`` store; ``--resume`` restarts from the latest
+      snapshot and replays the rest of the trace bit-identically.
 
   (default) — batched KV-cache decode of a (possibly federated) global
       model checkpoint: prefill into the per-arch cache (GQA ring buffer /
@@ -57,7 +63,10 @@ def _serve_loop(args) -> None:
         print(f"[trace] {spec.serve_events} events -> {args.dump_trace}")
 
     state, hist, stats, server = run_serve_loop(
-        res, probe_x=res.test.x[:64])
+        res, probe_x=res.test.x[:64],
+        snapshot_dir=args.snapshot_dir or None,
+        snapshot_every=args.snapshot_every,
+        resume_from=args.resume or None)
     s = stats.summary()
     print(f"[serve-loop] {spec.n_agents} agents / {spec.n_rsus} RSUs, "
           f"trigger={spec.tick_trigger!r} "
@@ -100,6 +109,15 @@ def main():
                          "(replayable via the spec's serve_trace)")
     ap.add_argument("--stats-json", default="",
                     help="write the ServeLoopStats summary JSON here")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="serve-loop crash-resume snapshot directory "
+                         "(atomic ckpt of the full loop state)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot the serve loop every N ticks "
+                         "(0 = only the final/interrupt snapshot)")
+    ap.add_argument("--resume", default="",
+                    help="resume a serve loop from this snapshot dir "
+                         "(bit-identical continuation of the trace)")
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full-config", dest="reduced", action="store_false")

@@ -1,0 +1,514 @@
+"""Fault-injection subsystem tests (DESIGN.md §11).
+
+Pins the robustness layer's four guarantees:
+
+  * the ZERO-FAULT ANCHOR — an empty :class:`FaultPlan` threaded through
+    the fault-gated programs is BIT-IDENTICAL to ``faults=None`` on every
+    engine (flat / async / streamed / serving / sweep): the benign
+    lowering is all-ones up/scale and all-zeros poison masks, and every
+    fold the engines apply to those values is an IEEE identity;
+  * QUARANTINE — corrupted updates (NaN/Inf payloads, byzantine scale
+    blow-ups) are counted, scrubbed and weight-masked, never absorbed:
+    a fully-poisoned fleet leaves the cloud master untouched, and the
+    guard is what does the work (disabling it lets the NaNs through);
+  * ONE-PROGRAM FAULT GRIDS — schedules lower to mask DATA, so a sweep
+    over different fault plans (one guard config) traces exactly once;
+  * CRASH-RESUME — the serve loop's periodic snapshots restore to a
+    bit-identical continuation, including host-side fault randomness
+    (per-event seeded duplicates / skew), and a mid-loop exception
+    raises :class:`ServeLoopInterrupted` carrying a resumable snapshot.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.core import program_cache
+from repro.core.faults import (ChurnWindow, CorruptSpec, FAULT_FIELDS,
+                               FaultPlan, FaultSchedule, RsuOutage)
+from repro.core.load_gen import every_agent_once_trace, read_trace
+from repro.core.scenario import ScenarioSpec
+from repro.fedsim import run_scenario
+from repro.fedsim.serving import ServeLoopInterrupted, run_serve_loop
+from repro.fedsim.sweep import run_scenarios
+
+BASE = dict(n_agents=8, n_rsus=4, batch=8, n_train=400, n_test=100,
+            rounds=2)
+SERVE = dict(staleness_decay=1.0, buffer_keep=0.0, cloud_every=0)
+
+
+def _np(x):
+    if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jax.dtypes.prng_key):
+        x = jax.random.key_data(x)
+    return np.asarray(x)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = _np(x), _np(y)
+        if x.dtype == object:      # host fleet-store handles, not arrays
+            continue
+        np.testing.assert_array_equal(x, y)
+
+
+# --------------------------------------------------------------------------
+# the plan: validation, serde, lowering
+# --------------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_validate_rejects(self):
+        with pytest.raises(AssertionError):
+            FaultPlan(churn=(ChurnWindow(frac=1.5),)).validate()
+        with pytest.raises(AssertionError):
+            FaultPlan(churn=(ChurnWindow(frac=0.5, start=-1),)).validate()
+        with pytest.raises(AssertionError):
+            FaultPlan(outages=(RsuOutage(rsu=7),)).validate(n_rsus=4)
+        with pytest.raises(AssertionError):
+            FaultPlan(corrupt=(CorruptSpec(kind="gremlin", frac=0.1),)
+                      ).validate()
+        with pytest.raises(AssertionError):
+            FaultPlan(dup_frac=1.0).validate()
+        with pytest.raises(AssertionError):
+            FaultPlan(clock_skew=-0.1).validate()
+        with pytest.raises(AssertionError):
+            FaultPlan(norm_clip=-1.0).validate()
+        FaultPlan(churn=(ChurnWindow(frac=0.9),),
+                  outages=(RsuOutage(rsu=1, start=2, stop=4),),
+                  corrupt=(CorruptSpec(kind="nan", frac=0.3),),
+                  dup_frac=0.2, clock_skew=0.1).validate(n_rsus=4)
+
+    def test_serde_roundtrip(self):
+        plan = FaultPlan(churn=(ChurnWindow(frac=0.9, start=1, seed=3),),
+                         outages=(RsuOutage(rsu=1, start=2, stop=4),),
+                         corrupt=(CorruptSpec(kind="scale", frac=0.2,
+                                              scale=5.0),),
+                         dup_frac=0.1, clock_skew=0.2, norm_clip=7.5,
+                         seed=11)
+        assert FaultPlan.from_dict(plan.to_dict()) == plan
+        with pytest.raises(ValueError, match="unknown FaultPlan"):
+            FaultPlan.from_dict({"gremlins": 3})
+
+    def test_fingerprint_is_guard_only(self):
+        """Schedules are data; only the guard config shapes the program."""
+        a = FaultPlan(churn=(ChurnWindow(frac=0.3),))
+        b = FaultPlan(outages=(RsuOutage(rsu=0, stop=4),),
+                      corrupt=(CorruptSpec(kind="nan", frac=0.9),))
+        assert a.static_fingerprint == b.static_fingerprint
+        assert (FaultPlan(norm_clip=1.0).static_fingerprint
+                != FaultPlan(norm_clip=2.0).static_fingerprint)
+        assert (FaultPlan(guard_nonfinite=False).static_fingerprint
+                != FaultPlan().static_fingerprint)
+
+    def test_benign_lowering_is_identity_masks(self):
+        sched = FaultSchedule.benign(6, 3, 5)
+        assert sched.agent_up.shape == (5, 6)
+        assert sched.rsu_up.shape == (5, 3)
+        np.testing.assert_array_equal(sched.agent_up, 1.0)
+        np.testing.assert_array_equal(sched.rsu_up, 1.0)
+        np.testing.assert_array_equal(sched.scale, 1.0)
+        for k in ("reanchor", "poison_mask", "poison_val", "stale"):
+            np.testing.assert_array_equal(getattr(sched, k), 0.0)
+
+    def test_lower_churn_outage_windows(self):
+        plan = FaultPlan(churn=(ChurnWindow(frac=0.5, start=2, stop=4),),
+                         outages=(RsuOutage(rsu=1, start=1, stop=3),))
+        sched = plan.lower(8, 3, 6)
+        # half the fleet dark exactly on ticks [2, 4)
+        dark = (sched.agent_up == 0.0).sum(axis=1)
+        np.testing.assert_array_equal(dark, [0, 0, 4, 4, 0, 0])
+        # outage on [1, 3), recovery re-anchor fires at tick 3
+        np.testing.assert_array_equal(sched.rsu_up[:, 1],
+                                      [1, 0, 0, 1, 1, 1])
+        np.testing.assert_array_equal(sched.reanchor[:, 1],
+                                      [0, 0, 0, 1, 0, 0])
+        assert sched.reanchor[:, [0, 2]].sum() == 0
+        # deterministic: the same plan lowers to the same masks
+        for k in FAULT_FIELDS:
+            np.testing.assert_array_equal(getattr(sched, k),
+                                          getattr(plan.lower(8, 3, 6), k))
+
+    def test_tick_slice_clips_past_end(self):
+        sched = FaultPlan(churn=(ChurnWindow(frac=1.0, start=3),)
+                          ).lower(4, 2, 5)
+        for k in FAULT_FIELDS:
+            np.testing.assert_array_equal(sched.tick_slice(100)[k],
+                                          sched.tick_slice(4)[k])
+        rs = sched.round_slice(1, 5)           # ticks 5..9 all clip to 4
+        np.testing.assert_array_equal(rs["agent_up"], 0.0)
+        stacked = sched.stacked_rounds(2, 5)
+        assert stacked["agent_up"].shape == (2, 5, 4)
+        np.testing.assert_array_equal(stacked["agent_up"][1],
+                                      rs["agent_up"])
+
+
+# --------------------------------------------------------------------------
+# the zero-fault anchor (every engine, bit-identical)
+# --------------------------------------------------------------------------
+
+class TestZeroFaultAnchor:
+    @pytest.mark.parametrize("kw", [
+        dict(engine="flat"),
+        dict(engine="async"),
+        dict(engine="flat", fleet_store="host", chunk_agents=3),
+        dict(engine="async", fleet_store="host", chunk_agents=3),
+    ], ids=["flat", "async", "streamed-flat", "streamed-async"])
+    def test_empty_plan_bit_identical(self, kw):
+        clean_st, clean_h = run_scenario(ScenarioSpec(**BASE, **kw))
+        f_st, f_h = run_scenario(
+            ScenarioSpec(**BASE, **kw, faults=FaultPlan()))
+        _leaves_equal(clean_st, f_st)
+        np.testing.assert_array_equal(clean_h["acc"], f_h["acc"])
+        assert np.all(np.asarray(f_h["quarantined"]) == 0)
+
+    def test_empty_plan_serving_bit_identical(self):
+        A, rounds = BASE["n_agents"], 2
+        spec = ScenarioSpec(**BASE, **SERVE, engine="async",
+                            serve_events=A * 5 * rounds,
+                            tick_trigger=f"batch:{A}").replace(rounds=rounds)
+        gen = every_agent_once_trace(A, 5 * rounds)
+        st1, h1, s1, _ = run_serve_loop(spec.resolve(), gen=gen)
+        st2, h2, s2, _ = run_serve_loop(
+            spec.replace(faults=FaultPlan()).resolve(), gen=gen)
+        np.testing.assert_array_equal(np.asarray(st1.cloud_flat),
+                                      np.asarray(st2.cloud_flat))
+        np.testing.assert_array_equal(h1["acc"], h2["acc"])
+        assert s1.n_ticks == s2.n_ticks
+        assert (s2.events_lost_churn == s2.events_duplicated
+                == s2.events_stale_rejected == s2.quarantined_updates == 0)
+
+
+# --------------------------------------------------------------------------
+# quarantine: counted, scrubbed, never absorbed
+# --------------------------------------------------------------------------
+
+class TestQuarantine:
+    def test_full_poison_never_reaches_cloud(self):
+        """Every update NaN every tick: all mass quarantined, the cloud
+        master never moves, and accuracy is flat at its initial value."""
+        spec = ScenarioSpec(**BASE, engine="flat", faults=FaultPlan(
+            corrupt=(CorruptSpec(kind="nan", frac=1.0),)))
+        st, hist = run_scenario(spec)
+        assert all(q > 0 for q in hist["quarantined"])
+        assert np.isfinite(hist["acc"]).all()
+        assert len(set(hist["acc"].tolist())) == 1    # cloud never updated
+        for leaf in jax.tree_util.tree_leaves(st):
+            if _np(leaf).dtype != object:
+                assert np.isfinite(_np(leaf).astype(np.float32)).all()
+
+    def test_guard_is_load_bearing(self):
+        """With the non-finite screen disabled the same poison reaches the
+        fleet — the guard, not luck, keeps the faulted runs finite."""
+        spec = ScenarioSpec(**BASE, engine="flat", faults=FaultPlan(
+            corrupt=(CorruptSpec(kind="nan", frac=1.0),),
+            guard_nonfinite=False))
+        st, _ = run_scenario(spec)
+        leaves = [_np(l) for l in jax.tree_util.tree_leaves(st)]
+        assert any(l.dtype != object
+                   and not np.isfinite(l.astype(np.float32)).all()
+                   for l in leaves)
+
+    def test_norm_clip_screens_byzantine_scale(self):
+        """Scaled blow-ups pass the finite screen but trip the norm clip;
+        benign rows survive it."""
+        spec = ScenarioSpec(**BASE, engine="flat", faults=FaultPlan(
+            corrupt=(CorruptSpec(kind="scale", frac=0.5, scale=1e6),),
+            norm_clip=50.0))
+        st, hist = run_scenario(spec)
+        assert all(q > 0 for q in hist["quarantined"])
+        lar, A = spec.hp.lar, spec.n_agents
+        assert all(q < lar * A for q in hist["quarantined"])
+        assert np.isfinite(hist["acc"]).all()
+        for leaf in jax.tree_util.tree_leaves(st):
+            if _np(leaf).dtype != object:
+                assert np.isfinite(_np(leaf).astype(np.float32)).all()
+
+    def test_rsu_outage_blocks_and_recovers(self):
+        """A mid-run RSU outage diverts its cohort mass (blocked, not
+        absorbed) and the run stays finite through recovery re-anchor."""
+        lar = ScenarioSpec(**BASE).hp.lar
+        spec = ScenarioSpec(**BASE, engine="async", faults=FaultPlan(
+            outages=(RsuOutage(rsu=0, start=1, stop=lar + 1),)))
+        _, hist = run_scenario(spec)
+        assert float(np.sum(hist["blocked_mass"])) > 0.0
+        assert np.isfinite(hist["acc"]).all()
+        assert np.all(np.asarray(hist["quarantined"]) == 0)
+
+    def test_streamed_rejects_corruption_plans(self):
+        spec = ScenarioSpec(**BASE, engine="flat", fleet_store="host",
+                            chunk_agents=3, faults=FaultPlan(
+                                corrupt=(CorruptSpec(kind="nan",
+                                                     frac=0.5),)))
+        with pytest.raises(AssertionError, match="corrupt"):
+            spec.validate()
+
+
+# --------------------------------------------------------------------------
+# serve-loop faults: churn / duplicates / quarantine accounting
+# --------------------------------------------------------------------------
+
+class TestServeFaults:
+    def test_fault_accounting_identity(self):
+        """Nothing leaks under faults: every generated admission (incl.
+        injected duplicates) is absorbed, coalesced, dropped, lost to
+        churn, or rejected as stale."""
+        plan = FaultPlan(churn=(ChurnWindow(frac=0.5),),
+                         corrupt=(CorruptSpec(kind="nan", frac=0.3),),
+                         dup_frac=0.25, clock_skew=0.05, seed=3)
+        spec = ScenarioSpec(**BASE, **SERVE, engine="async",
+                            serve_events=96, arrival_rate=2.0, faults=plan)
+        st, _, stats, _ = run_serve_loop(spec.resolve())
+        assert stats.events_duplicated > 0
+        assert stats.events_lost_churn > 0
+        assert stats.quarantined_updates > 0
+        assert stats.events_generated == 96 + stats.events_duplicated
+        assert stats.events_generated == (
+            stats.events_absorbed + stats.events_coalesced
+            + stats.events_dropped + stats.events_lost_churn
+            + stats.events_stale_rejected)
+        assert np.isfinite(np.asarray(st.cloud_flat)).all()
+
+    def test_summary_exports_fault_counters(self):
+        spec = ScenarioSpec(**BASE, **SERVE, engine="async",
+                            serve_events=24, faults=FaultPlan())
+        _, _, stats, _ = run_serve_loop(spec.resolve())
+        s = stats.summary()
+        for k in ("events_lost_churn", "events_duplicated",
+                  "events_stale_rejected", "quarantined_updates",
+                  "blocked_mass"):
+            assert k in s, k
+
+
+# --------------------------------------------------------------------------
+# crash-resume: snapshots, bit-identical continuation, graceful shutdown
+# --------------------------------------------------------------------------
+
+class TestServeResume:
+    def _spec(self, plan=None):
+        A = BASE["n_agents"]
+        return ScenarioSpec(**BASE, **SERVE, engine="async",
+                            serve_events=A * 10,
+                            tick_trigger=f"batch:{A}", faults=plan)
+
+    def test_resume_bit_identical(self, tmp_path):
+        """Resume from a mid-run snapshot == the uninterrupted run, bit
+        for bit — including replayed host-side fault randomness."""
+        plan = FaultPlan(churn=(ChurnWindow(frac=0.25, start=2),),
+                         dup_frac=0.2, clock_skew=0.05, seed=5)
+        spec = self._spec(plan)
+        gen = every_agent_once_trace(BASE["n_agents"], 10)
+        d = tmp_path / "snaps"
+        st1, h1, s1, _ = run_serve_loop(spec.resolve(), gen=gen,
+                                        snapshot_dir=d, snapshot_every=2)
+        steps = sorted(p.name for p in d.glob("step_*"))
+        assert len(steps) >= 3                    # periodic + final
+        mid = 4
+        st2, h2, s2, _ = run_serve_loop(spec.resolve(), gen=gen,
+                                        resume_from=d, resume_step=mid)
+        np.testing.assert_array_equal(np.asarray(st1.cloud_flat),
+                                      np.asarray(st2.cloud_flat))
+        np.testing.assert_array_equal(np.asarray(st1.rsu_flat),
+                                      np.asarray(st2.rsu_flat))
+        np.testing.assert_array_equal(h1["acc"], h2["acc"])
+        assert s1.n_ticks == s2.n_ticks
+        assert s1.events_generated == s2.events_generated
+        assert s1.events_duplicated == s2.events_duplicated
+        assert s1.events_lost_churn == s2.events_lost_churn
+        assert s1.quarantined_updates == s2.quarantined_updates
+
+    def test_interrupt_graceful_and_resumable(self, tmp_path):
+        """A mid-loop exception raises ServeLoopInterrupted with finalized
+        stats and a last-effort snapshot; resuming it completes the run
+        to the uninterrupted cloud master, bit for bit."""
+        spec = self._spec()
+        gen = every_agent_once_trace(BASE["n_agents"], 10)
+        res = spec.resolve()
+        x_t, y_t = jnp.asarray(res.test.x), jnp.asarray(res.test.y)
+        from repro.models import mlp
+        acc = jax.jit(lambda p: mlp.accuracy(p, x_t, y_t))
+
+        st_ref, _, s_ref, _ = run_serve_loop(res, gen=gen, eval_fn=acc)
+
+        calls = {"n": 0}
+
+        def bomb(p):
+            calls["n"] += 1
+            if calls["n"] == 2:
+                raise RuntimeError("simulated crash")
+            return acc(p)
+
+        d = tmp_path / "snaps"
+        with pytest.raises(ServeLoopInterrupted) as ei:
+            run_serve_loop(spec.resolve(), gen=gen, eval_fn=bomb,
+                           snapshot_dir=d, snapshot_every=0)
+        exc = ei.value
+        assert exc.stats is not None and exc.stats.n_ticks > 0
+        assert exc.snapshot_path is not None
+        assert ckpt.latest_step(d) == exc.stats.n_ticks
+
+        st2, _, s2, _ = run_serve_loop(spec.resolve(), gen=gen,
+                                       eval_fn=acc, resume_from=d)
+        np.testing.assert_array_equal(np.asarray(st_ref.cloud_flat),
+                                      np.asarray(st2.cloud_flat))
+        assert s_ref.n_ticks == s2.n_ticks
+
+    def test_validation_errors_pass_through(self):
+        """Input/config mistakes are ValueErrors, not operational
+        interrupts — graceful shutdown must not swallow them."""
+        from repro.core.load_gen import Event, TraceLoadGen
+        spec = self._spec()
+        with pytest.raises(ValueError, match="outside the fleet"):
+            run_serve_loop(spec.resolve(),
+                           gen=TraceLoadGen([Event(0.1, 99, 0)]))
+
+
+# --------------------------------------------------------------------------
+# crash-safe checkpoint store (atomic temp-file + os.replace)
+# --------------------------------------------------------------------------
+
+class TestCkptCrashSafety:
+    TREE = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "s": np.asarray(3, np.int64)}
+
+    def test_kill_mid_write_keeps_prior_step(self, tmp_path, monkeypatch):
+        """Dying before the rename never tears a checkpoint: the prior
+        step stays intact and the torn temp is never promoted."""
+        d = tmp_path / "ck"
+        ckpt.save(d, 1, self.TREE)
+
+        def die(*a, **kw):
+            raise OSError("simulated kill mid-commit")
+
+        monkeypatch.setattr(os, "replace", die)
+        with pytest.raises(OSError, match="simulated kill"):
+            ckpt.save(d, 2, {"w": self.TREE["w"] * 7.0,
+                             "s": np.asarray(4, np.int64)})
+        monkeypatch.undo()
+        assert ckpt.latest_step(d) == 1
+        back = ckpt.restore(d)
+        np.testing.assert_array_equal(back["w"], self.TREE["w"])
+
+    def test_orphan_temp_files_are_invisible(self, tmp_path):
+        """A hard kill can leave a temp behind (no unlink ran) — readers
+        must never see it as a checkpoint."""
+        d = tmp_path / "ck"
+        ckpt.save(d, 3, self.TREE)
+        (d / ".tmp_step_00000009_dead.npz").write_bytes(b"torn garbage")
+        assert ckpt.latest_step(d) == 3
+        np.testing.assert_array_equal(ckpt.restore(d)["w"], self.TREE["w"])
+
+    def test_overwrite_crash_keeps_old_payload(self, tmp_path, monkeypatch):
+        """Re-writing an existing step is atomic too: a crash mid-write
+        (before commit) leaves the OLD payload fully readable."""
+        d = tmp_path / "ck"
+        ckpt.save(d, 5, self.TREE)
+
+        def die(fd):
+            raise OSError("simulated power loss")
+
+        monkeypatch.setattr(os, "fsync", die)
+        with pytest.raises(OSError, match="power loss"):
+            ckpt.save(d, 5, {"w": np.full((2, 3), -1.0, np.float32),
+                             "s": np.asarray(9, np.int64)})
+        monkeypatch.undo()
+        back = ckpt.restore(d, step=5)
+        np.testing.assert_array_equal(back["w"], self.TREE["w"])
+        assert not list(d.glob(".tmp_*"))          # failed save cleaned up
+
+
+# --------------------------------------------------------------------------
+# trace input validation (line-numbered, fail-loud)
+# --------------------------------------------------------------------------
+
+class TestTraceValidation:
+    def _write(self, tmp_path, lines):
+        p = tmp_path / "trace.jsonl"
+        p.write_text("\n".join(lines) + "\n")
+        return p
+
+    def test_unparseable_json_names_the_line(self, tmp_path):
+        p = self._write(tmp_path, ['{"t": 0.1, "agent": 0}', "{not json"])
+        with pytest.raises(ValueError, match=r"bad trace record at .*:2"):
+            read_trace(p)
+
+    def test_missing_key_names_the_line(self, tmp_path):
+        p = self._write(tmp_path, ['{"t": 0.1}'])
+        with pytest.raises(ValueError, match=r"bad trace record at .*:1"):
+            read_trace(p)
+
+    def test_nonfinite_timestamp_rejected(self, tmp_path):
+        p = self._write(tmp_path, ['{"t": 0.1, "agent": 0}',
+                                   '{"t": NaN, "agent": 1}'])
+        with pytest.raises(ValueError,
+                           match=r"non-finite timestamp.*:2"):
+            read_trace(p)
+
+    def test_agent_out_of_fleet_rejected(self, tmp_path):
+        p = self._write(tmp_path, ['{"t": 0.1, "agent": 12}'])
+        with pytest.raises(ValueError, match=r"outside the fleet"):
+            read_trace(p, n_agents=8)
+        assert len(read_trace(p)) == 1            # unbounded without fleet
+
+    def test_negative_agent_always_rejected(self, tmp_path):
+        p = self._write(tmp_path, ['{"t": 0.1, "agent": -1}'])
+        with pytest.raises(ValueError, match=r"outside the fleet"):
+            read_trace(p)
+
+
+# --------------------------------------------------------------------------
+# sweeps: fault schedules as vmapped data, ONE program per grid
+# --------------------------------------------------------------------------
+
+class TestSweepFaults:
+    # distinctive shapes so no other test's program registry entry aliases
+    SWEEP = dict(n_agents=12, n_rsus=3, batch=8, n_train=416, n_test=96,
+                 rounds=2, seed=9)
+
+    @pytest.fixture(scope="class")
+    def params(self):
+        from repro.configs.mnist_mlp import CONFIG
+        from repro.models import mlp
+        return mlp.init_params(CONFIG, jax.random.key(0))
+
+    def _grid(self, engine):
+        plans = [FaultPlan(churn=(ChurnWindow(frac=0.5, seed=s),))
+                 for s in range(2)]
+        plans.append(FaultPlan(
+            outages=(RsuOutage(rsu=0, start=2, stop=6),),
+            corrupt=(CorruptSpec(kind="nan", frac=0.3),)))
+        return [ScenarioSpec(engine=engine, faults=p, **self.SWEEP)
+                for p in plans]
+
+    @pytest.mark.parametrize("engine", ["flat", "async"])
+    def test_fault_grid_traces_once(self, engine, params):
+        before = program_cache.trace_count("sweep_round")
+        hists = run_scenarios(self._grid(engine), params)
+        assert program_cache.trace_count("sweep_round") - before == 1
+        for h in hists:
+            assert np.isfinite(h["acc"]).all()
+            assert "quarantined" in h
+        # the NaN-corrupting cell quarantines, the churn-only cells don't
+        assert np.sum(hists[2]["quarantined"]) > 0
+        assert np.sum(hists[0]["quarantined"]) == 0
+
+    def test_zero_fault_sweep_anchor(self, params):
+        clean = ScenarioSpec(engine="flat", **self.SWEEP)
+        empty = clean.replace(faults=FaultPlan())
+        h_clean, h_empty = run_scenarios([clean, empty], params)
+        np.testing.assert_array_equal(h_clean["acc"], h_empty["acc"])
+        assert np.all(h_empty["quarantined"] == 0)
+
+    @pytest.mark.parametrize("engine", ["flat", "async"])
+    def test_sweep_matches_sequential(self, engine, params):
+        spec = self._grid(engine)[2]
+        h_sweep = run_scenarios([spec] * 2, params)[1]  # a real (S>1) sweep
+        _, h_seq = run_scenario(spec, params)
+        np.testing.assert_allclose(h_sweep["acc"], h_seq["acc"],
+                                   rtol=2e-5, atol=2e-6)
+        np.testing.assert_array_equal(h_sweep["quarantined"],
+                                      h_seq["quarantined"])

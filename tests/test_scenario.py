@@ -7,6 +7,7 @@ import dataclasses
 import numpy as np
 import pytest
 
+from repro.core.faults import ChurnWindow, FaultPlan
 from repro.core.h2fed import H2FedParams
 from repro.core.heterogeneity import HeterogeneityModel
 from repro.core.scenario import ScenarioSpec
@@ -34,6 +35,7 @@ PERTURB = {
     "overload_policy": "backpressure", "serve_trace": "trace.jsonl",
     "rounds": 5, "eval_every": 2, "seed": 1, "sim_seed": 1,
     "program_cache": False,
+    "faults": FaultPlan(churn=(ChurnWindow(frac=0.5),)),
 }
 
 
