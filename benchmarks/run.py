@@ -17,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV rows for:
   chaos   — deterministic fault injection: 90%-disconnect + RSU outage +
             NaN convergence vs clean, quarantine counters, serve-loop
             event-conservation identity (DESIGN.md §11)
+  nshard  — N-sharded fleet buffers: per-device fleet bytes + cross-pod
+            collective bytes at model_shards 1 vs 2, and the ~1e7-param
+            two-axis streamed round (DESIGN.md §12)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline]
                                                 [--json results/bench/bench.json]
@@ -104,6 +107,11 @@ def bench_chaos():
     return chaos.run()
 
 
+def bench_nshard():
+    from benchmarks import nshard_round
+    return nshard_round.run()
+
+
 SUITES = {
     "fig2": bench_fig2,
     "fig3": bench_fig3,
@@ -118,6 +126,7 @@ SUITES = {
     "streaming": bench_streaming,
     "serving": bench_serving,
     "chaos": bench_chaos,
+    "nshard": bench_nshard,
 }
 
 
@@ -157,7 +166,15 @@ def write_summary(path: Path, bench_dir: Path, since: float) -> None:
             summary["flat_fused_vs_unfused_latency"] = \
                 rec.get("flat_fused_vs_unfused")
         elif name == "sharded_round":
-            merge(rec, f"sharded_round/d{rec.get('n_devices')}")
+            d = f"d{rec.get('n_devices')}"
+            merge(rec, f"sharded_round/{d}")
+            # PR-10: shard_map cost surfaced per device count — the
+            # sharded/flat latency ratio plus the measured
+            # compute-vs-collective split of the sharded round
+            summary.setdefault("sharded_vs_flat_latency", {})[d] = \
+                rec.get("sharded_vs_flat")
+            sh = rec.get("time_split", {}).get("sharded", {})
+            summary.setdefault("sharded_time_split", {})[d] = sh
         elif name == "sweep_round":
             merge(rec, "sweep_round")
             for k in ("sweep_vs_sequential_wall",
@@ -202,6 +219,18 @@ def write_summary(path: Path, bench_dir: Path, since: float) -> None:
                       "disconnect_frac", "fault_accounting_identity"):
                 summary[k] = rec.get(k)
             summary["serving_chaos"] = rec.get("serving_chaos")
+        elif name == "nshard_round":
+            merge(rec, "nshard_round")
+            # PR-10: the N-sharding headline — per-device fleet-state
+            # shrink and the cross-pod (DCI) byte split, CI-asserted
+            summary["nshard_fleet_bytes_ratio"] = \
+                rec.get("fleet_bytes_ratio")
+            summary["nshard_fleet_bytes_per_device"] = {
+                m: rec.get(m, {}).get("fleet_bytes_per_device")
+                for m in ("replicated", "nsharded")}
+            summary["nshard_crosspod_bytes"] = rec.get("crosspod_bytes")
+            summary["nshard_crosspod_ratio"] = rec.get("crosspod_ratio")
+            summary["nshard_big_n"] = rec.get("big_n")
     path.write_text(json.dumps(summary, indent=1))
     print(f"[summary] {path}", file=sys.stderr)
 

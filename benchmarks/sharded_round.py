@@ -111,6 +111,32 @@ def run_cell(args) -> dict:
             sh_round, init_flat_state(cfg, spec, params, key()),
             args.rounds)
 
+    # compute-vs-collective split: the compute leg is the sharded round's
+    # PER-DEVICE workload (A/n_dev agents, same R and N) run through the
+    # single-device flat engine — no collectives, same training scan and
+    # (R, N) blend.  What the sharded round spends beyond that is its
+    # collective + shard_map overhead.  Single-device engines are all
+    # compute by construction.
+    import dataclasses
+    time_split = {e: {"compute_s": timings[e], "collective_s": 0.0}
+                  for e in ("tree", "flat")}
+    compute_s = timings["sharded"]
+    if n_dev > 1:
+        a_loc = max(args.agents // n_dev, 1)
+        cfg_loc = dataclasses.replace(cfg, n_agents=a_loc)
+        fed_loc = dataclasses.replace(
+            fed, x=fed.x[:a_loc], y=fed.y[:a_loc],
+            n_per_agent=fed.n_per_agent[:a_loc],
+            rsu_assign=fed.rsu_assign[:a_loc])
+        loc_round = make_flat_global_round(cfg_loc, hp, het, fed_loc, spec)
+        compute_s = _time_rounds(
+            loc_round, init_flat_state(cfg_loc, spec, params, key()),
+            args.rounds)
+    coll_s = max(timings["sharded"] - compute_s, 0.0)
+    time_split["sharded"] = {
+        "compute_s": compute_s, "collective_s": coll_s,
+        "collective_frac": coll_s / max(timings["sharded"], 1e-12)}
+
     return {
         "bench": "sharded_round",
         "n_devices": n_dev,
@@ -120,6 +146,7 @@ def run_cell(args) -> dict:
         "lar": args.lar,
         "n_params": spec.n,
         "round_s": timings,
+        "time_split": time_split,
         "flat_vs_tree": timings["tree"] / max(timings["flat"], 1e-12),
         "sharded_vs_flat": timings["flat"] / max(timings["sharded"], 1e-12),
     }
@@ -134,6 +161,10 @@ def _csv_rows(rec: dict) -> List[str]:
     rows.append(csv_row(f"sharded_round/flat_vs_tree/d{d}",
                         rec["round_s"]["flat"] * 1e6,
                         f"speedup={rec['flat_vs_tree']:.2f}x"))
+    sh = rec["time_split"]["sharded"]
+    rows.append(csv_row(f"sharded_round/collective_s/d{d}",
+                        sh["collective_s"] * 1e6,
+                        f"frac={sh.get('collective_frac', 0.0):.2f}"))
     return rows
 
 

@@ -90,16 +90,26 @@ class DeviceFleetStore:
     def nbytes(self) -> int:
         return int(self._buf.size * self._buf.dtype.itemsize)
 
-    def gather(self, lo: int, hi: int):
-        return jax.lax.dynamic_slice_in_dim(self._buf, lo, hi - lo, axis=0)
+    def gather(self, lo: int, hi: int, col_lo: int = 0,
+               col_hi: Optional[int] = None):
+        """Rows [lo, hi); optionally only columns [col_lo, col_hi) — the
+        two-axis streamed engine's N-tile reads (DESIGN.md §12)."""
+        rows = jax.lax.dynamic_slice_in_dim(self._buf, lo, hi - lo, axis=0)
+        if col_lo or (col_hi is not None and col_hi != self.n):
+            hi_c = self.n if col_hi is None else col_hi
+            rows = jax.lax.dynamic_slice_in_dim(
+                rows, col_lo, hi_c - col_lo, axis=1)
+        return rows
 
-    def scatter(self, lo: int, rows: jax.Array, where=None) -> None:
+    def scatter(self, lo: int, rows: jax.Array, where=None,
+                col_lo: int = 0) -> None:
         rows = rows.astype(self._buf.dtype)
         if where is not None:
-            cur = self.gather(lo, lo + rows.shape[0])
+            cur = self.gather(lo, lo + rows.shape[0],
+                              col_lo, col_lo + rows.shape[1])
             rows = jnp.where(jnp.asarray(where)[:, None], rows, cur)
-        self._buf = jax.lax.dynamic_update_slice_in_dim(
-            self._buf, rows, lo, axis=0)
+        self._buf = jax.lax.dynamic_update_slice(
+            self._buf, rows, (lo, col_lo))
 
     def snapshot(self) -> jax.Array:
         return self._buf
@@ -146,12 +156,18 @@ class HostFleetStore:
     def nbytes(self) -> int:
         return int(self._buf.nbytes)
 
-    def gather(self, lo: int, hi: int) -> np.ndarray:
-        return self._buf[lo:hi]
+    def gather(self, lo: int, hi: int, col_lo: int = 0,
+               col_hi: Optional[int] = None) -> np.ndarray:
+        """Rows [lo, hi) as a host view; the optional column range keeps
+        two-axis streamed h2d transfers tile-sized (DESIGN.md §12)."""
+        if col_lo == 0 and col_hi is None:
+            return self._buf[lo:hi]
+        return self._buf[lo:hi, col_lo:col_hi]
 
-    def scatter(self, lo: int, rows, where=None) -> None:
+    def scatter(self, lo: int, rows, where=None, col_lo: int = 0) -> None:
         rows = np.asarray(rows)          # blocks until the rows are ready
-        dst = self._buf[lo:lo + rows.shape[0]]
+        dst = self._buf[lo:lo + rows.shape[0],
+                        col_lo:col_lo + rows.shape[1]]
         if where is None:
             np.copyto(dst, rows.astype(dst.dtype))
         else:

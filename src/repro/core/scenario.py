@@ -88,11 +88,25 @@ class ScenarioSpec:
     fleet_dtype: str = "float32"      # fleet-buffer storage (DESIGN.md §3)
     fused: bool = True                # one-pass aggregate-and-blend rounds
     rsu_sharded: bool = False         # sharded engine mode (DESIGN.md §4)
+    # parameter-axis sharding (DESIGN.md §12, engine="sharded"): > 1 lays
+    # a trailing `model` mesh axis and shards the persistent (R, N)/(N,)
+    # fleet state along N — ZeRO-style per-device HBM + cross-pod byte win
+    model_shards: int = 1
     # cohort streaming (fedsim/streaming, DESIGN.md §8): where the (A, N)
     # fleet rows live, and the streamed chunk size (0 = resident when
     # fleet_store="device", auto chunk otherwise)
     fleet_store: str = "device"       # device | host
     chunk_agents: int = 0
+    # two-axis streaming (DESIGN.md §12, fleet_store="host"): > 0 tiles
+    # the parameter axis in ~chunk_params-column lane-aligned N-tiles so
+    # the device working set is bounded by (A-chunk × N) for training and
+    # (R × N-tile) for the aggregation buffers — big-N fleets stream
+    # through the same donated chunk_step
+    chunk_params: int = 0
+    # model-size knob: non-empty overrides the paper MLP's hidden widths
+    # (() = configs.mnist_mlp.CONFIG, hidden (40,)); a wide layer pushes N
+    # to perception scale (~1e7) through the same engines
+    hidden_dims: Tuple[int, ...] = ()
     # semi-async knobs (engine="async"; fedsim.async_engine.AsyncConfig)
     staleness_decay: Union[float, Tuple[float, ...]] = 0.5
     schedule: str = "exp"
@@ -143,6 +157,20 @@ class ScenarioSpec:
                 (f"cohort streaming (fleet_store={self.fleet_store!r}, "
                  f"chunk_agents={self.chunk_agents}) requires engine "
                  f"'flat'|'async', got {self.engine!r}")
+        assert self.model_shards >= 1
+        if self.model_shards > 1:
+            assert self.engine == "sharded", \
+                (f"model_shards={self.model_shards} is the N-sharded fleet "
+                 f"mode — engine 'sharded', got {self.engine!r}")
+            assert self.fleet_store == "device" and not self.chunk_agents, \
+                "N-sharding needs the device-resident fleet"
+        assert self.chunk_params >= 0
+        if self.chunk_params:
+            assert self.engine == "flat" and self.fleet_store == "host", \
+                (f"two-axis streaming (chunk_params={self.chunk_params}) "
+                 f"requires engine 'flat' with fleet_store 'host', got "
+                 f"engine {self.engine!r} / store {self.fleet_store!r}")
+        assert all(int(h) > 0 for h in self.hidden_dims)
         assert self.schedule in ("exp", "poly")
         assert self.cloud_every >= 0
         assert self.serve_events >= 0 and self.queue_capacity >= 0
@@ -263,7 +291,8 @@ class ScenarioSpec:
             d["het"] = HeterogeneityModel(**d["het"])
         if isinstance(d.get("faults"), dict):
             d["faults"] = FaultPlan.from_dict(d["faults"])
-        for k in ("excluded_labels", "staleness_decay", "buffer_keep"):
+        for k in ("excluded_labels", "staleness_decay", "buffer_keep",
+                  "hidden_dims"):
             if isinstance(d.get(k), list):
                 d[k] = tuple(d[k])
         unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
@@ -315,7 +344,9 @@ class ResolvedScenario:
                 tuple(self.fed.x.shape),
                 tuple(self.test.x.shape) if self.test is not None else None,
                 s.engine, s.fleet_dtype, s.fused, s.rsu_sharded,
-                s.fleet_store, s.chunk_agents,
+                s.model_shards,
+                s.fleet_store, s.chunk_agents, s.chunk_params,
+                s.hidden_dims,
                 s.hp.n_layers,
                 s.het.max_delay,
                 s.staleness_decay, s.schedule, s.buffer_keep,

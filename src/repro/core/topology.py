@@ -78,20 +78,42 @@ def cohort_sizes(assign: np.ndarray, n_rsus: int) -> np.ndarray:
 # --------------------------------------------------------------------------
 
 def make_fleet_mesh(n_devices: Optional[int] = None, *,
-                    n_pods: Optional[int] = None):
+                    n_pods: Optional[int] = None,
+                    n_model_shards: Optional[int] = None):
     """Lay the fleet out over the available devices.
 
     Default: >= 4 devices get a ('pod', 'data') mesh (2 x n/2) exercising
     both agent axes of the production topology; fewer get a 1-D ('data',)
     mesh.  ``n_pods`` pins the pod-axis size explicitly (RSU-sharded runs
-    sweep it; must divide the device count).  The `model` axis is
-    intentionally absent — fleet models are vmapped per agent, not
-    tensor-parallel (launch/h2fed_round handles that regime).
+    sweep it; must divide the device count).
+
+    ``n_model_shards`` > 1 appends a trailing ``model`` axis (DESIGN.md
+    §12): the PARAMETER axis of the persistent fleet state — the (R, N)
+    staleness buffers and the fp32 cloud master — is sharded over it
+    (ZeRO-style), while per-agent training stays full-N (fleet models are
+    vmapped per agent, not tensor-parallel; launch/h2fed_round handles
+    that regime).  The agent axes keep their layout over the remaining
+    ``n / n_model_shards`` devices.
     """
     import jax
     from repro.launch.mesh import make_mesh
 
     n = n_devices or len(jax.devices())
+    m = int(n_model_shards or 1)
+    if m > 1:
+        if m < 1 or n % m:
+            raise ValueError(
+                f"n_model_shards={m} must divide the device count {n}")
+        base = n // m
+        if n_pods is not None:
+            if n_pods < 1 or base % n_pods:
+                raise ValueError(
+                    f"n_pods={n_pods} must divide the device count {base}")
+            return make_mesh((n_pods, base // n_pods, m),
+                             ("pod", "data", "model"))
+        if base >= 4 and base % 2 == 0:
+            return make_mesh((2, base // 2, m), ("pod", "data", "model"))
+        return make_mesh((base, m), ("data", "model"))
     if n_pods is not None:
         if n_pods < 1 or n % n_pods:
             raise ValueError(
@@ -138,6 +160,12 @@ class HierarchyTopology:
             "pod" if "pod" in self.agent_axes else None
         self.data_axes: Tuple[str, ...] = tuple(
             a for a in self.agent_axes if a != "pod")
+        # the parameter axis (DESIGN.md §12): N-sharding rides on a
+        # trailing `model` mesh axis; AGENT_AXES filtering above already
+        # keeps it out of the agent shard count
+        self.model_axis: Optional[str] = \
+            "model" if "model" in mesh.axis_names else None
+        self.model_shards = int(shape.get("model", 1))
         self.n_pods = int(shape.get("pod", 1))
         self.n_shards = int(prod(shape[a] for a in self.agent_axes))
         self.data_shards = self.n_shards // max(self.n_pods, 1)
@@ -251,6 +279,41 @@ class HierarchyTopology:
         agent axis sits after ``n_leading`` replicated axes."""
         return P(*([None] * n_leading), self.shard_axes)
 
+    # -- N-sharding surface (DESIGN.md §12) --------------------------------
+    #
+    # The existing agent/rsu/cloud specs deliberately leave any `model`
+    # mesh axis unmentioned (replicated) — launch/h2fed_round keeps it
+    # auto for tensor parallelism.  The nshard_* specs below are what the
+    # N-sharded fleet engine (fedsim/sharded._make_nsharded_round) uses:
+    # the persistent (R, N) / (N,) state is sharded along N over `model`,
+    # while the (A, N) training working set stays full-N per agent shard.
+
+    def model_pad(self, n: int) -> int:
+        """Pad the parameter axis so it splits into lane-aligned
+        (multiple-of-128) model shards; identity at model_shards == 1."""
+        if self.model_shards <= 1:
+            return int(n)
+        from repro.kernels.masked_hier_agg import LANE
+        q = self.model_shards * LANE
+        return -(-int(n) // q) * q
+
+    @property
+    def nshard_cloud_spec(self) -> P:
+        """(N,) cloud master: sharded along N over the model axis."""
+        if self.model_axis is None:
+            return self.cloud_spec
+        return P(self.model_axis)
+
+    @property
+    def nshard_rsu_spec(self) -> P:
+        """(R, N) staleness buffers: N sharded over the model axis, R
+        pod-sharded in rsu_sharded mode."""
+        if self.model_axis is None:
+            return self.rsu_spec
+        if self.rsu_sharded and self.pod_axis is not None:
+            return P(self.pod_axis, self.model_axis)
+        return P(None, self.model_axis)
+
     def cloud_psum_mean(self, rsu_mass, rsu_flat, fallback, *,
                         reduce_dtype=None):
         """Mass-weighted cloud mean of this shard's RSU block — in
@@ -290,9 +353,11 @@ class HierarchyTopology:
 
     def describe(self) -> str:
         mode = "rsu_sharded" if self.rsu_sharded else "replicated"
+        nshard = (f", model_shards={self.model_shards}"
+                  if self.model_shards > 1 else "")
         return (f"HierarchyTopology(A={self.n_agents}, R={self.n_rsus}, "
                 f"pods={self.n_pods}, shards={self.n_shards}, "
-                f"R_local={self.rsu_per_pod}, mode={mode})")
+                f"R_local={self.rsu_per_pod}, mode={mode}{nshard})")
 
     __repr__ = describe
 

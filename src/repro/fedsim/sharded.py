@@ -126,6 +126,8 @@ def make_sharded_global_round(cfg: SimConfig, hp: H2FedParams,
     at the boundary.
     """
     topo = resolve_topology(cfg, fed, mesh, rsu_sharded=rsu_sharded)
+    if topo.model_shards > 1:
+        return _make_nsharded_round(cfg, hp, het, fed, spec, topo, loss_fn)
     if topo.rsu_sharded:
         return _make_rsu_sharded_round(cfg, hp, het, fed, spec, topo,
                                        loss_fn)
@@ -290,6 +292,139 @@ def _make_rsu_sharded_round(cfg: SimConfig, hp: H2FedParams,
     return jax.jit(global_round, donate_argnums=(0,))
 
 
+def _make_nsharded_round(cfg: SimConfig, hp: H2FedParams,
+                         het: HeterogeneityModel, fed: FederatedData,
+                         spec: flatten.FlatSpec, topo: HierarchyTopology,
+                         loss_fn: Callable):
+    """N-sharded mode (DESIGN.md §12): the persistent (R, N) staleness
+    buffers and the fp32 cloud master live 1/model_shards per device
+    (ZeRO-style parameter sharding).  Each round opens with the ONE wide
+    collective — a storage-dtype all-gather of the blended (N/S,) cloud
+    slices into the full-N reference — then training and the LAR scan run
+    full-N exactly like the replicated engine (H²-Fed's row-weighted
+    aggregation is N-separable, so no extra RSU-layer collectives
+    appear), and the scan's (R, N) result is sliced back to this device's
+    N-shard before the cloud blend: psum-then-slice is a reduce-scatter
+    of the round's updates along N in byte-and-state terms — only the
+    slice persists.  Composes with rsu_sharded: the cloud layer's
+    cross-pod psum then moves (N/S,) partials instead of (N,).
+
+    The parameter axis is padded to ``topo.model_pad(spec.n)`` (lane-
+    aligned equal slices); zero tails are invariant through training
+    (zero grads, zero proximal pull) and ``spec.unravel`` ignores them.
+    """
+    x_all, y_all, n_per_agent, rsu_assign, spe, n_steps = \
+        _fed_arrays(cfg, hp, fed)
+    storage = spec.storage_dtype
+    model_ax = topo.model_axis
+    N_pad = topo.model_pad(spec.n)
+    Nt = N_pad // topo.model_shards
+    if topo.rsu_sharded:
+        perm = jnp.asarray(topo.agent_perm)
+        x_all = jnp.take(x_all, perm, axis=0)
+        y_all = jnp.take(y_all, perm, axis=0)
+        n_per_agent = jnp.take(n_per_agent, perm, axis=0)
+        assign_arr = jnp.asarray(topo.local_assign)
+        R_loc = topo.rsu_per_pod
+        agg_ax = topo.data_shard_axes         # within-pod psum only
+    else:
+        perm = None
+        assign_arr = rsu_assign
+        R_loc = cfg.n_rsus
+        agg_ax = topo.shard_axes
+    psum_num = None if agg_ax is None else _make_psum_num(storage, agg_ax)
+    cloud_reduce = None if storage == jnp.dtype(jnp.float32) else storage
+
+    train_agents = _make_train_agents(cfg, hp, spec, n_steps, loss_fn)
+
+    def round_fn(cloud_loc, agent_flat, x, y, n_data, assign, masks, steps):
+        """Shard-local view: ``cloud_loc`` is this device's (N/S,) slice
+        of the fp32 master; the (A_local, N) training working set and the
+        in-scan (R, N) blend stay full-(padded-)N."""
+        ref = jax.lax.all_gather(cloud_loc.astype(storage), model_ax,
+                                 tiled=True)              # (N_pad,) storage
+        ref32 = ref.astype(jnp.float32)
+        rsu_full = jnp.broadcast_to(ref, (R_loc, N_pad))  # Alg. 2 l.2
+
+        def local_round(carry, inp):
+            rsu_full, agent_flat = carry
+            mask_l, act_l = inp
+            w_start = jnp.take(rsu_full, assign, axis=0)  # (A_local, N_pad)
+            agent_flat = train_agents(x, y, w_start, w_start,
+                                      ref32, act_l).astype(storage)
+            num, mass = ops.block_local_agg(
+                agent_flat, n_data * mask_l, assign, R_loc)
+            if psum_num is not None:
+                num = psum_num(num)
+                mass = jax.lax.psum(mass, agg_ax)
+            rsu_full = normalize_blend(num, mass, rsu_full)
+            return (rsu_full, agent_flat), mass
+
+        (rsu_full, agent_flat), masses = jax.lax.scan(
+            local_round, (rsu_full, agent_flat), (masks, steps))
+
+        midx = jax.lax.axis_index(model_ax)
+        rsu_loc = jax.lax.dynamic_slice_in_dim(
+            rsu_full, midx * Nt, Nt, axis=1)              # (R_loc, Nt)
+
+        total = jnp.sum(masses, axis=0)                   # (R_loc,)
+        if topo.rsu_sharded:
+            # Alg. 3 l.6: the cross-pod psum moves this device's (Nt,)
+            # partial — 1/model_shards of the replicated DCI bytes
+            cloud_loc = topo.cloud_psum_mean(total, rsu_loc, cloud_loc,
+                                             reduce_dtype=cloud_reduce)
+        else:
+            # Alg. 3 l.6 on the slice: collective-free replicated math
+            num_c = total @ rsu_loc.astype(jnp.float32)   # (Nt,)
+            mass_c = jnp.sum(total)
+            new_cloud = num_c / jnp.where(mass_c > 0, mass_c, 1.0)
+            cloud_loc = jnp.where(mass_c > 0, new_cloud, cloud_loc)
+        return cloud_loc, rsu_loc, agent_flat
+
+    smapped = shard_map(
+        round_fn, topo.mesh,
+        in_specs=(topo.nshard_cloud_spec, topo.agent_spec, topo.agent_spec,
+                  topo.agent_spec, topo.agent_spec, topo.agent_spec,
+                  topo.stacked_spec(), topo.stacked_spec()),
+        out_specs=(topo.nshard_cloud_spec, topo.nshard_rsu_spec,
+                   topo.agent_spec),
+        axis_names=set(topo.agent_axes) | {model_ax})
+
+    draw = _make_round_draws_scan(cfg, hp, het, spe)
+
+    def global_round(state: FlatSimState) -> FlatSimState:
+        rng, k_rounds = jax.random.split(state.rng)
+        keys = round_keys(k_rounds, hp.lar)
+        # draws in the ORIGINAL agent order (the flat-engine key
+        # discipline), permuted onto the pod-block layout if RSU-sharded
+        conn, (masks, steps) = jax.lax.scan(draw, state.conn, keys)
+        if perm is not None:
+            masks = jnp.take(masks, perm, axis=1)
+            steps = jnp.take(steps, perm, axis=1)
+        cloud_flat, rsu_flat, agent_flat = smapped(
+            state.cloud_flat, state.agent_flat, x_all, y_all,
+            n_per_agent, assign_arr, masks, steps)
+        return FlatSimState(agent_flat=agent_flat, rsu_flat=rsu_flat,
+                            cloud_flat=cloud_flat, conn=conn, rng=rng)
+
+    return jax.jit(global_round, donate_argnums=(0,))
+
+
+def pad_model_axis(state: FlatSimState, topo: HierarchyTopology,
+                   n: int) -> FlatSimState:
+    """Zero-pad the parameter axis of a fresh FlatSimState to
+    ``topo.model_pad(n)`` (no-op at model_shards == 1); the first ``n``
+    columns carry the model, tails stay zero through every round."""
+    n_pad = topo.model_pad(n)
+    if n_pad == n:
+        return state
+    pad = n_pad - n
+    return state._replace(
+        agent_flat=jnp.pad(state.agent_flat, ((0, 0), (0, pad))),
+        rsu_flat=jnp.pad(state.rsu_flat, ((0, 0), (0, pad))),
+        cloud_flat=jnp.pad(state.cloud_flat, ((0, pad),)))
+
+
 def run_sharded_simulation(cfg: SimConfig, hp: H2FedParams,
                            het: HeterogeneityModel, fed: FederatedData,
                            init_params: PyTree, n_rounds: int, *,
@@ -332,11 +467,13 @@ def _run_sharded(res, init_params: PyTree, *,
     x_test = res.test.x if res.test is not None else None
     y_test = res.test.y if res.test is not None else None
     hp.validate(), het.validate()
-    mesh = mesh if mesh is not None else make_fleet_mesh()
+    if mesh is None:
+        mesh = make_fleet_mesh(n_model_shards=s.model_shards)
     topo = resolve_topology(cfg, fed, mesh, rsu_sharded=rsu_sharded)
     spec = flatten.spec_of(
         init_params, storage_dtype=flatten.resolve_storage_dtype(fleet_dtype))
     state = init_flat_state(cfg, spec, init_params, jax.random.key(cfg.seed))
+    state = pad_model_axis(state, topo, spec.n)
     round_fn = make_sharded_global_round(cfg, hp, het, fed, spec, topo,
                                          loss_fn)
     eval_fn = None

@@ -115,6 +115,38 @@ def make_chunk_plan(n_agents: int, chunk_agents: int = 0) -> ChunkPlan:
                      pad=n_chunks * chunk - n_agents)
 
 
+class NTilePlan(NamedTuple):
+    """Static tiling of the PARAMETER axis (DESIGN.md §12): ``n_tiles``
+    lane-aligned tiles of ``tile`` columns; the buffers are zero-padded by
+    ``pad`` trailing columns so every tile shares one compiled program
+    (zero tails are algebra-neutral, exactly like the agent-axis pad)."""
+    tile: int
+    n_tiles: int
+    n: int
+    pad: int
+
+    @property
+    def n_padded(self) -> int:
+        return self.n_tiles * self.tile
+
+    def bounds(self, t: int) -> Tuple[int, int]:
+        """(col_lo, col_hi) of tile ``t`` on the padded grid."""
+        lo = t * self.tile
+        return lo, lo + self.tile
+
+
+def make_ntile_plan(n: int, chunk_params: int = 0) -> NTilePlan:
+    """Tile N into ~``chunk_params``-column lane-aligned tiles
+    (``chunk_params=0`` = one tile: the agent-axis-only streamed shape)."""
+    from repro.kernels.masked_hier_agg import LANE
+    tile = chunk_params if chunk_params > 0 else n
+    tile = max(LANE, min(tile, n))
+    tile = -(-tile // LANE) * LANE
+    n_tiles = max(-(-n // tile), 1)
+    return NTilePlan(tile=tile, n_tiles=n_tiles, n=n,
+                     pad=n_tiles * tile - n)
+
+
 def _data_chunks(fed: FederatedData, plan: ChunkPlan):
     """Host-side per-chunk (x, y, rsu_assign) tuples — views into the
     FederatedData arrays (zero-copy; broadcast fleets stay virtual) except
@@ -209,6 +241,33 @@ def _fault_weight_fold(fault_r, rsu_assign_np, pad: int):
     return jnp.asarray(fold, jnp.float32)
 
 
+def _make_flat_draws_fn(cfg: SimConfig, hp: H2FedParams,
+                        het: HeterogeneityModel, plan: ChunkPlan,
+                        n_per_agent, spe: int):
+    """One global round's stochastic realization, padded to the chunk
+    grid: (conn', rng', weights (LAR, A_pad), steps (LAR, A_pad)) — the
+    flat-engine key discipline shared by the one- and two-axis streamed
+    rounds (they must draw identically to be equivalent)."""
+    A = cfg.n_agents
+
+    @jax.jit
+    def draws_fn(conn, rng):
+        rng, k_rounds = jax.random.split(rng)
+        keys = round_keys(k_rounds, hp.lar)
+
+        def draw(conn, key):
+            conn, mask, act = round_draws(key, conn, het, hp, A, spe)
+            return conn, (n_per_agent * mask.astype(jnp.float32), act)
+
+        conn, (weights, steps) = jax.lax.scan(draw, conn, keys)
+        if plan.pad:
+            weights = jnp.pad(weights, ((0, 0), (0, plan.pad)))
+            steps = jnp.pad(steps, ((0, 0), (0, plan.pad)))
+        return conn, rng, weights, steps
+
+    return draws_fn
+
+
 def make_streamed_flat_round(cfg: SimConfig, hp: H2FedParams,
                              het: HeterogeneityModel, fed: FederatedData,
                              spec: flatten.FlatSpec,
@@ -245,22 +304,7 @@ def make_streamed_flat_round(cfg: SimConfig, hp: H2FedParams,
             loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
         in_axes=(0, 0, 0, 0, None, 0))
 
-    @jax.jit
-    def draws_fn(conn, rng):
-        """One global round's stochastic realization, padded to the chunk
-        grid: (conn', rng', weights (LAR, A_pad), steps (LAR, A_pad))."""
-        rng, k_rounds = jax.random.split(rng)
-        keys = round_keys(k_rounds, hp.lar)
-
-        def draw(conn, key):
-            conn, mask, act = round_draws(key, conn, het, hp, A, spe)
-            return conn, (n_per_agent * mask.astype(jnp.float32), act)
-
-        conn, (weights, steps) = jax.lax.scan(draw, conn, keys)
-        if plan.pad:
-            weights = jnp.pad(weights, ((0, 0), (0, plan.pad)))
-            steps = jnp.pad(steps, ((0, 0), (0, plan.pad)))
-        return conn, rng, weights, steps
+    draws_fn = _make_flat_draws_fn(cfg, hp, het, plan, n_per_agent, spe)
 
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def chunk_step(num_acc, mass_acc, rsu_flat, cloud_flat, x_c, y_c,
@@ -628,6 +672,202 @@ def _flush_async_wb(store, pending_store, lo, rows, free_h, enq_h) -> None:
 
 
 # --------------------------------------------------------------------------
+# two-axis (agent × parameter) streamed round (DESIGN.md §12)
+# --------------------------------------------------------------------------
+
+def init_twoaxis_state(cfg: SimConfig, spec: flatten.FlatSpec,
+                       init_params: PyTree, key,
+                       tiles: NTilePlan) -> StreamSimState:
+    """Two-axis stream state: EVERY persistent N-wide buffer is
+    host-resident — agent rows in a ``HostFleetStore``, the (R, N) RSU
+    buffer and the fp32 cloud master as numpy arrays, all padded to the
+    N-tile grid.  The device only ever holds chunk/tile-shaped slices."""
+    from repro.core.fleet_store import np_storage_dtype
+    vec = np.asarray(spec.ravel(init_params), np.float32)
+    if tiles.pad:
+        vec = np.pad(vec, (0, tiles.pad))
+    rsu_host = np.empty((cfg.n_rsus, tiles.n_padded),
+                        np_storage_dtype(spec.storage_dtype))
+    rsu_host[:] = vec.astype(rsu_host.dtype)
+    return StreamSimState(
+        store=HostFleetStore.broadcast(vec, cfg.n_agents,
+                                       spec.storage_dtype),
+        rsu_flat=rsu_host,
+        cloud_flat=vec.copy(),
+        conn=init_conn_state(cfg.n_agents),
+        rng=key)
+
+
+def make_streamed_twoaxis_round(cfg: SimConfig, hp: H2FedParams,
+                                het: HeterogeneityModel, fed: FederatedData,
+                                spec: flatten.FlatSpec,
+                                loss_fn: Callable = mlp.loss_fn, *,
+                                chunk_agents: int = 0,
+                                chunk_params: int = 0, faults=None):
+    """Build the two-axis streamed synchronous round:
+    StreamSimState -> StreamSimState (host rsu/cloud buffers, see
+    ``init_twoaxis_state``).
+
+    The agent axis streams exactly like ``make_streamed_flat_round``
+    (same draws, same chunk grid, same defer-by-one writeback); the
+    PARAMETER axis is additionally tiled so no (R, N)-wide buffer ever
+    materializes on device:
+
+      * training is necessarily full-N per agent chunk (the gradient
+        couples every parameter), so the per-chunk device working set is
+        (chunk, N) rows h2d'd from the host RSU buffer;
+      * aggregation is per-COLUMN independent, so the chunk's partial
+        numerator is computed tile-by-tile — ``ops.chunk_agg`` on a
+        (chunk, tile) slice — and d2h-accumulated into a host (R, N)
+        numerator: the device aggregation working set is (R, tile);
+      * the local-round ``normalize_blend`` close and the round-end
+        ``cloud_blend`` run per tile on device ((R, tile) up, blended
+        tile down, defer-by-one reads overlapping the next dispatch).
+
+    Column independence of every aggregation stage makes this equivalent
+    to the one-axis streamed round (itself pinned to the resident
+    engine); the first ``N`` columns of the padded grid carry the model.
+    Faults fold exactly like the one-axis round (churn/outage weights +
+    the non-finite quarantine guard, benign schedules bitwise no-ops).
+    """
+    A, R, N = cfg.n_agents, cfg.n_rsus, spec.n
+    spe = max(int(fed.x.shape[1]) // cfg.batch, 1)
+    n_steps = hp.local_epochs * spe
+    plan = make_chunk_plan(A, chunk_agents)
+    tiles = make_ntile_plan(N, chunk_params)
+    Np = tiles.n_padded
+    chunks = _data_chunks(fed, plan)
+    n_per_agent = jnp.asarray(np.asarray(fed.n_per_agent), jnp.float32)
+    rsu_assign_np = np.asarray(fed.rsu_assign, np.int32)
+    guard = faults is not None and faults.guard_nonfinite
+
+    train_agents = jax.vmap(
+        lambda x, y, w0, wr, wc, act: _local_train_flat(
+            loss_fn, spec, x, y, w0, wr, wc, hp, n_steps, act, cfg.batch),
+        in_axes=(0, 0, 0, 0, None, 0))
+
+    draws_fn = _make_flat_draws_fn(cfg, hp, het, plan, n_per_agent, spe)
+
+    @jax.jit
+    def chunk_train(w_start, cloud_dev, x_c, y_c, act_c, w_c):
+        """Train one agent chunk full-N from its h2d'd RSU rows; the
+        non-finite quarantine gate matches the one-axis chunk_step."""
+        stored = spec.to_storage(
+            train_agents(x_c, y_c, w_start, w_start, cloud_dev, act_c))
+        nq = jnp.zeros((), jnp.int32)
+        if guard:
+            ok = jnp.all(jnp.isfinite(stored.astype(jnp.float32)), axis=1)
+            stored = jnp.where(ok[:, None], stored, w_start)
+            nq = jnp.sum(((w_c > 0) & ~ok).astype(jnp.int32))
+            w_c = w_c * ok.astype(jnp.float32)
+        return stored, w_c, nq
+
+    @jax.jit
+    def tile_agg(stored_t, w_c, assign_c):
+        """One (chunk, tile) slice's partial aggregation — the only
+        aggregation buffer the device sees is (R, tile)."""
+        return ops.chunk_agg(stored_t, w_c, assign_c, R)
+
+    @jax.jit
+    def rsu_update(num_t, mass_acc, rsu_t):
+        return normalize_blend(num_t, mass_acc, rsu_t)
+
+    @jax.jit
+    def cloud_update(rsu_t, total_mass, cloud_t):
+        return ops.cloud_blend(rsu_t, total_mass, cloud_t)
+
+    def put_chunk(c: int, rsu_host):
+        x, y, a = chunks[c]
+        # host-side gather of the chunk's RSU start rows (padded tail
+        # rows read RSU 0 at weight 0 — algebra-neutral, like jnp.take)
+        return jax.device_put((x, y, a, rsu_host[a]))
+
+    def global_round(state: StreamSimState, fault_r=None):
+        store = state.store
+        rsu_host, cloud_host = state.rsu_flat, state.cloud_flat
+        conn, rng, weights, steps = draws_fn(state.conn, state.rng)
+        if faults is not None:
+            weights = weights * _fault_weight_fold(fault_r, rsu_assign_np,
+                                                   plan.pad)
+        # Alg. 2 line 2: host RSU rows re-anchor to the cloud master
+        rsu_host = np.empty_like(rsu_host)
+        rsu_host[:] = cloud_host.astype(rsu_host.dtype)
+        cloud_dev = jnp.asarray(cloud_host)          # full-N, training ref
+        total_mass = jnp.zeros((R,), jnp.float32)
+        n_quar = jnp.zeros((), jnp.int32)
+        for l in range(hp.lar):
+            num_host = np.zeros((R, Np), np.float32)
+            mass_acc = jnp.zeros((R,), jnp.float32)
+            nxt, wb = put_chunk(0, rsu_host), None
+            for c in range(plan.n_chunks):
+                lo, valid = plan.bounds(c)
+                cur = nxt
+                if c + 1 < plan.n_chunks:
+                    nxt = put_chunk(c + 1, rsu_host)
+                sl = slice(c * plan.chunk, (c + 1) * plan.chunk)
+                x_c, y_c, a_c, w_start = cur
+                stored, w_eff, nq = chunk_train(
+                    w_start, cloud_dev, x_c, y_c, steps[l, sl],
+                    weights[l, sl])
+                n_quar = n_quar + nq
+                # tile-by-tile d2h accumulation: the (R, N) numerator
+                # lives on HOST; mass is column-independent (tile 0 only)
+                for t in range(tiles.n_tiles):
+                    tlo, thi = tiles.bounds(t)
+                    num_t, mass_t = tile_agg(stored[:, tlo:thi], w_eff,
+                                             a_c)
+                    if t == 0:
+                        mass_acc = mass_acc + mass_t
+                    num_host[:, tlo:thi] += np.asarray(num_t)
+                if wb is not None:
+                    store.scatter(*wb)
+                wb = (lo, stored if valid == plan.chunk
+                      else stored[:valid])
+            if wb is not None:
+                store.scatter(*wb)
+            # close the local round per tile: (R, tile) up, blended down,
+            # defer-by-one reads so d2h overlaps the next tile's dispatch
+            pend = None
+            for t in range(tiles.n_tiles):
+                tlo, thi = tiles.bounds(t)
+                new_t = rsu_update(jnp.asarray(num_host[:, tlo:thi]),
+                                   mass_acc,
+                                   jnp.asarray(rsu_host[:, tlo:thi]))
+                if pend is not None:
+                    plo, phi, arr = pend
+                    rsu_host[:, plo:phi] = np.asarray(arr)
+                pend = (tlo, thi, new_t)
+            plo, phi, arr = pend
+            rsu_host[:, plo:phi] = np.asarray(arr)
+            total_mass = total_mass + mass_acc
+        # Alg. 3 line 6: cloud blend, tile by tile
+        cloud_host = cloud_host.copy()
+        pend = None
+        for t in range(tiles.n_tiles):
+            tlo, thi = tiles.bounds(t)
+            new_c = cloud_update(jnp.asarray(rsu_host[:, tlo:thi]),
+                                 total_mass,
+                                 jnp.asarray(cloud_host[tlo:thi]))
+            if pend is not None:
+                plo, phi, arr = pend
+                cloud_host[plo:phi] = np.asarray(arr)
+            pend = (tlo, thi, new_c)
+        plo, phi, arr = pend
+        cloud_host[plo:phi] = np.asarray(arr)
+        out = StreamSimState(store=store, rsu_flat=rsu_host,
+                             cloud_flat=cloud_host, conn=conn, rng=rng)
+        if faults is not None:
+            return out, {"quarantined": n_quar}
+        return out
+
+    global_round.plan = plan
+    global_round.tiles = tiles
+    global_round.chunk_train = chunk_train
+    global_round.tile_agg = tile_agg
+    return global_round
+
+
+# --------------------------------------------------------------------------
 # runner
 # --------------------------------------------------------------------------
 
@@ -638,6 +878,7 @@ def run_streamed_simulation(cfg: SimConfig, hp: H2FedParams,
                             acfg: Optional[AsyncConfig] = None,
                             fleet_store: str = "host",
                             chunk_agents: int = 0,
+                            chunk_params: int = 0,
                             x_test=None, y_test=None,
                             loss_fn: Callable = mlp.loss_fn,
                             eval_fn: Optional[Callable] = None,
@@ -655,6 +896,10 @@ def run_streamed_simulation(cfg: SimConfig, hp: H2FedParams,
         raise ValueError(f"engine {engine!r} does not stream "
                          f"(want 'flat'|'async'; tree/sharded are "
                          f"device-resident only)")
+    if chunk_params and engine != "flat":
+        raise ValueError(f"chunk_params={chunk_params} (two-axis "
+                         f"streaming) is flat-engine only, got "
+                         f"engine {engine!r}")
     spec = flatten.spec_of(
         init_params,
         storage_dtype=flatten.resolve_storage_dtype(fleet_dtype))
@@ -663,9 +908,17 @@ def run_streamed_simulation(cfg: SimConfig, hp: H2FedParams,
         x_test, y_test = jnp.asarray(x_test), jnp.asarray(y_test)
         eval_fn = jax.jit(lambda p: mlp.accuracy(p, x_test, y_test))
 
-    if engine == "flat":
-        state: Any = init_stream_state(cfg, spec, init_params, key,
-                                       fleet_store=fleet_store)
+    if engine == "flat" and chunk_params > 0:
+        tiles = make_ntile_plan(spec.n, chunk_params)
+        state: Any = init_twoaxis_state(cfg, spec, init_params, key, tiles)
+        round_fn = make_streamed_twoaxis_round(cfg, hp, het, fed, spec,
+                                               loss_fn,
+                                               chunk_agents=chunk_agents,
+                                               chunk_params=chunk_params,
+                                               faults=faults)
+    elif engine == "flat":
+        state = init_stream_state(cfg, spec, init_params, key,
+                                  fleet_store=fleet_store)
         round_fn = make_streamed_flat_round(cfg, hp, het, fed, spec,
                                             loss_fn,
                                             chunk_agents=chunk_agents,
@@ -726,6 +979,7 @@ def _run_streamed(res, init_params: PyTree, *,
     return run_streamed_simulation(
         res.cfg, s.hp, s.het, res.fed, init_params, s.rounds,
         engine=s.engine, acfg=acfg, fleet_store=s.fleet_store,
-        chunk_agents=s.chunk_agents, x_test=x_test, y_test=y_test,
+        chunk_agents=s.chunk_agents, chunk_params=s.chunk_params,
+        x_test=x_test, y_test=y_test,
         loss_fn=loss_fn, eval_fn=eval_fn, fleet_dtype=s.fleet_dtype,
         faults=s.faults)

@@ -110,7 +110,10 @@ def run_scenario(res, init_params: Optional[PyTree] = None, *,
         program_cache.enable_persistent_cache()
     if init_params is None:
         from repro.configs.mnist_mlp import CONFIG
-        init_params = mlp.init_params(CONFIG, jax.random.key(s.seed))
+        cfg_model = (CONFIG if not s.hidden_dims else
+                     dataclasses.replace(
+                         CONFIG, hidden_dims=tuple(s.hidden_dims)))
+        init_params = mlp.init_params(cfg_model, jax.random.key(s.seed))
     if s.serve_events:
         from repro.fedsim import serving
         return serving._run_serve(res, init_params, loss_fn=loss_fn,
@@ -133,8 +136,9 @@ def run_scenario(res, init_params: Optional[PyTree] = None, *,
 def adhoc_scenario(cfg, hp, het, fed, *, n_rounds: int,
                    engine: str = "flat", fleet_dtype=None,
                    fused: bool = True, rsu_sharded: bool = False,
-                   async_cfg=None, fleet_store: str = "device",
-                   chunk_agents: int = 0, x_test=None,
+                   model_shards: int = 1, async_cfg=None,
+                   fleet_store: str = "device", chunk_agents: int = 0,
+                   chunk_params: int = 0, hidden_dims=(), x_test=None,
                    y_test=None) -> ResolvedScenario:
     """Wrap pre-built arrays (SimConfig + FederatedData + optional test
     set) in the scenario contract so ``run_scenario`` can drive them —
@@ -154,9 +158,11 @@ def adhoc_scenario(cfg, hp, het, fed, *, n_rounds: int,
     spec = ScenarioSpec(
         n_agents=cfg.n_agents, n_rsus=cfg.n_rsus, batch=cfg.batch,
         hp=hp, het=het, engine=engine, fleet_dtype=dtype_name, fused=fused,
-        rsu_sharded=rsu_sharded, fleet_store=fleet_store,
-        chunk_agents=chunk_agents, rounds=n_rounds,
-        eval_every=cfg.eval_every, seed=0, sim_seed=cfg.seed, **async_kw)
+        rsu_sharded=rsu_sharded, model_shards=model_shards,
+        fleet_store=fleet_store, chunk_agents=chunk_agents,
+        chunk_params=chunk_params, hidden_dims=tuple(hidden_dims),
+        rounds=n_rounds, eval_every=cfg.eval_every, seed=0,
+        sim_seed=cfg.seed, **async_kw)
     test = None
     if x_test is not None:
         from repro.data.synthetic import Dataset

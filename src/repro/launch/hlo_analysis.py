@@ -503,6 +503,58 @@ def groups_within(groups: Optional[List[List[int]]],
     return True
 
 
+def collective_axes(groups: Optional[List[List[int]]],
+                    mesh_axes: List[Tuple[str, int]]) -> List[str]:
+    """Which mesh axes a collective's replica groups SPAN.
+
+    ``mesh_axes`` is the ordered (name, size) mesh spec — callers pass
+    ``list(zip(mesh.axis_names, mesh.devices.shape))``; device ids in SPMD
+    replica groups are row-major over that shape (how our meshes are
+    built: launch/mesh make_mesh / mesh_utils in device order).  An axis
+    is spanned when some group holds two devices with different
+    coordinates on it — the devices the collective moves bytes BETWEEN
+    differ along that axis.  ``groups=None`` (one group of all devices)
+    spans every non-trivial axis.
+    """
+    import numpy as np
+    sizes = [s for _, s in mesh_axes]
+    if groups is None:
+        return [name for name, s in mesh_axes if s > 1]
+    coords = {}
+    for g in groups:
+        for d in g:
+            if d not in coords:
+                coords[d] = np.unravel_index(d, sizes)
+    spanned = []
+    for i, (name, _) in enumerate(mesh_axes):
+        if any(len({coords[d][i] for d in g}) > 1 for g in groups):
+            spanned.append(name)
+    return spanned
+
+
+def collective_axis_bytes(text: str, mesh_axes: List[Tuple[str, int]]
+                          ) -> Dict:
+    """``collective_schedule`` with every entry attributed to the mesh
+    axes it spans, plus a per-axis bytes rollup — the DCI-vs-ICI split of
+    a round program on a (pod, data, model) mesh: bytes spanning ``pod``
+    travel the cross-pod DCI links, ``data``/``model`` bytes stay on
+    intra-pod ICI (ROADMAP TPU-validation item; DESIGN.md §12).
+
+    Returns ``{"entries": [...schedule + "axes" key...],
+    "per_axis": {axis: bytes}}``.  A collective spanning several axes is
+    charged to EACH (it rides every link class it crosses), so per-axis
+    numbers are link-class loads, not a partition of total bytes.
+    """
+    entries = []
+    per_axis = {name: 0.0 for name, _ in mesh_axes}
+    for e in collective_schedule(text):
+        axes = collective_axes(e["groups"], mesh_axes)
+        for a in axes:
+            per_axis[a] += e["bytes"]
+        entries.append({**e, "axes": axes})
+    return {"entries": entries, "per_axis": per_axis}
+
+
 _ALIAS_PAIR_RE = re.compile(r"\{([0-9 ,]*)\}:\s*\((\d+)")
 
 

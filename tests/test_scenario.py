@@ -28,6 +28,7 @@ PERTURB = {
     "engine": "async", "fleet_dtype": "bfloat16", "fused": False,
     "rsu_sharded": True,
     "fleet_store": "host", "chunk_agents": 64,
+    "chunk_params": 1 << 18, "model_shards": 2, "hidden_dims": (64,),
     "staleness_decay": 0.9, "schedule": "poly", "buffer_keep": 0.5,
     "cloud_every": 3,
     "serve_events": 64, "arrival_rate": 2.0,

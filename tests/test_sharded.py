@@ -106,6 +106,47 @@ print("collectives-ok", len(colls), "total,", len(out_cross), "cloud-crossing")
 """
 
 
+NSHARD_EQUIV_CODE = """
+import jax, numpy as np
+from repro.core.scenario import ScenarioSpec
+from repro.fedsim import run_scenario
+
+assert len(jax.devices()) == {devices}, len(jax.devices())
+BASE = ScenarioSpec(n_agents=16, n_rsus=4, batch=8, n_train=400,
+                    n_test=100, rounds=2, engine="sharded")
+
+# acceptance grid: N-sharded == replicated across (rsu_sharded x shards);
+# fp32 fleets are EXACT in replicated mode (collective-free cloud math),
+# fp32-tol when the cloud layer psums across pods
+for rsu_sharded in (False, True):
+    ref, h_ref = run_scenario(BASE.replace(rsu_sharded=rsu_sharded))
+    n = ref.cloud_flat.shape[0]
+    for shards in {shard_counts}:
+        st, h = run_scenario(BASE.replace(rsu_sharded=rsu_sharded,
+                                          model_shards=shards))
+        # model_shards=1 is the UNTOUCHED dispatch -> bit-identical;
+        # replicated nshard is collective-free in the cloud -> exact too
+        tol = 0.0 if (shards == 1 or not rsu_sharded) else 1e-5
+        np.testing.assert_allclose(np.asarray(st.cloud_flat)[:n],
+                                   np.asarray(ref.cloud_flat),
+                                   rtol=0, atol=tol)
+        np.testing.assert_allclose(h["acc"], h_ref["acc"], atol=1e-3)
+        # the padded tail never leaks mass: zero from init through blends
+        assert not np.asarray(st.cloud_flat)[n:].any()
+        print("rsu_sharded", rsu_sharded, "shards", shards, "equiv-ok")
+
+# bf16 storage: the round's reference all-gather travels in the fleet
+# storage dtype, so the nshard round matches replicated to bf16 tolerance
+ref_b, h_refb = run_scenario(BASE.replace(fleet_dtype="bf16"))
+st_b, h_b = run_scenario(BASE.replace(fleet_dtype="bf16", model_shards=2))
+n = ref_b.cloud_flat.shape[0]
+np.testing.assert_allclose(np.asarray(st_b.cloud_flat)[:n],
+                           np.asarray(ref_b.cloud_flat), rtol=0, atol=2e-2)
+np.testing.assert_allclose(h_b["acc"], h_refb["acc"], atol=5e-2)
+print("bf16 equiv-ok")
+"""
+
+
 @pytest.fixture(scope="module")
 def small_fed(tiny_task, fed_small):
     from repro.configs.mnist_mlp import CONFIG as MLP_CFG
@@ -168,6 +209,49 @@ class TestTopology:
         np.testing.assert_array_equal(topo.agent_perm, np.arange(8))
         np.testing.assert_array_equal(topo.local_assign, topo.rsu_assign)
         assert topo.rsu_spec == P()
+
+    def test_model_axis_surface(self):
+        """N-sharding surface (DESIGN.md §12): the model axis is read off
+        the mesh, excluded from agent sharding, and the nshard specs lay
+        the cloud/RSU buffers out 1/shards per device."""
+        from jax.sharding import PartitionSpec as P
+        from repro.core.topology import HierarchyTopology
+        topo = HierarchyTopology(8, 4, _DuckMesh((2, 2, 2),
+                                                 ("pod", "data", "model")))
+        assert topo.model_axis == "model" and topo.model_shards == 2
+        # agent rows shard over (pod, data) only — 4 shards, not 8
+        assert topo.n_shards == 4
+        assert topo.nshard_cloud_spec == P("model")
+        assert topo.nshard_rsu_spec == P(None, "model")
+        rs = HierarchyTopology(8, 4, _DuckMesh((2, 2, 2),
+                                               ("pod", "data", "model")),
+                               rsu_sharded=True)
+        assert rs.nshard_rsu_spec == P("pod", "model")
+        # no model axis: the nshard specs collapse to the replicated ones
+        flat = HierarchyTopology(8, 4, _DuckMesh((2, 2), ("pod", "data")))
+        assert flat.model_axis is None and flat.model_shards == 1
+        assert flat.nshard_cloud_spec == flat.cloud_spec
+
+    def test_model_pad(self):
+        """model_pad rounds N up so every shard is lane-aligned (128);
+        identity at model_shards == 1."""
+        from repro.core.topology import HierarchyTopology
+        topo = HierarchyTopology(8, 4, _DuckMesh((2, 2, 2),
+                                                 ("pod", "data", "model")))
+        assert topo.model_pad(31810) == 32000          # 2 * 125 * 128
+        assert topo.model_pad(256) == 256
+        assert topo.model_pad(1) == 256
+        flat = HierarchyTopology(8, 4, _DuckMesh((2, 2), ("pod", "data")))
+        assert flat.model_pad(31810) == 31810
+
+    def test_fleet_mesh_model_shards(self):
+        """make_fleet_mesh grows the model axis behind n_model_shards and
+        rejects counts that do not divide the devices."""
+        from repro.fedsim.sharded import make_fleet_mesh, n_shards
+        m = make_fleet_mesh(1, n_model_shards=1)
+        assert m.axis_names == ("data",)
+        with pytest.raises(ValueError, match="must divide the device"):
+            make_fleet_mesh(4, n_model_shards=3)
 
     def test_spmd_flavor_from_mesh(self):
         """launch/h2fed_round's mapping: one agent per (pod, data)
@@ -299,6 +383,21 @@ class TestMultiDevice:
         for pods in (1, 2, 4):
             assert f"pods {pods} equiv-ok" in out
         assert "collectives-ok" in out
+
+    def test_nshard_equivalence_grid_8_devices(self, forced_devices_run):
+        """The PR-10 acceptance grid: N-sharded == replicated across
+        (rsu_sharded x model_shards) on a (2,2,2) mesh, exact for fp32
+        replicated cells, fp32-tol where the cloud layer psums, bf16-tol
+        under bf16 storage; model_shards=1 stays bit-identical and the
+        pad-to-lane tail carries no mass (ragged N=31810 -> 32000)."""
+        out = forced_devices_run(
+            NSHARD_EQUIV_CODE.format(devices=8, shard_counts=(1, 2)),
+            devices=8, timeout=900)
+        for rsu_sharded in (False, True):
+            for shards in (1, 2):
+                assert (f"rsu_sharded {rsu_sharded} shards {shards} "
+                        f"equiv-ok" in out)
+        assert "bf16 equiv-ok" in out
 
     def test_rsu_sharded_16_devices_2d(self, forced_devices_run):
         """16-forced-host-device 2-D mesh: the 4x4 ('pod','data') layout

@@ -123,6 +123,93 @@ class TestStreamedFlat:
         assert np.isfinite(h["acc"]).all()
 
 
+class TestNTilePlan:
+    def test_lane_aligned_tiles(self):
+        from repro.fedsim.streaming import make_ntile_plan
+        t = make_ntile_plan(1000, 256)
+        assert (t.tile, t.n_tiles, t.pad) == (256, 4, 24)
+        assert t.n_padded == 1024
+        assert t.bounds(3) == (768, 1024)
+        # requested tile rounds UP to the 128-lane grid
+        assert make_ntile_plan(1000, 100).tile == 128
+        # chunk_params=0 -> ONE lane-padded tile covering all of N
+        one = make_ntile_plan(1000, 0)
+        assert (one.tile, one.n_tiles) == (1024, 1)
+
+    def test_column_ranged_stores(self):
+        """FleetStore gather/scatter column windows — the two-axis
+        engine's N-tile I/O (DESIGN.md §12)."""
+        from repro.core.fleet_store import make_fleet_store
+        for kind in ("device", "host"):
+            store = make_fleet_store(
+                kind, jnp.arange(8, dtype=jnp.float32), 4, jnp.float32)
+            np.testing.assert_array_equal(
+                np.asarray(store.gather(1, 3, col_lo=2, col_hi=5)),
+                np.tile(np.arange(2.0, 5.0, dtype=np.float32), (2, 1)))
+            store.scatter(1, jnp.full((2, 3), 9.0), col_lo=2)
+            snap = np.asarray(store.snapshot())
+            assert (snap[1:3, 2:5] == 9.0).all()
+            assert (snap[0] == np.arange(8)).all()       # rows untouched
+            assert (snap[1:3, :2] == [0, 1]).all()       # cols untouched
+
+
+class TestStreamedTwoAxis:
+    def test_matches_one_axis_bitwise(self):
+        """N-tiling must be invisible: per-column independence of the
+        aggregation algebra makes the two-axis round bitwise equal to the
+        one-axis streamed round on the first N columns."""
+        one, h1 = run_scenario(BASE.replace(fleet_store="host",
+                                            chunk_agents=5))
+        two, h2 = run_scenario(BASE.replace(fleet_store="host",
+                                            chunk_agents=5,
+                                            chunk_params=4096))
+        n = one.cloud_flat.shape[0]
+        np.testing.assert_array_equal(h1["acc"], h2["acc"])
+        np.testing.assert_array_equal(np.asarray(one.cloud_flat),
+                                      np.asarray(two.cloud_flat)[:n])
+        np.testing.assert_array_equal(np.asarray(one.rsu_flat),
+                                      np.asarray(two.rsu_flat)[:, :n])
+        np.testing.assert_array_equal(
+            np.asarray(one.store.snapshot()),
+            np.asarray(two.store.snapshot())[:, :n])
+        # the padded tail carries nothing through the round
+        assert not np.asarray(two.cloud_flat)[n:].any()
+
+    def test_bf16_two_axis(self):
+        st, h = run_scenario(BASE.replace(fleet_store="host",
+                                          chunk_agents=5,
+                                          chunk_params=4096,
+                                          fleet_dtype="bf16"))
+        import ml_dtypes
+        assert st.store.dtype == jnp.dtype(jnp.bfloat16)
+        assert st.rsu_flat.dtype == np.dtype(ml_dtypes.bfloat16)
+        assert st.cloud_flat.dtype == np.float32     # fp32 cloud master
+        assert np.isfinite(h["acc"]).all()
+
+    def test_zero_fault_anchor(self):
+        """A benign FaultPlan folds as *1.0 weights + an all-finite guard
+        pass: bitwise no-op vs the fault-free two-axis round."""
+        from repro.core.faults import FaultPlan
+        spec = BASE.replace(fleet_store="host", chunk_agents=5,
+                            chunk_params=4096)
+        clean, hc = run_scenario(spec)
+        faulted, hf = run_scenario(spec.replace(faults=FaultPlan()))
+        np.testing.assert_array_equal(np.asarray(clean.cloud_flat),
+                                      np.asarray(faulted.cloud_flat))
+        np.testing.assert_array_equal(hc["acc"], hf["acc"])
+        assert (hf["quarantined"] == 0).all()
+
+    def test_chunk_params_needs_flat_host(self):
+        import pytest
+        from repro.core.scenario import ScenarioSpec
+        with pytest.raises(AssertionError, match="two-axis streaming"):
+            ScenarioSpec(n_agents=8, n_rsus=2, rounds=1,
+                         chunk_params=4096).validate()
+        with pytest.raises(AssertionError, match="N-sharded fleet"):
+            ScenarioSpec(n_agents=8, n_rsus=2, rounds=1,
+                         model_shards=2).validate()
+
+
 class TestStreamedAsync:
     def test_host_streamed_matches_resident(self):
         st_res, h_res = run_scenario(ASYNC.resolve())
